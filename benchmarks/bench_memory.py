@@ -1,0 +1,47 @@
+"""Paper Fig 3: per-machine memory vs number of machines.
+
+Model-parallel STRADS LDA shards the (padded-vocab × topics) word-topic
+table: per-machine bytes *shrink* as machines are added.  The
+YahooLDA-style data-parallel baseline replicates the full table on every
+machine: per-machine bytes are flat (and the biggest model that fits is
+set by the smallest machine).  We compute both from the *actual state
+templates* of the two apps (the same arrays the engine shards/replicates),
+which is exactly what the paper plots."""
+from __future__ import annotations
+
+from repro.apps import lda
+
+from .common import save
+
+
+def bytes_per_machine(cfg: "lda.LDAConfig", baseline: bool) -> int:
+    """Word-topic table bytes resident per machine (f32)."""
+    Vp, K, U = cfg.padded_vocab, cfg.num_topics, cfg.num_workers
+    table = Vp * K * 4
+    doc = cfg.docs_per_worker * K * 4          # doc-topic rows (both shard)
+    if baseline:
+        return table + doc                     # replicated table
+    return table // U + doc                    # model-parallel shard
+
+
+def run(quick: bool = True):
+    vocab, topics = (20000, 64) if quick else (200000, 128)
+    out = {"vocab": vocab, "topics": topics, "machines": [],
+           "strads_mb": [], "baseline_mb": []}
+    for U in (1, 2, 4, 8, 16, 32, 64, 128):
+        cfg = lda.LDAConfig(num_workers=U, vocab=vocab, num_topics=topics,
+                            tokens_per_worker=1000, docs_per_worker=50)
+        out["machines"].append(U)
+        out["strads_mb"].append(
+            round(bytes_per_machine(cfg, False) / 2**20, 3))
+        out["baseline_mb"].append(
+            round(bytes_per_machine(cfg, True) / 2**20, 3))
+    save("bench_memory", out)
+    return out
+
+
+def rows(out):
+    for u, s, b in zip(out["machines"], out["strads_mb"],
+                       out["baseline_mb"]):
+        yield (f"memory/U{u}/strads_mb", 0.0, s)
+        yield (f"memory/U{u}/yahoolda_mb", 0.0, b)

@@ -1,0 +1,109 @@
+"""Render the dry-run roofline results (benchmarks/results/dryrun/*.json)
+as the §Dry-run / §Roofline markdown tables for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from .common import RESULTS
+
+DRYRUN = os.path.join(RESULTS, "dryrun")
+
+
+def load(tag: Optional[str] = None) -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        r = json.load(open(f))
+        rtag = r.get("tag", "baseline")
+        if tag is not None and rtag != tag:
+            continue
+        rows.append(r)
+    return rows
+
+
+def _fmt_ms(s: float) -> str:
+    return f"{s*1e3:.2f}"
+
+
+def roofline_table(mesh: str = "single", tag: str = "baseline") -> str:
+    """§Roofline markdown table (single-pod per spec)."""
+    lines = [
+        "| arch | shape | T_comp (ms) | T_mem (ms) | T_coll (ms) | "
+        "dominant | model GFLOPs | useful/HLO | mem/dev (GiB) |",
+        "|---|---|---:|---:|---:|---|---:|---:|---:|",
+    ]
+    for r in load(tag):
+        if r["mesh"] != mesh:
+            continue
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped: {r['skipped']} | — | — | — |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR |||||||")
+            continue
+        rl = r["roofline"]
+        mem = r["memory"].get("total_per_device", 0) / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_ms(rl['t_compute'])} | "
+            f"{_fmt_ms(rl['t_memory'])} | {_fmt_ms(rl['t_collective'])} | "
+            f"**{rl['dominant']}** | {r['model_flops']/1e9:.0f} | "
+            f"{r['useful_flops_ratio']:.3f} | {mem:.2f} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(tag: str = "baseline") -> str:
+    """§Dry-run markdown table: both meshes, compile stats + collectives."""
+    lines = [
+        "| arch | shape | mesh | chips | lower (s) | compile (s) | "
+        "mem/dev (GiB) | wire GB/chip | #coll | top collectives |",
+        "|---|---|---|---:|---:|---:|---:|---:|---:|---|",
+    ]
+    for r in load(tag):
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"{r['chips']} | — | — | — | — | — | skipped |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                         f"| {r['chips']} | ERROR ||||||")
+            continue
+        ana = r.get("hlo_analysis", {})
+        by = sorted(ana.get("by_kind", {}).items(), key=lambda kv: -kv[1])
+        top = ", ".join(f"{k}:{v/1e9:.2f}GB" for k, v in by[:2]) or "none"
+        mem = r["memory"].get("total_per_device", 0) / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chips']} | "
+            f"{r['lower_s']} | {r['compile_s']} | {mem:.2f} | "
+            f"{ana.get('wire_bytes', 0)/1e9:.2f} | "
+            f"{ana.get('collective_count', 0)} | {top} |")
+    return "\n".join(lines)
+
+
+def worst_pairs(mesh: str = "single", n: int = 5) -> List[Dict]:
+    """Pairs ranked by useful/HLO-FLOPs ratio (ascending = worst) and by
+    collective dominance — the §Perf candidate shortlist."""
+    rows = [r for r in load("baseline")
+            if r["mesh"] == mesh and "roofline" in r]
+    by_ratio = sorted(rows, key=lambda r: r["useful_flops_ratio"])[:n]
+    coll = [r for r in rows if r["roofline"]["dominant"] == "collective"]
+    coll = sorted(coll, key=lambda r: -(r["roofline"]["t_collective"]
+                                        / max(r["roofline"]["t_compute"],
+                                              1e-12)))[:n]
+    return {"worst_ratio": [(r["arch"], r["shape"]) for r in by_ratio],
+            "most_collective_bound": [(r["arch"], r["shape"])
+                                      for r in coll]}
+
+
+def main():
+    print("## Dry-run\n")
+    print(dryrun_table())
+    print("\n## Roofline (single pod)\n")
+    print(roofline_table())
+    print("\nCandidates:", json.dumps(worst_pairs(), indent=1))
+
+
+if __name__ == "__main__":
+    main()

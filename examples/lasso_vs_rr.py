@@ -1,0 +1,66 @@
+"""Paper §3.3 + Fig 8/9 (right): scheduling on *correlated* Lasso designs.
+
+With 65 % of adjacent feature pairs strongly correlated, naive parallel
+CD over contiguous blocks (cyclic) **diverges** — the objective explodes
+by orders of magnitude, exactly the failure mode Bradley et al. [2011]
+identified and the reason STRADS filters co-scheduled coordinates by
+|x_jᵀx_k| < ρ.  Random scheduling (Lasso-RR) avoids the worst case by
+luck; the STRADS dynamic schedule is *guaranteed* stable by the ρ-filter
+and prioritizes fast-converging coefficients on top.
+
+    PYTHONPATH=src python examples/lasso_vs_rr.py [--rounds 200]
+"""
+import argparse
+import math
+
+import numpy as np
+
+from repro.apps import lasso
+from repro.core import single_device_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--features", type=int, default=400)
+    ap.add_argument("--corr", type=float, default=0.35,
+                    help="P(fresh noise); lower = more correlated design")
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(1)
+    X, y, _ = lasso.synthetic_correlated(rng, n=200, J=args.features,
+                                         corr=args.corr, k_true=20)
+    mesh = single_device_mesh()
+
+    results = {}
+    print(f"{'scheduler':12s} {'U':>4s} {'final objective':>18s} "
+          f"{'nnz(beta)':>10s}")
+    for scheduler in ("strads", "rr", "cyclic"):
+        for U in (8, 32):
+            cfg = lasso.LassoConfig(
+                num_features=args.features, lam=0.05, block_size=U,
+                num_candidates=4 * U, rho=0.3, scheduler=scheduler)
+            state, trace = lasso.fit(cfg, X, y, mesh,
+                                     num_rounds=args.rounds,
+                                     trace_every=args.rounds - 1)
+            obj = trace[-1][1]
+            beta = np.asarray(state["beta"])
+            results[(scheduler, U)] = obj
+            print(f"{scheduler:12s} {U:4d} {obj:18.4g} "
+                  f"{int((np.abs(beta) > 1e-6).sum()):10d}")
+
+    diverged = [k for k, v in results.items()
+                if not math.isfinite(v) or v > 1e3]
+    print(f"\ndiverged runs: {diverged or 'none'}")
+    assert all("strads" != k[0] for k in diverged), \
+        "the rho-filtered schedule must never diverge"
+    assert any(k[0] == "cyclic" for k in diverged), \
+        "naive contiguous parallel CD should diverge on this design"
+    print("cyclic parallel CD diverges on the correlated design; the "
+          "STRADS ρ-filter keeps every run stable — the paper's safety "
+          "claim. (Lasso-RR survives by luck; on adversarial designs it "
+          "diverges too — see tests/test_lasso.py.)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Quickstart: the STRADS primitives in ~60 lines.
+
+Solves a small correlated Lasso with the paper's dynamic schedule
+(priority ∝ |Δβ| + η, ρ-dependency filter), then shows the same app
+with the filter disabled (the Lasso-RR / Shotgun baseline) failing to
+match it — the paper's Fig 9 (right) in miniature.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.apps import lasso
+from repro.core import single_device_mesh
+
+
+def main():
+    rng = np.random.default_rng(0)
+    # correlated design (adjacent features ~0.9-correlated): the regime
+    # where naive parallel CD diverges [Bradley et al. 2011]
+    X, y, beta_star = lasso.synthetic_correlated(rng, n=150, J=300,
+                                                 corr=0.9, k_true=12)
+    mesh = single_device_mesh()
+
+    base = dict(num_features=300, lam=0.05, block_size=16,
+                num_candidates=64, rho=0.3)
+    results = {}
+    for name, scheduler in (("STRADS (dynamic)", "strads"),
+                            ("Lasso-RR (random)", "rr")):
+        cfg = lasso.LassoConfig(scheduler=scheduler, **base)
+        state, trace = lasso.fit(cfg, X, y, mesh, num_rounds=120,
+                                 trace_every=20)
+        results[name] = trace
+        print(f"\n{name}")
+        for t, obj in trace:
+            print(f"  round {t:4d}   objective {obj:10.4f}")
+
+    s_final = results["STRADS (dynamic)"][-1][1]
+    r_final = results["Lasso-RR (random)"][-1][1]
+    print(f"\nfinal objective — STRADS {s_final:.4f}  vs  RR {r_final:.4f}")
+    assert s_final <= r_final + 1e-6, "dynamic schedule should win"
+    print("dynamic scheduling converged faster, as in paper Fig 9 (right)")
+
+
+if __name__ == "__main__":
+    main()

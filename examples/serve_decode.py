@@ -1,0 +1,24 @@
+"""Serving example: batched prefill + autoregressive decode for three
+architecture families — attention (ring-buffer KV cache), hybrid
+SSM+shared-attention (recurrent state + windowed cache), and xLSTM
+(pure recurrent state, no KV cache at all).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch import serve as serve_launcher
+
+
+def main():
+    for arch, extra in (
+        ("granite-3-2b", ["--window", "48"]),   # sliding-window ring buffer
+        ("zamba2-2.7b", []),                    # Mamba2 + shared attention
+        ("xlstm-125m", []),                     # recurrent state only
+    ):
+        print(f"\n=== {arch} ===")
+        serve_launcher.main(["--arch", arch, "--preset", "reduced",
+                             "--batch", "2", "--prompt-len", "48",
+                             "--gen", "16"] + extra)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""End-to-end training example: train a ~20M-param reduced MiniCPM on the
+synthetic pipeline for a few hundred steps, with the WSD schedule the
+MiniCPM paper uses, then do the same with STRADS block-coordinate
+scheduling and compare trajectories.
+
+    PYTHONPATH=src python examples/train_transformer.py [--steps 200]
+
+(The launcher this wraps — repro.launch.train — drives the same pjit
+train_step the 256/512-chip dry-run lowers; on TPU pods the only change
+is the mesh.)
+"""
+import argparse
+
+from repro.launch import train as train_launcher
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="minicpm-2b")
+    args = ap.parse_args()
+
+    common = ["--arch", args.arch, "--preset", "reduced",
+              "--steps", str(args.steps), "--batch", "8", "--seq", "128",
+              "--log-every", str(max(args.steps // 10, 1))]
+
+    print("=== dense AdamW training (all blocks every step) ===")
+    hist = train_launcher.main(common)
+    full_first, full_last = hist[0]["loss"], hist[-1]["loss"]
+
+    print("\n=== STRADS block-coordinate training (schedule/push/pull) ===")
+    hist2 = train_launcher.main(common + ["--strads"])
+    s_first, s_last = hist2[0]["loss"], hist2[-1]["loss"]
+
+    print(f"\nloss: dense {full_first:.3f}→{full_last:.3f}   "
+          f"STRADS-blocks {s_first:.3f}→{s_last:.3f}")
+    assert full_last < full_first and s_last < s_first
+    print("both trainers converge; the STRADS variant updates only the "
+          "scheduled blocks per step (≈half the optimizer work).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""The paper's three STRADS applications + their baselines.
+
+* :mod:`repro.apps.lasso` — STRADS Lasso (dynamic priority + ρ-dependency
+  filter) and Lasso-RR (Shotgun-style random scheduling baseline).
+* :mod:`repro.apps.mf`    — STRADS Matrix Factorization (round-robin
+  coordinate descent) and an ALS baseline (GraphLab-style).
+* :mod:`repro.apps.lda`   — STRADS LDA (word-rotation collapsed Gibbs) and
+  a data-parallel baseline (YahooLDA-style replicated word-topic table).
+"""

@@ -1,0 +1,328 @@
+"""STRADS LDA (paper §3.1): word-rotation collapsed Gibbs sampling.
+
+Model variables are the topic assignments z_ij; sufficient statistics are
+the doc-topic table D and the word-topic table B (+ its column sums s).
+
+schedule (word rotation): the vocabulary is split into U contiguous blocks
+V_1..V_U; at round t worker p processes block (p + t) mod U, so blocks
+rotate and every token is sampled exactly once per U rounds while
+concurrently-sampled tokens always have *disjoint words and disjoint
+documents* — the conditional-independence argument that keeps the
+parallelization error tiny (the only shared quantity is s, synced each
+pull; its drift is the paper's Fig-5 s-error, which we measure).
+
+Layout (model parallelism — the Fig-3 memory claim):
+  * B is sharded by word block: home shard u holds rows of block u
+    (``(U·V_b, K)`` sharded over ``data``).  At round t the blocks rotate
+    to their processing worker via a *static* ``lax.ppermute`` and rotate
+    home afterwards — this is the schedule's communication pattern, and
+    it is exactly why per-machine memory falls as 1/U.
+  * D and z shard with the documents (each doc lives on one worker).
+  * s (K,) is the synced KV-store value, replicated.
+
+push: sequential collapsed Gibbs over the worker's tokens whose word lies
+in its current block (a ``lax.scan``; within-worker sampling is exact),
+using the worker's stale local copy s̃ — paper f₁.
+pull: commit z/D/B locally; s ← psum of per-block column sums — paper f₂;
+the automatic sync makes s consistent again.  The round also reports the
+s-error Δ_t = (1/PM) Σ_p ‖s̃_p − s‖₁ (paper eq. 1).
+
+The data-parallel baseline (:class:`DataParallelLDA`, YahooLDA-style)
+replicates the *full* B on every worker, samples all local tokens against
+the stale replica and merges table deltas at the end of the round — more
+parallel error (every word conflicts) and O(V·K) memory per machine
+regardless of cluster size.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.scipy.special import gammaln
+from jax.sharding import PartitionSpec as P
+
+from repro.core import StradsAppBase, StradsEngine
+
+
+@dataclasses.dataclass(frozen=True)
+class LDAConfig:
+    vocab: int                   # V (padded up to U * block_vocab)
+    num_topics: int              # K
+    num_workers: int             # U (= data-axis size)
+    tokens_per_worker: int       # T_p (padded)
+    docs_per_worker: int         # local doc count
+    alpha: float = 0.1           # doc-topic prior
+    gamma: float = 0.1           # word-topic prior
+
+    @property
+    def block_vocab(self) -> int:
+        return -(-self.vocab // self.num_workers)    # ceil
+
+    @property
+    def padded_vocab(self) -> int:
+        return self.block_vocab * self.num_workers
+
+
+def _gibbs_scan(cfg: LDAConfig, B, D, s, words, docs, z, active_mask,
+                block_start, rng):
+    """Sequential collapsed Gibbs over one worker's scheduled tokens.
+
+    Exact within the worker (counts updated after every sample); the only
+    stale quantity is s̃, which starts at the synced s."""
+    K = cfg.num_topics
+
+    def body(carry, tok):
+        B, D, st, key = carry
+        v, d, zi, active = tok
+        a = active.astype(B.dtype)
+        vloc = jnp.clip(v - block_start, 0, cfg.block_vocab - 1)
+        # remove current assignment
+        B = B.at[vloc, zi].add(-a)
+        D = D.at[d, zi].add(-a)
+        st = st.at[zi].add(-a)
+        # conditional:  (γ+B[v,k]) / (Vγ+s̃[k]) · (α+D[d,k])
+        logits = (jnp.log(cfg.gamma + B[vloc]) -
+                  jnp.log(cfg.padded_vocab * cfg.gamma + st) +
+                  jnp.log(cfg.alpha + D[d]))
+        key, sub = jax.random.split(key)
+        znew = jax.random.categorical(sub, logits)
+        znew = jnp.where(active, znew, zi).astype(zi.dtype)
+        # add back
+        B = B.at[vloc, znew].add(a)
+        D = D.at[d, znew].add(a)
+        st = st.at[znew].add(a)
+        return (B, D, st, key), znew
+
+    (B, D, st, _), z_new = jax.lax.scan(
+        body, (B, D, s, rng), (words, docs, z, active_mask))
+    return B, D, st, z_new
+
+
+class StradsLDA(StradsAppBase):
+    """Word-rotation model-parallel collapsed Gibbs on STRADS primitives."""
+
+    def __init__(self, cfg: LDAConfig):
+        self.cfg = cfg
+
+    def static_phase(self, t: int) -> int:
+        return t % self.cfg.num_workers
+
+    def state_specs(self):
+        return {"z": P("data"), "D": P("data"), "B": P("data"),
+                "s": P(), "s_err": P()}
+
+    def data_specs(self):
+        return {"words": P("data"), "docs": P("data")}
+
+    # -- push / pull ----------------------------------------------------------
+
+    def push(self, data, state, sched, phase):
+        cfg = self.cfg
+        U = cfg.num_workers
+        p_fwd = [((d + phase) % U, d) for d in range(U)]   # block → worker
+        B = jax.lax.ppermute(state["B"], "data", p_fwd)
+
+        p = jax.lax.axis_index("data")
+        block = (p + phase) % U
+        block_start = block * cfg.block_vocab
+        words, docs, z = data["words"], data["docs"], state["z"]
+        active = (words >= 0) & (words // cfg.block_vocab == block)
+
+        rng = jax.random.fold_in(jax.random.key(17), phase)
+        rng = jax.random.fold_in(rng, p)
+
+        B, D, s_tilde, z_new = _gibbs_scan(
+            cfg, B, state["D"], state["s"], words, docs, z, active,
+            block_start, rng)
+
+        # send the processed block home
+        p_bwd = [(d, (d + phase) % U) for d in range(U)]
+        B_home = jax.lax.ppermute(B, "data", p_bwd)
+
+        # partials for pull: fresh column sums + s-error numerator
+        s_partial = jnp.sum(B, axis=0)                    # this block's sums
+        partial = {"s": s_partial}
+        local = {"z": z_new, "D": D, "B": B_home, "s_tilde": s_tilde}
+        return partial, local
+
+    def pull(self, state, sched, z, local, data, phase):
+        cfg = self.cfg
+        s_new = z["s"]                                    # synced (psummed)
+        # Fig-5 s-error: (1/PM) Σ_p ‖s̃_p − s_new‖₁   (M = total tokens)
+        err_p = jnp.sum(jnp.abs(local["s_tilde"] - s_new))
+        M = cfg.num_workers * cfg.tokens_per_worker
+        s_err = jax.lax.psum(err_p, "data") / (cfg.num_workers * M)
+        return {"z": local["z"], "D": local["D"], "B": local["B"],
+                "s": s_new, "s_err": s_err}
+
+    # -- diagnostics ------------------------------------------------------------
+
+    def loglik_fn(self, mesh):
+        """Collapsed joint log P(W, Z) up to constants (convergence metric)."""
+        cfg = self.cfg
+
+        def local(B, D, s):
+            lb = jnp.sum(gammaln(B + cfg.gamma))
+            ld = jnp.sum(gammaln(D + cfg.alpha)) \
+                - jnp.sum(gammaln(jnp.sum(D, 1) + cfg.num_topics * cfg.alpha))
+            tot = jax.lax.psum(lb + ld, "data")
+            return tot - jnp.sum(gammaln(s + cfg.padded_vocab * cfg.gamma))
+
+        fn = jax.shard_map(local, mesh=mesh,
+                           in_specs=(P("data"), P("data"), P()),
+                           out_specs=P(), check_vma=False)
+        return jax.jit(lambda st: fn(st["B"], st["D"], st["s"]))
+
+
+# ---------------------------------------------------------------------------
+# Data-parallel baseline (YahooLDA-style)
+# ---------------------------------------------------------------------------
+
+def _full_gibbs_scan(cfg: LDAConfig, B, D, s, words, docs, z, active_mask,
+                     rng):
+    """Gibbs over the full vocab table (data-parallel baseline)."""
+    def body(carry, tok):
+        B, D, st, key = carry
+        v, d, zi, active = tok
+        a = active.astype(B.dtype)
+        vc = jnp.clip(v, 0, cfg.padded_vocab - 1)
+        B = B.at[vc, zi].add(-a)
+        D = D.at[d, zi].add(-a)
+        st = st.at[zi].add(-a)
+        logits = (jnp.log(cfg.gamma + B[vc]) -
+                  jnp.log(cfg.padded_vocab * cfg.gamma + st) +
+                  jnp.log(cfg.alpha + D[d]))
+        key, sub = jax.random.split(key)
+        znew = jax.random.categorical(sub, logits)
+        znew = jnp.where(active, znew, zi).astype(zi.dtype)
+        B = B.at[vc, znew].add(a)
+        D = D.at[d, znew].add(a)
+        st = st.at[znew].add(a)
+        return (B, D, st, key), znew
+
+    (B, D, st, _), z_new = jax.lax.scan(
+        body, (B, D, s, rng), (words, docs, z, active_mask))
+    return B, D, st, z_new
+
+
+class DataParallelLDAApp(StradsAppBase):
+    """Working data-parallel baseline app."""
+
+    def __init__(self, cfg: LDAConfig):
+        self.cfg = cfg
+
+    def state_specs(self):
+        return {"z": P("data"), "D": P("data"), "B": P(), "s": P()}
+
+    def data_specs(self):
+        return {"words": P("data"), "docs": P("data")}
+
+    def push(self, data, state, sched, phase):
+        cfg = self.cfg
+        words, docs, z = data["words"], data["docs"], state["z"]
+        active = words >= 0
+        p = jax.lax.axis_index("data")
+        rng = jax.random.fold_in(jax.random.key(23), p)
+        B, D, s_tilde, z_new = _full_gibbs_scan(
+            cfg, state["B"], state["D"], state["s"], words, docs, z,
+            active, rng)
+        partial = {"dB": B - state["B"]}
+        local = {"z": z_new, "D": D}
+        return partial, local
+
+    def pull(self, state, sched, z, local, data, phase):
+        B = state["B"] + z["dB"]                 # merge stale deltas
+        s = jnp.sum(B, axis=0)
+        return {"z": local["z"], "D": local["D"], "B": B, "s": s}
+
+
+# ---------------------------------------------------------------------------
+# Synthetic corpus + drivers
+# ---------------------------------------------------------------------------
+
+def synthetic_corpus(rng: np.random.Generator, cfg: LDAConfig,
+                     true_topics: int = 10, concentration: float = 0.05):
+    """Draw a corpus from a planted LDA model (so likelihood climbs are
+    meaningful).  Returns (words, docs, z_init) flat arrays laid out as
+    num_workers contiguous shards."""
+    U, Tp, dpw = cfg.num_workers, cfg.tokens_per_worker, cfg.docs_per_worker
+    V, K = cfg.vocab, cfg.num_topics
+    topics = rng.dirichlet([concentration] * V, size=true_topics)
+    words = np.full((U * Tp,), -1, np.int32)
+    docs = np.zeros((U * Tp,), np.int32)
+    for u in range(U):
+        for i in range(Tp):
+            d = rng.integers(dpw)
+            theta = rng.dirichlet([0.3] * true_topics)
+            k = rng.choice(true_topics, p=theta)
+            v = rng.choice(V, p=topics[k])
+            words[u * Tp + i] = v
+            docs[u * Tp + i] = d
+    z0 = rng.integers(0, K, size=(U * Tp,)).astype(np.int32)
+    return words, docs, z0
+
+
+def build_state(cfg: LDAConfig, words, docs, z0):
+    """Materialize consistent D, B, s from the initial assignments."""
+    U, Tp, dpw = cfg.num_workers, cfg.tokens_per_worker, cfg.docs_per_worker
+    Vp, K = cfg.padded_vocab, cfg.num_topics
+    D = np.zeros((U * dpw, K), np.float32)
+    B = np.zeros((Vp, K), np.float32)
+    for u in range(U):
+        for i in range(Tp):
+            v, d, k = words[u * Tp + i], docs[u * Tp + i], z0[u * Tp + i]
+            if v < 0:
+                continue
+            D[u * dpw + d, k] += 1
+            B[v, k] += 1
+    s = B.sum(axis=0).astype(np.float32)
+    return {"z": jnp.asarray(z0), "D": jnp.asarray(D), "B": jnp.asarray(B),
+            "s": jnp.asarray(s), "s_err": jnp.float32(0)}
+
+
+def make_engine(cfg: LDAConfig, mesh, baseline: bool = False) -> StradsEngine:
+    app = DataParallelLDAApp(cfg) if baseline else StradsLDA(cfg)
+    return StradsEngine(app, mesh, data_specs=app.data_specs(),
+                        state_specs=app.state_specs())
+
+
+def fit(cfg: LDAConfig, words, docs, z0, mesh, num_rounds: int,
+        baseline: bool = False, trace_every: int = 0):
+    eng = make_engine(cfg, mesh, baseline=baseline)
+    data = eng.shard_data({"words": jnp.asarray(words),
+                           "docs": jnp.asarray(docs)})
+    state = build_state(cfg, words, docs, z0)
+    if baseline:
+        state = {k: state[k] for k in ("z", "D", "B", "s")}
+    state = jax.tree.map(
+        lambda x, sp: jax.device_put(x, jax.sharding.NamedSharding(mesh, sp)),
+        state, eng.app.state_specs())
+    llfn = StradsLDA(cfg).loglik_fn(mesh) if not baseline else \
+        _baseline_loglik(cfg, mesh)
+    trace, s_errs = [], []
+
+    def cb(t, s, out):
+        if trace_every and (t % trace_every == 0 or t == num_rounds - 1):
+            trace.append((t, float(llfn(s))))
+            if "s_err" in s:
+                s_errs.append((t, float(s["s_err"])))
+        return False
+
+    state = eng.run(state, data, jax.random.key(0), num_rounds, callback=cb)
+    return state, trace, s_errs
+
+
+def _baseline_loglik(cfg: LDAConfig, mesh):
+    def local(B, D, s):
+        ld = jnp.sum(gammaln(D + cfg.alpha)) \
+            - jnp.sum(gammaln(jnp.sum(D, 1) + cfg.num_topics * cfg.alpha))
+        tot = jax.lax.psum(ld, "data")
+        lb = jnp.sum(gammaln(B + cfg.gamma))
+        return tot + lb - jnp.sum(gammaln(s + cfg.padded_vocab * cfg.gamma))
+
+    fn = jax.shard_map(local, mesh=mesh, in_specs=(P(), P("data"), P()),
+                       out_specs=P(), check_vma=False)
+    return jax.jit(lambda st: fn(st["B"], st["D"], st["s"]))

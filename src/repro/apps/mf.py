@@ -1,0 +1,228 @@
+"""STRADS Matrix Factorization (paper §3.2) and an ALS baseline.
+
+Task:  min_{W,H}  Σ_{(i,j)∈Ω} (a_ij − wᵢhⱼ)² + λ(‖W‖_F² + ‖H‖_F²)
+with W ∈ R^{N×K}, H ∈ R^{K×M} (paper eq. 2), solved by rank-wise parallel
+coordinate descent (CCD-style, paper eq. 3).
+
+schedule: round-robin over (matrix ∈ {W, H}) × (rank k) — the paper's
+round-robin dispatch over the q_p / r_p index sets; with rows of A sharded
+over workers, *all* columns of H can be updated concurrently for a fixed
+rank k (they are mutually independent given W — the paper's "free from
+parallelization error" argument), and symmetrically for W against the
+column-sharded replica.
+
+push (H-phase, rank k):   a_j^p = Σ_{i∈(Ω_j)_p} (r_ij + w_ik h_kj) w_ik   (g₁)
+                          b_j^p = Σ_{i∈(Ω_j)_p} w_ik²                     (g₂)
+pull:                     h_kj ← Σ_p a_j^p / (λ + Σ_p b_j^p)              (g₃)
+sync (automatic):         R ← R − w_k (h_k_new − h_k_old) on local rows.
+
+Laptop-scale layout: A dense with an observation mask, rows sharded over
+the ``data`` axis.  W and the residual R shard with the rows (model
+partitioning — Fig 3); H is the synced KV-store block (replicated, it is
+K×M which is small relative to W for N ≫ M).  The W-phase uses the same
+row shards: for fixed k, w_ik ← Σ_j ... over the row's *local* observed
+entries, which requires no cross-worker sum at all (rows live whole on one
+worker) — partials degenerate to local updates, matching the paper's
+submatrix A^{q_p} storage.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import StradsAppBase, StradsEngine
+
+
+@dataclasses.dataclass(frozen=True)
+class MFConfig:
+    num_rows: int                # N (users)
+    num_cols: int                # M (items)
+    rank: int                    # K
+    lam: float = 0.05
+    ranks_per_round: int = 1     # how many rank indices per BSP round
+
+
+class StradsMF(StradsAppBase):
+    """Round-robin rank-wise CD on STRADS primitives."""
+
+    def __init__(self, cfg: MFConfig):
+        self.cfg = cfg
+
+    # state: W,R row-sharded; H replicated (synced KV block)
+    def init_state(self, rng, A=None, mask=None):
+        cfg = self.cfg
+        kw, kh = jax.random.split(rng)
+        W = jax.random.normal(kw, (cfg.num_rows, cfg.rank), jnp.float32)
+        W = W / jnp.sqrt(cfg.rank)
+        H = jax.random.normal(kh, (cfg.rank, cfg.num_cols), jnp.float32)
+        H = H / jnp.sqrt(cfg.rank)
+        if A is None:
+            raise ValueError("StradsMF.init_state needs A (for the residual)")
+        R = (A - W @ H) * mask
+        return {"W": W, "H": H, "R": R}
+
+    def state_specs(self):
+        return {"W": P("data"), "H": P(), "R": P("data")}
+
+    def data_specs(self):
+        return {"A": P("data"), "mask": P("data")}
+
+    # -- schedule: round-robin (phase, rank) --------------------------------
+
+    def static_phase(self, t: int) -> int:
+        # Alternate H-phase (0) and W-phase (1) every round.
+        return t % 2
+
+    def propose(self, state, rng, t, phase):
+        cfg = self.cfg
+        # rank block for this round: round-robin over K
+        base = (t // 2) * cfg.ranks_per_round
+        ks = (base + jnp.arange(cfg.ranks_per_round)) % cfg.rank
+        return {"ranks": ks}
+
+    # -- push / pull ----------------------------------------------------------
+
+    def push(self, data, state, sched, phase):
+        cfg = self.cfg
+        W, H, R, mask = state["W"], state["H"], state["R"], data["mask"]
+        ks = sched["ranks"]
+        if phase == 0:
+            # H-phase: numerator/denominator partial sums over local rows.
+            Wk = jnp.take(W, ks, axis=1)            # (n_p, Kr)
+            Hk = jnp.take(H, ks, axis=0)            # (Kr, M)
+            # a_j = Σ_i m_ij (r_ij + w_ik h_kj) w_ik ; b_j = Σ_i m_ij w_ik²
+            wk2 = jnp.einsum("ij,ik->kj", mask, Wk * Wk)        # (Kr, M)
+            a = jnp.einsum("ik,ij->kj", Wk, R * mask) + wk2 * Hk
+            return {"a": a, "b": wk2}, None
+        else:
+            # W-phase: rows are whole on this worker — no cross-worker sum
+            # needed; return zero-shaped partials to keep the round uniform.
+            return {"a": jnp.zeros((len(ks), 1), jnp.float32),
+                    "b": jnp.zeros((len(ks), 1), jnp.float32)}, None
+
+    def pull(self, state, sched, z, local, data, phase):
+        cfg = self.cfg
+        W, H, R, mask = state["W"], state["H"], state["R"], data["mask"]
+        ks = sched["ranks"]
+        if phase == 0:
+            Hk_old = jnp.take(H, ks, axis=0)                      # (Kr, M)
+            Hk_new = z["a"] / (cfg.lam + z["b"])                  # g₃
+            H = H.at[ks].set(Hk_new)
+            Wk = jnp.take(W, ks, axis=1)                          # (n_p, Kr)
+            R = R - (Wk @ (Hk_new - Hk_old)) * mask               # sync
+            return {"W": W, "H": H, "R": R}
+        else:
+            # W-phase (local closed-form CD for rank block ks on local rows)
+            Hk = jnp.take(H, ks, axis=0)                          # (Kr, M)
+            Wk_old = jnp.take(W, ks, axis=1)                      # (n_p, Kr)
+            num = jnp.einsum("ij,kj->ik", R * mask, Hk) \
+                + Wk_old * jnp.einsum("ij,kj->ik", mask, Hk * Hk)
+            den = cfg.lam + jnp.einsum("ij,kj->ik", mask, Hk * Hk)
+            Wk_new = num / den
+            W = W.at[:, ks].set(Wk_new)
+            R = R - ((Wk_new - Wk_old) @ Hk) * mask               # sync
+            return {"W": W, "H": H, "R": R}
+
+    def objective_fn(self, mesh):
+        cfg = self.cfg
+
+        def local(R, W, H):
+            sse = jnp.sum(R * R)
+            wn = jnp.sum(W * W)
+            tot = jax.lax.psum(sse + cfg.lam * wn, "data")
+            return tot + cfg.lam * jnp.sum(H * H)
+
+        fn = jax.shard_map(local, mesh=mesh,
+                           in_specs=(P("data"), P("data"), P()),
+                           out_specs=P(), check_vma=False)
+        return jax.jit(lambda s: fn(s["R"], s["W"], s["H"]))
+
+
+# ---------------------------------------------------------------------------
+# ALS baseline (GraphLab-style alternating least squares)
+# ---------------------------------------------------------------------------
+
+def als_step(A, mask, W, H, lam):
+    """One full ALS alternation (dense masked closed-form solves)."""
+    K = W.shape[1]
+    eye = jnp.eye(K, dtype=W.dtype) * lam
+
+    def solve_rows(Wrow_unused, a_row, m_row):
+        # solve (Hᵀ diag(m) H + λI) w = Hᵀ diag(m) a
+        G = (H * m_row) @ H.T + eye
+        b = (H * m_row) @ a_row
+        return jnp.linalg.solve(G, b)
+
+    W = jax.vmap(solve_rows)(W, A, mask)
+
+    def solve_cols(h_col_unused, a_col, m_col):
+        G = (W.T * m_col) @ W + eye
+        b = (W.T * m_col) @ a_col
+        return jnp.linalg.solve(G, b)
+
+    H = jax.vmap(solve_cols, in_axes=(1, 1, 1), out_axes=1)(H, A, mask)
+    return W, H
+
+
+def als_fit(A, mask, rank, lam, num_iters, rng):
+    kw, kh = jax.random.split(rng)
+    N, M = A.shape
+    W = jax.random.normal(kw, (N, rank), jnp.float32) / jnp.sqrt(rank)
+    H = jax.random.normal(kh, (rank, M), jnp.float32) / jnp.sqrt(rank)
+    step = jax.jit(lambda W, H: als_step(A, mask, W, H, lam))
+    trace = []
+    for it in range(num_iters):
+        W, H = step(W, H)
+        R = (A - W @ H) * mask
+        obj = float(jnp.sum(R * R) + lam * (jnp.sum(W * W) + jnp.sum(H * H)))
+        trace.append((it, obj))
+    return (W, H), trace
+
+
+# ---------------------------------------------------------------------------
+# Data + driver
+# ---------------------------------------------------------------------------
+
+def synthetic_ratings(rng: np.random.Generator, N: int, M: int,
+                      true_rank: int, density: float = 0.3,
+                      noise: float = 0.05):
+    """Low-rank + noise ratings with a sparse observation mask."""
+    Wt = rng.normal(0, 1, size=(N, true_rank)).astype(np.float32)
+    Ht = rng.normal(0, 1, size=(true_rank, M)).astype(np.float32)
+    A = (Wt @ Ht / np.sqrt(true_rank)).astype(np.float32)
+    A += noise * rng.normal(0, 1, size=A.shape).astype(np.float32)
+    mask = (rng.uniform(size=A.shape) < density).astype(np.float32)
+    return A * mask, mask
+
+
+def make_engine(cfg: MFConfig, mesh) -> StradsEngine:
+    app = StradsMF(cfg)
+    return StradsEngine(app, mesh, data_specs=app.data_specs(),
+                        state_specs=app.state_specs())
+
+
+def fit(cfg: MFConfig, A: np.ndarray, mask: np.ndarray, mesh,
+        num_rounds: int, rng: Optional[jax.Array] = None,
+        trace_every: int = 0):
+    rng = rng if rng is not None else jax.random.key(0)
+    eng = make_engine(cfg, mesh)
+    data = eng.shard_data({"A": jnp.asarray(A), "mask": jnp.asarray(mask)})
+    state = eng.app.init_state(rng, A=jnp.asarray(A), mask=jnp.asarray(mask))
+    state = jax.tree.map(
+        lambda x, s: jax.device_put(x, jax.sharding.NamedSharding(mesh, s)),
+        state, eng.app.state_specs())
+    obj = eng.app.objective_fn(mesh)
+    trace = []
+
+    def cb(t, s, out):
+        if trace_every and (t % trace_every == 0 or t == num_rounds - 1):
+            trace.append((t, float(obj(s))))
+        return False
+
+    state = eng.run(state, data, rng, num_rounds, callback=cb)
+    return state, trace

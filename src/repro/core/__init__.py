@@ -1,0 +1,17 @@
+"""STRADS core: primitives, schedulers, BSP engine, sharded KV store."""
+from .primitives import (RoundResult, StradsApp, StradsAppBase, tree_psum)
+from .schedulers import (DynamicPriorityScheduler, RandomScheduler,
+                         RotationScheduler, RoundRobinScheduler,
+                         dependency_filter, priority_weights,
+                         sample_candidates)
+from .engine import StradsEngine, single_device_mesh, worker_mesh, DATA_AXIS
+from .kvstore import KVStore, VarSpec
+from . import block_scheduler
+
+__all__ = [
+    "RoundResult", "StradsApp", "StradsAppBase", "tree_psum",
+    "DynamicPriorityScheduler", "RandomScheduler", "RotationScheduler",
+    "RoundRobinScheduler", "dependency_filter", "priority_weights",
+    "sample_candidates", "StradsEngine", "single_device_mesh",
+    "worker_mesh", "DATA_AXIS", "KVStore", "VarSpec", "block_scheduler",
+]

@@ -1,0 +1,151 @@
+"""The STRADS BSP round executor.
+
+Turns a :class:`~repro.core.primitives.StradsApp` into a jitted function
+executing
+
+    propose → [schedule_stats → psum] → schedule → push → psum → pull
+
+with ``push``/``schedule_stats`` running under ``shard_map`` over the
+``data`` mesh axis and schedule decisions replicated.  ``sync`` is
+automatic: SPMD program order is the BSP barrier (DESIGN.md §3).
+
+The engine runs identically on a single device (unit tests, laptop-scale
+experiments) and on multi-chip meshes; the production 256/512-chip lowering
+is exercised by ``launch/dryrun.py``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .primitives import RoundResult, StradsApp, StradsAppBase, tree_psum
+
+DATA_AXIS = "data"
+
+
+def _replicate_spec(tree: Any) -> Any:
+    return jax.tree.map(lambda _: P(), tree)
+
+
+class StradsEngine:
+    """Compiles a StradsApp into a BSP round on a device mesh.
+
+    Parameters
+    ----------
+    app:         the STRADS application.
+    mesh:        device mesh with a ``data`` axis (workers = shards).
+    data_specs:  PartitionSpec pytree for the data (the paper's 1/P split).
+    state_specs: PartitionSpec pytree for model state.  Replicated leaves
+                 (``P()``) behave like the paper's synced KV-store values;
+                 sharded leaves are worker-local model partitions (model
+                 parallelism — the Fig-3 memory win).
+    """
+
+    def __init__(self, app: StradsApp, mesh: Mesh, data_specs: Any,
+                 state_specs: Any = None):
+        self.app = app
+        self.mesh = mesh
+        self.data_specs = data_specs
+        self.state_specs = state_specs
+        self._needs_stats = getattr(
+            app, "needs_schedule_stats",
+            type(app).schedule_stats is not StradsAppBase.schedule_stats)
+        self._round = self._build_round()
+
+    # -- construction ------------------------------------------------------
+
+    def _build_round(self):
+        app, mesh, data_specs = self.app, self.mesh, self.data_specs
+        needs_stats = self._needs_stats
+        state_specs = self.state_specs
+
+        @partial(jax.jit, static_argnums=(3,))
+        def round_fn(state, data, rng, phase, t):
+            r1, r2 = jax.random.split(rng)
+            sspec = (_replicate_spec(state) if state_specs is None
+                     else state_specs)
+
+            cand = app.propose(state, r1, t, phase)
+
+            if needs_stats:
+                def stats_fn(data, state, cand):
+                    s = app.schedule_stats(data, state, cand, phase)
+                    return tree_psum(s, DATA_AXIS)
+                stats = jax.shard_map(
+                    stats_fn, mesh=mesh,
+                    in_specs=(data_specs, sspec, _replicate_spec(cand)),
+                    out_specs=P(), check_vma=False,
+                )(data, state, cand)
+            else:
+                stats = None
+
+            sched = app.schedule(state, cand, stats, r2, t, phase)
+
+            def push_pull(data, state, sched):
+                z, local = app.push(data, state, sched, phase)
+                z = tree_psum(z, DATA_AXIS)      # pull aggregation Σ_p z^p
+                return app.pull(state, sched, z, local, data, phase)
+
+            new_state = jax.shard_map(
+                push_pull, mesh=mesh,
+                in_specs=(data_specs, sspec, _replicate_spec(sched)),
+                out_specs=sspec, check_vma=False,
+            )(data, state, sched)
+            return RoundResult(state=new_state, sched=sched)
+
+        return round_fn
+
+    # -- placement helpers ---------------------------------------------------
+
+    def init_state(self, rng: jax.Array):
+        state = self.app.init_state(rng)
+        if self.state_specs is not None:
+            state = jax.tree.map(
+                lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)),
+                state, self.state_specs)
+        return state
+
+    def shard_data(self, data):
+        return jax.tree.map(
+            lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)),
+            data, self.data_specs)
+
+    # -- execution -------------------------------------------------------------
+
+    def run_round(self, state, data, rng, t: int = 0) -> RoundResult:
+        phase = self.app.static_phase(t)
+        import jax.numpy as jnp
+        return self._round(state, data, rng, phase, jnp.int32(t))
+
+    def run(self, state, data, rng, num_rounds: int, callback=None):
+        """Drive ``num_rounds`` BSP rounds (host loop; each round jitted).
+
+        ``callback(t, state, result)`` runs between rounds (metrics, early
+        stop by returning True)."""
+        for t in range(num_rounds):
+            rng, sub = jax.random.split(rng)
+            out = self.run_round(state, data, sub, t)
+            state = out.state
+            if callback is not None and callback(t, state, out):
+                break
+        return state
+
+
+def single_device_mesh() -> Mesh:
+    """A 1-device ``data`` mesh for laptop-scale runs and unit tests."""
+    return jax.make_mesh((1,), (DATA_AXIS,),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def worker_mesh(num_workers: int) -> Mesh:
+    devs = jax.devices()
+    if len(devs) < num_workers:
+        raise ValueError(
+            f"mesh of {num_workers} workers needs ≥{num_workers} devices; "
+            f"have {len(devs)} (set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count=N before importing jax)")
+    return jax.make_mesh((num_workers,), (DATA_AXIS,),
+                         axis_types=(jax.sharding.AxisType.Auto,))

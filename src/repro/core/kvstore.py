@@ -1,0 +1,89 @@
+"""Sharded model store — the paper's "distributed, partitioned key-value
+store" holding the globally-accessible model variables x.
+
+In 2014-STRADS this was a parameter server with an explicit BSP ``sync``.
+Under SPMD the store is simply a pytree of ``jax.Array`` values placed with
+``NamedSharding``; reads are RDMA-free (XLA inserts the collectives), and
+BSP sync is program order.  This module keeps the *bookkeeping* value of
+the KV store: named variables, their partition specs, byte accounting
+(used by the Fig-3 memory benchmark), and (re)placement helpers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Mapping
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class VarSpec:
+    """Declared model variable: shape/dtype + how it shards."""
+    shape: tuple
+    dtype: Any
+    spec: P = P()          # replicated by default (data-parallel style)
+
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape)) * np.dtype(self.dtype).itemsize
+
+    def nbytes_per_device(self, mesh: Mesh) -> int:
+        """Bytes a single device holds — the Fig-3 quantity."""
+        shard = 1
+        for axis_names in self.spec:
+            if axis_names is None:
+                continue
+            names = axis_names if isinstance(axis_names, tuple) else (axis_names,)
+            for n in names:
+                shard *= mesh.shape[n]
+        return self.nbytes() // max(shard, 1)
+
+
+class KVStore:
+    """A named, sharded model-variable store with BSP semantics."""
+
+    def __init__(self, mesh: Mesh, specs: Mapping[str, VarSpec]):
+        self.mesh = mesh
+        self.specs = dict(specs)
+
+    # -- placement ----------------------------------------------------------
+
+    def sharding(self, name: str) -> NamedSharding:
+        return NamedSharding(self.mesh, self.specs[name].spec)
+
+    def init(self, rng: jax.Array, initializers: Mapping[str, Any]
+             ) -> Dict[str, jax.Array]:
+        """Materialize all variables, sharded.  ``initializers[name]`` is
+        either a constant or a callable ``(rng, shape, dtype) -> array``."""
+        out = {}
+        keys = jax.random.split(rng, max(len(self.specs), 1))
+        for k, (name, vs) in zip(keys, sorted(self.specs.items())):
+            init = initializers.get(name, 0)
+            if callable(init):
+                arr = init(k, vs.shape, vs.dtype)
+            else:
+                arr = jax.numpy.full(vs.shape, init, vs.dtype)
+            out[name] = jax.device_put(arr, self.sharding(name))
+        return out
+
+    def place(self, values: Mapping[str, Any]) -> Dict[str, jax.Array]:
+        return {name: jax.device_put(v, self.sharding(name))
+                for name, v in values.items()}
+
+    # -- accounting (Fig 3) -------------------------------------------------
+
+    def total_bytes(self) -> int:
+        return sum(vs.nbytes() for vs in self.specs.values())
+
+    def bytes_per_device(self) -> int:
+        """Model-store bytes each device must hold.
+
+        Model-parallel stores *shrink* per-device as the mesh grows;
+        replicated (data-parallel) stores do not — the paper's central
+        memory claim (Fig 3)."""
+        return sum(vs.nbytes_per_device(self.mesh)
+                   for vs in self.specs.values())
+
+    def partition_specs(self) -> Dict[str, P]:
+        return {name: vs.spec for name, vs in self.specs.items()}

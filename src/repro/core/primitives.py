@@ -1,0 +1,114 @@
+"""STRADS primitives: ``schedule``, ``push``, ``pull`` (+ automatic ``sync``).
+
+The paper (Lee et al., 2014) defines a model-parallel round as
+
+    sched = schedule()                      # pick U variables
+    z_p   = push(worker=p, vars=sched)      # partial update on worker p
+    x     = pull(sched, [z_1 .. z_P])       # aggregate + commit
+    sync()                                  # automatic BSP refresh
+
+On TPU/JAX we realize this with SPMD: ``schedule`` is computed *replicated*
+(every device runs the same deterministic program with the same PRNG key, so
+there is no scheduler machine and no star-topology bottleneck — the paper's
+own §5 future-work item), ``push`` runs under ``shard_map`` over the ``data``
+mesh axis, ``pull`` aggregation is a ``jax.lax.psum`` over that axis, and
+``sync`` is implicit in SPMD program order (BSP, exactly the consistency
+model the paper uses).
+
+Round anatomy (executed by :mod:`repro.core.engine`):
+
+    cand  = propose(state, rng, t)                      # replicated
+    stats = psum_p( schedule_stats(D_p, state, cand) )  # sharded, optional
+    sched = schedule(state, cand, stats, rng, t)        # replicated
+    z, local_p = push(D_p, state, sched)                # sharded
+    state = pull(state, sched, psum_p(z), local_p, D_p) # commit + sync
+
+``z`` is the paper's partial result (summed across workers exactly as the
+paper's Σ_p z_j^p); ``local_p`` carries per-shard state updates that never
+cross workers (e.g. LDA's topic-assignment vector or a maintained residual)
+— in 2014-STRADS those simply lived in worker memory, here they are the
+sharded leaves of the state pytree.
+
+``phase`` is a *static* Python int (``app.static_phase(t)``) enabling
+schedules whose communication pattern changes per round (LDA's rotation
+``ppermute`` needs a static permutation); apps with a fixed pattern return 0.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Protocol, runtime_checkable
+
+import jax
+
+# Type aliases -----------------------------------------------------------
+ModelState = Any     # pytree of model variables x (the paper's KV store)
+DataShard = Any      # pytree: this worker's partition of the data D
+Schedule = Any       # pytree describing the scheduled variable block
+Partial = Any        # pytree of partial results z_j^p
+Stats = Any          # pytree of distributed statistics used by schedule()
+
+
+@runtime_checkable
+class StradsApp(Protocol):
+    """User-defined STRADS application (the paper's Figure 2)."""
+
+    def init_state(self, rng: jax.Array) -> ModelState: ...
+
+    def static_phase(self, t: int) -> int: ...
+
+    def propose(self, state: ModelState, rng: jax.Array,
+                t: jax.Array, phase: int) -> Schedule: ...
+
+    def schedule_stats(self, data: DataShard, state: ModelState,
+                       candidates: Schedule, phase: int) -> Stats: ...
+
+    def schedule(self, state: ModelState, candidates: Schedule,
+                 stats: Stats, rng: jax.Array, t: jax.Array,
+                 phase: int) -> Schedule: ...
+
+    def push(self, data: DataShard, state: ModelState, sched: Schedule,
+             phase: int) -> tuple[Partial, Any]: ...
+
+    def pull(self, state: ModelState, sched: Schedule, z: Partial,
+             local: Any, data: DataShard, phase: int) -> ModelState: ...
+
+
+class StradsAppBase:
+    """Convenience base with the common defaults.
+
+    Subclasses override what they need; ``schedule_stats`` is only invoked
+    by the engine when overridden (data-independent schedules skip the
+    extra shard_map pass entirely).
+    """
+
+    def static_phase(self, t: int) -> int:
+        return 0
+
+    def propose(self, state, rng, t, phase):
+        return None
+
+    def schedule_stats(self, data, state, candidates, phase):
+        return None
+
+    def schedule(self, state, candidates, stats, rng, t, phase):
+        return candidates
+
+    def push(self, data, state, sched, phase):
+        raise NotImplementedError
+
+    def pull(self, state, sched, z, local, data, phase):
+        raise NotImplementedError
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RoundResult:
+    """Output of one BSP round (a pytree, so it can cross jit)."""
+    state: ModelState
+    sched: Schedule
+    aux: Any = None
+
+
+def tree_psum(tree: Any, axis_name: str) -> Any:
+    """psum every leaf of a pytree (the pull aggregation)."""
+    return jax.tree.map(lambda x: jax.lax.psum(x, axis_name), tree)

@@ -1,0 +1,1 @@
+from .pipeline import SyntheticLMConfig, synthetic_batches, make_batch  # noqa: F401

@@ -1,0 +1,80 @@
+"""Deterministic synthetic token pipeline.
+
+Emits next-token-prediction batches from a fixed-seed Markov-ish stream:
+tokens follow a Zipf marginal with a learnable-in-principle bigram
+structure (``x_{t+1} = (a·x_t + b) mod V`` on a subset of steps), so tiny
+models show a real, monotonically-decreasing loss — enough signal to
+validate trainers and the STRADS block scheduler end-to-end without
+shipping a corpus.
+
+Everything is derived from ``(seed, step)`` so any worker can regenerate
+any batch (the same property STRADS push workers rely on for their data
+shards); no filesystem or host state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLMConfig:
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+    zipf_a: float = 1.2          # marginal skew
+    structure: float = 0.75      # fraction of deterministic bigram steps
+
+
+def _zipf_logits(v: int, a: float) -> np.ndarray:
+    ranks = np.arange(1, v + 1, dtype=np.float64)
+    return np.log(ranks ** -a)
+
+
+def make_batch(cfg: SyntheticLMConfig, step: int,
+               d_model: Optional[int] = None,
+               frontend_tokens: int = 0,
+               frames: bool = False) -> Dict[str, jax.Array]:
+    """Batch for one step.  ``frames=True`` → audio-style frame embeddings
+    instead of tokens; ``frontend_tokens`` → prepend VLM patch embeddings."""
+    key = jax.random.PRNGKey(cfg.seed * 1_000_003 + step)
+    kz, ks, kf, kv = jax.random.split(key, 4)
+    B, S, V = cfg.batch_size, cfg.seq_len + 1, cfg.vocab_size
+    logits = jnp.asarray(_zipf_logits(V, cfg.zipf_a), jnp.float32)
+    draws = jax.random.categorical(kz, logits, shape=(B, S))
+    structured = jax.random.bernoulli(ks, cfg.structure, (B, S))
+
+    def step_fn(prev, xs):
+        draw, use_bigram = xs
+        nxt = jnp.where(use_bigram, (prev + 1) % V, draw)
+        return nxt, nxt
+    _, seq = jax.lax.scan(step_fn, draws[:, 0],
+                          (draws.T, structured.T))
+    seq = seq.T.astype(jnp.int32)                       # (B, S)
+
+    out: Dict[str, jax.Array] = {"labels": seq[:, 1:]}
+    if frames:
+        assert d_model is not None
+        out["frames"] = jax.random.normal(kf, (B, cfg.seq_len, d_model),
+                                          jnp.float32) * 0.02
+    else:
+        out["tokens"] = seq[:, :-1]
+    if frontend_tokens:
+        assert d_model is not None
+        out["frontend"] = jax.random.normal(kv, (B, frontend_tokens,
+                                                 d_model),
+                                            jnp.float32) * 0.02
+    return out
+
+
+def synthetic_batches(cfg: SyntheticLMConfig, **kw
+                      ) -> Iterator[Dict[str, jax.Array]]:
+    step = 0
+    while True:
+        yield make_batch(cfg, step, **kw)
+        step += 1

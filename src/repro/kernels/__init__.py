@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+<name>.py  — pl.pallas_call + explicit BlockSpec VMEM tiling
+ops.py     — jit'd public wrappers (backend dispatch: pallas/interpret/ref)
+ref.py     — pure-jnp oracles (semantics contract + CPU execution path)
+"""
+from . import ops, ref  # noqa: F401

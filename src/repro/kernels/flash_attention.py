@@ -1,0 +1,154 @@
+"""Blockwise (flash) attention forward kernel for TPU.
+
+Design (TPU-native, not a CUDA port):
+  * 4-D grid ``(B, Hq, num_q_blocks, num_kv_blocks)`` — the kv axis is the
+    innermost (sequential on TPU), so the online-softmax running state
+    (m, l, acc) lives in VMEM scratch and is revisited across kv steps.
+  * BlockSpecs tile Q/K/V into (block_q × head_dim) / (block_k × head_dim)
+    VMEM tiles; block sizes default to 128 to align with the MXU systolic
+    array (128×128) and the (8,128) VREG lanes.
+  * GQA without materializing repeated KV: the K/V index_map divides the
+    query-head grid index by the group size, so each query-head group
+    streams the same KV tile from HBM.
+  * Causal + sliding-window masks are applied per-tile; fully-masked tiles
+    are skipped with ``pl.when`` (the TPU grid is sequential, so skipping
+    is pure latency win — this is what makes the long_500k window path
+    sub-quadratic in wall-time as well as FLOPs).
+
+Validated in interpret mode against ``ref.attention_ref`` (CPU container);
+on TPU the same ``pl.pallas_call`` lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import NEG_INF
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, window: Optional[int], scale: float,
+                  block_q: int, block_k: int, seq_q: int, seq_kv: int):
+    i = pl.program_id(2)          # q block index
+    j = pl.program_id(3)          # kv block index
+    nj = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # tile visibility: absolute query rows are offset by (seq_kv - seq_q)
+    # so decode (q is the suffix of the kv timeline) works unchanged.
+    offs = seq_kv - seq_q
+    q_lo = i * block_q + offs            # first absolute q position in tile
+    q_hi = q_lo + block_q - 1
+    k_lo = j * block_k
+    k_hi = k_lo + block_k - 1
+
+    visible = True
+    if causal:
+        visible = jnp.logical_and(visible, k_lo <= q_hi)
+    if window is not None:
+        visible = jnp.logical_and(visible, k_hi > q_lo - window)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (Bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)                # (Bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)                # (Bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (Bq, Bk)
+
+        q_ids = q_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_ids = k_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), bool)
+        if causal:
+            mask &= q_ids >= k_ids
+        if window is not None:
+            mask &= (q_ids - k_ids) < window
+        mask &= k_ids < seq_kv                 # kv padding guard
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                # (Bq,)
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jax.Array:
+    """Flash attention.  Layout: q (B, Hq, Sq, D); k, v (B, Hkv, Skv, D).
+
+    Returns (B, Hq, Sq, D) in q.dtype.  Sq/Skv are padded to block
+    multiples internally; window/causal offsets treat q as the *suffix*
+    of the kv timeline (decode-compatible).
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    block_q = min(block_q, max(Sq, 8))
+    block_k = min(block_k, max(Skv, 8))
+    pq = (-Sq) % block_q
+    pk = (-Skv) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    Sqp, Skvp = Sq + pq, Skv + pk
+
+    grid = (B, Hq, Sqp // block_q, Skvp // block_k)
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, window=window, scale=scale,
+        block_q=block_q, block_k=block_k, seq_q=Sq, seq_kv=Skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sqp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # m
+            pltpu.VMEM((block_q,), jnp.float32),      # l
+            pltpu.VMEM((block_q, D), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]

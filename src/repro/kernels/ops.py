@@ -1,0 +1,96 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+Each op dispatches between the Pallas kernel (TPU target; ``interpret=True``
+on CPU for validation) and the pure-jnp reference path (``ref.py``), chosen
+by ``backend``:
+
+  * "auto"      — Pallas on TPU, reference elsewhere (the honest default
+                  for this CPU-only container).
+  * "pallas"    — force the kernel (compiles for TPU Mosaic).
+  * "interpret" — force the kernel in interpret mode (CPU-executable).
+  * "ref"       — force the reference path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import lasso_cd as _lc
+from . import moe_gating as _mg
+from . import ssm_scan as _ss
+from . import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return backend
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "backend", "block_q", "block_k"))
+def attention(q, k, v, *, causal: bool = True,
+              window: Optional[int] = None, scale: Optional[float] = None,
+              backend: str = "auto", block_q: int = _fa.DEFAULT_BLOCK_Q,
+              block_k: int = _fa.DEFAULT_BLOCK_K):
+    """Attention in (B, S, H, D) layout, GQA-aware.  See ref.attention_ref."""
+    mode = _resolve(backend)
+    if mode == "ref":
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 scale=scale)
+    tr = lambda x: x.transpose(0, 2, 1, 3)
+    out = _fa.flash_attention(tr(q), tr(k), tr(v), causal=causal,
+                              window=window, scale=scale, block_q=block_q,
+                              block_k=block_k,
+                              interpret=(mode == "interpret"))
+    return tr(out)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "chunk"))
+def ssm_scan(x, dt, A, Bm, Cm, h0=None, *, backend: str = "auto",
+             chunk: int = _ss.DEFAULT_CHUNK):
+    """Diagonal selective scan.  See ref.ssm_scan_ref."""
+    mode = _resolve(backend)
+    if mode == "ref":
+        return ref.ssm_scan_ref(x, dt, A, Bm, Cm, h0)
+    return _ss.ssm_scan(x, dt, A, Bm, Cm, h0, chunk=chunk,
+                        interpret=(mode == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "backend", "block_t"))
+def topk_gating(logits, k: int, *, backend: str = "auto",
+                block_t: int = _mg.DEFAULT_BLOCK_T):
+    """Fused softmax→top-k→renorm router gating.  See ref.topk_gating_ref."""
+    mode = _resolve(backend)
+    if mode == "ref":
+        return ref.topk_gating_ref(logits, k)
+    return _mg.topk_gating(logits, k, block_t=block_t,
+                           interpret=(mode == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "block_n"))
+def lasso_partial(Xb, r, *, backend: str = "auto",
+                  block_n: int = _lc.DEFAULT_BLOCK_N):
+    mode = _resolve(backend)
+    if mode == "ref":
+        return ref.lasso_partial_ref(Xb, r)
+    return _lc.lasso_partial(Xb, r, block_n=block_n,
+                             interpret=(mode == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "block_n"))
+def gram_block(Xc, *, backend: str = "auto",
+               block_n: int = _lc.DEFAULT_BLOCK_N):
+    mode = _resolve(backend)
+    if mode == "ref":
+        return ref.gram_ref(Xc)
+    return _lc.gram_block(Xc, block_n=block_n,
+                          interpret=(mode == "interpret"))

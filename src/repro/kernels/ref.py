@@ -1,0 +1,125 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the semantics contracts: each kernel's test sweeps shapes/dtypes
+and asserts allclose against the function here.  They are also the
+*default execution path* of the model substrate on CPU (this container has
+no TPU; XLA fuses these fine), with the Pallas kernels as the TPU target.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Attention (flash_attention.py)
+# ---------------------------------------------------------------------------
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True,
+                  window: Optional[int] = None,
+                  scale: Optional[float] = None) -> jax.Array:
+    """Masked multi-head attention, GQA-aware.
+
+    Shapes: q (B, Sq, Hq, D); k, v (B, Skv, Hkv, D) with Hq % Hkv == 0.
+    ``window``: sliding-window width — query i attends to keys in
+    (i − window, i]  (offset by Skv − Sq for decode where q is a suffix).
+    Compute in f32, return q.dtype.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads to q heads
+    kf = jnp.repeat(kf, G, axis=2)
+    vf = jnp.repeat(vf, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    q_ids = jnp.arange(Sq)[:, None] + (Skv - Sq)   # absolute positions
+    k_ids = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= q_ids >= k_ids
+    if window is not None:
+        mask &= (q_ids - k_ids) < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Selective-state-space scan (ssm_scan.py)
+# ---------------------------------------------------------------------------
+
+def ssm_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array,
+                 Bm: jax.Array, Cm: jax.Array,
+                 h0: Optional[jax.Array] = None):
+    """Diagonal selective SSM (Mamba2-style), sequential reference.
+
+    x  (B, S, C)   input channels
+    dt (B, S, C)   positive step sizes (post-softplus)
+    A  (C,)        negative diagonal state matrix
+    Bm (B, S, N)   input projection (shared across channels)
+    Cm (B, S, N)   output projection
+    h0 (B, C, N)   optional initial state.
+
+    h_t = exp(dt_t ⊙ A) ⊙ h_{t−1} + (dt_t ⊙ x_t) ⊗ B_t
+    y_t = ⟨h_t, C_t⟩_N
+
+    Returns (y (B,S,C), h_final (B,C,N)).  f32 math.
+    """
+    Bsz, S, C = x.shape
+    N = Bm.shape[-1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    h = (jnp.zeros((Bsz, C, N), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+
+    def step(h, t):
+        a = jnp.exp(dtf[:, t] * Af[None, :])               # (B, C)
+        inp = (dtf[:, t] * xf[:, t])[:, :, None] * Bf[:, t][:, None, :]
+        h = a[:, :, None] * h + inp                        # (B, C, N)
+        y = jnp.einsum("bcn,bn->bc", h, Cf[:, t])
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 1)                             # (B, S, C)
+    return y.astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# MoE gating (moe_gating.py)
+# ---------------------------------------------------------------------------
+
+def topk_gating_ref(logits: jax.Array, k: int):
+    """Softmax over experts, keep top-k, renormalize.
+
+    logits (T, E) → probs (T, k) f32, idx (T, k) int32.
+    Ties broken by lower expert index (jnp.top_k semantics)."""
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_i = jax.lax.top_k(p, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    return top_p, top_i.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Lasso coordinate-descent partials (lasso_cd.py)
+# ---------------------------------------------------------------------------
+
+def lasso_partial_ref(Xb: jax.Array, r: jax.Array) -> jax.Array:
+    """z_j = x_jᵀ r for the scheduled block: (n, U), (n,) → (U,) f32."""
+    return Xb.astype(jnp.float32).T @ r.astype(jnp.float32)
+
+
+def gram_ref(Xc: jax.Array) -> jax.Array:
+    """Candidate Gram block: (n, U′) → (U′, U′) f32."""
+    Xf = Xc.astype(jnp.float32)
+    return Xf.T @ Xf

@@ -1,0 +1,112 @@
+"""Chunked selective-state-space scan kernel (Mamba2-style diagonal SSM).
+
+Recurrence (per batch, channel c, state dim n):
+
+    h_t = exp(dt_t · A_c) · h_{t−1} + (dt_t · x_t) · B_t
+    y_t = Σ_n h_t[n] · C_t[n]
+
+TPU adaptation: the GPU Mamba kernel leans on warp shuffles for the
+intra-warp scan; TPUs have no warp analogue, so we restructure as a
+*chunked* scan — grid ``(B, num_chunks)`` with the chunk axis sequential
+(TPU grids execute in order), carrying the (C, N) state tile in VMEM
+scratch across chunk steps.  Inside a chunk we run a ``fori_loop`` over
+the chunk length with fully-vectorized (C, N) updates: the VPU processes
+the whole channel×state tile per step, so the sequential dimension is the
+only non-parallel axis, matching the recurrence's data dependency.
+
+Block sizes: chunk length is a tuning knob (§Perf); (C, N) tiles should be
+multiples of (8, 128) VREG lanes.  Validated in interpret mode against
+``ref.ssm_scan_ref``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _ssm_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref,
+                y_ref, hout_ref, h_ref, *, chunk: int, seq: int):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    A = a_ref[...].astype(jnp.float32)                     # (C,)
+
+    def step(t, h):
+        tok = j * chunk + t
+        live = tok < seq
+        dt = dt_ref[0, t].astype(jnp.float32)              # (C,)
+        xt = x_ref[0, t].astype(jnp.float32)               # (C,)
+        Bt = b_ref[0, t].astype(jnp.float32)               # (N,)
+        Ct = c_ref[0, t].astype(jnp.float32)               # (N,)
+        decay = jnp.exp(dt * A)                            # (C,)
+        h_new = decay[:, None] * h + (dt * xt)[:, None] * Bt[None, :]
+        h = jnp.where(live, h_new, h)
+        y = h @ Ct                                         # (C,)
+        y_ref[0, t] = jnp.where(live, y, 0.0).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(j == nj - 1)
+    def _final():
+        hout_ref[0] = h_ref[...].astype(hout_ref.dtype)
+
+
+def ssm_scan(x: jax.Array, dt: jax.Array, A: jax.Array,
+             Bm: jax.Array, Cm: jax.Array,
+             h0: Optional[jax.Array] = None,
+             chunk: int = DEFAULT_CHUNK,
+             interpret: bool = False):
+    """Chunked diagonal selective scan.
+
+    x, dt (B, S, C); A (C,); Bm, Cm (B, S, N); h0 (B, C, N) optional.
+    Returns (y (B, S, C), h_final (B, C, N) f32)."""
+    Bsz, S, C = x.shape
+    N = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, C, N), jnp.float32)
+
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        x, dt, Bm, Cm = map(zpad, (x, dt, Bm, Cm))
+    Sp = S + pad
+    grid = (Bsz, Sp // chunk)
+
+    kernel = functools.partial(_ssm_kernel, chunk=chunk, seq=S)
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, C), lambda b, j: (b, j, 0)),   # x
+            pl.BlockSpec((1, chunk, C), lambda b, j: (b, j, 0)),   # dt
+            pl.BlockSpec((C,), lambda b, j: (0,)),                 # A
+            pl.BlockSpec((1, chunk, N), lambda b, j: (b, j, 0)),   # B
+            pl.BlockSpec((1, chunk, N), lambda b, j: (b, j, 0)),   # C
+            pl.BlockSpec((1, C, N), lambda b, j: (b, 0, 0)),       # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, C), lambda b, j: (b, j, 0)),   # y
+            pl.BlockSpec((1, C, N), lambda b, j: (b, 0, 0)),       # h_final
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, Sp, C), x.dtype),
+            jax.ShapeDtypeStruct((Bsz, C, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((C, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm, h0)
+    return y[:, :S], hout

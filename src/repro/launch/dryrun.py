@@ -1,0 +1,175 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init); everything else follows.
+"""Multi-pod dry-run: ``.lower().compile()`` every (architecture × input
+shape) on the production meshes, record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch chatglm3-6b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results land in ``benchmarks/results/dryrun/<arch>__<shape>__<mesh>[__tag]
+.json`` (existing files are skipped unless --force), which
+``benchmarks/roofline.py`` renders into EXPERIMENTS.md §Dry-run/§Roofline.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCHS, INPUT_SHAPES, get_config
+from ..sharding.rules import activation_mesh
+from . import roofline as RL
+from .mesh import make_production_mesh
+from .specs import build, skip_reason
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+
+def _result_path(arch, shape, mesh_name, tag):
+    name = f"{arch}__{shape}__{mesh_name}"
+    if tag:
+        name += f"__{tag}"
+    return os.path.join(RESULTS_DIR, name + ".json")
+
+
+def run_one(arch: str, shape_name: str, mesh_name: str, tag: str = "",
+            keep_hlo: bool = False) -> dict:
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.size
+    out = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "chips": chips, "tag": tag or "baseline"}
+
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        out["skipped"] = reason
+        return out
+
+    from .specs import apply_variant
+    cfg = apply_variant(get_config(arch), tag or "baseline")
+    shp = INPUT_SHAPES[shape_name]
+    spec = build(arch, shape_name, mesh, variant=tag or "baseline")
+    out["meta"] = spec.meta
+
+    t0 = time.time()
+    with activation_mesh(mesh):
+        jitted = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                         donate_argnums=spec.donate_argnums)
+        lowered = jitted.lower(*spec.args)
+    out["lower_s"] = round(time.time() - t0, 2)
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    out["compile_s"] = round(time.time() - t0, 2)
+
+    # --- memory analysis (proves it fits) --------------------------------
+    try:
+        ma = compiled.memory_analysis()
+        mem = {k: int(getattr(ma, k)) for k in
+               ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes") if hasattr(ma, k)}
+        mem["total_per_device"] = (mem.get("argument_size_in_bytes", 0)
+                                   + mem.get("temp_size_in_bytes", 0)
+                                   + mem.get("output_size_in_bytes", 0)
+                                   - mem.get("alias_size_in_bytes", 0))
+        out["memory"] = mem
+    except Exception as e:                                   # pragma: no cover
+        out["memory"] = {"error": repr(e)}
+
+    # --- cost analysis (per-partition FLOPs / bytes) ---------------------
+    try:
+        ca = compiled.cost_analysis()
+        out["cost"] = {"flops": float(ca.get("flops", 0.0)),
+                       "bytes": float(ca.get("bytes accessed", 0.0)),
+                       "transcendentals":
+                           float(ca.get("transcendentals", 0.0))}
+    except Exception as e:                                   # pragma: no cover
+        out["cost"] = {"error": repr(e)}
+
+    # --- full HLO analysis (loop-trip-count aware) ------------------------
+    # XLA:CPU cost_analysis counts while bodies once; analyze_hlo walks the
+    # call graph and charges every dot/collective by its enclosing trip
+    # counts — see roofline.py.
+    hlo = compiled.as_text()
+    out["hlo_bytes"] = len(hlo)
+    ana = RL.analyze_hlo(hlo, chips)
+    out["hlo_analysis"] = ana.to_json()
+    if keep_hlo:
+        path = _result_path(arch, shape_name, mesh_name, tag) + ".hlo"
+        with open(path, "w") as f:
+            f.write(hlo)
+
+    # --- roofline terms ---------------------------------------------------
+    out["roofline"] = RL.roofline_terms(ana.flops, ana.bytes,
+                                        ana.wire_bytes)
+    out["roofline_raw_cost_analysis"] = RL.roofline_terms(
+        out["cost"].get("flops", 0.0), out["cost"].get("bytes", 0.0),
+        ana.wire_bytes)
+    useful = RL.model_flops(cfg, shp)
+    out["model_flops"] = useful
+    hlo_flops_global = ana.flops * chips
+    out["useful_flops_ratio"] = (useful / hlo_flops_global
+                                 if hlo_flops_global else 0.0)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape) pair")
+    ap.add_argument("--tag", default="", help="variant tag (e.g. 'opt')")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    pairs = ([(a, s) for a in ARCHS for s in INPUT_SHAPES]
+             if args.all else [(args.arch, args.shape)])
+
+    failures = []
+    for arch, shape in pairs:
+        for mesh_name in meshes:
+            path = _result_path(arch, shape, mesh_name, args.tag)
+            if os.path.exists(path) and not args.force:
+                print(f"[skip-cached] {arch} {shape} {mesh_name}")
+                continue
+            print(f"[dryrun] {arch} × {shape} × {mesh_name} ...",
+                  flush=True)
+            try:
+                res = run_one(arch, shape, mesh_name, args.tag,
+                              args.keep_hlo)
+            except Exception:
+                print(traceback.format_exc())
+                failures.append((arch, shape, mesh_name))
+                res = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "tag": args.tag or "baseline",
+                       "error": traceback.format_exc(limit=3)}
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            if "skipped" in res:
+                print(f"  skipped: {res['skipped']}")
+            elif "error" not in res:
+                r = res["roofline"]
+                print(f"  lower {res['lower_s']}s compile {res['compile_s']}s"
+                      f"  mem/dev {res['memory'].get('total_per_device', -1)/2**30:.2f} GiB"
+                      f"  Tc {r['t_compute']*1e3:.2f}ms Tm {r['t_memory']*1e3:.2f}ms"
+                      f"  Tx {r['t_collective']*1e3:.2f}ms → {r['dominant']}")
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,467 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds-per-step on the
+TPU v5e target (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI):
+
+    T_compute    = HLO_FLOPs_per_chip / 197e12
+    T_memory     = HLO_bytes_per_chip / 819e9
+    T_collective = Σ ring-model wire bytes per chip / 50e9
+
+``cost_analysis()`` provides per-partition FLOPs/bytes (the compiled
+module is the per-device SPMD program).  Collective bytes are NOT in
+cost_analysis — we parse the post-SPMD HLO text and apply a ring cost
+model per op:
+
+    all-gather        F·(n−1)/n      (F = full/result tensor bytes)
+    reduce-scatter    F·(n−1)/n      (F = n × result bytes)
+    all-reduce        2·F·(n−1)/n
+    all-to-all        F·(n−1)/n
+    collective-permute F
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result types of an op line: e.g. "bf16[2,512,320]{2,1,0}" (maybe inside
+# a tuple "(bf16[..], f32[..])")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\w+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(typestr: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(typestr):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))               # [num_groups, group_size]
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0                  # ring-model bytes per chip
+    by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+    def to_json(self):
+        return {"wire_bytes": self.wire_bytes, "by_kind": self.by_kind,
+                "count": self.count}
+
+
+def parse_collectives(hlo_text: str, total_devices: int) -> CollectiveStats:
+    """Scan post-SPMD HLO for collectives; sum ring-model wire bytes."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        typestr, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue                          # counted at -start
+        result_bytes = _shape_bytes(typestr)
+        if result_bytes == 0:
+            continue
+        n = max(_group_size(line, total_devices), 1)
+        if n == 1:
+            continue
+        if kind == "all-gather":
+            wire = result_bytes * (n - 1) / n
+        elif kind == "reduce-scatter":
+            wire = result_bytes * (n - 1)     # result is F/n
+        elif kind == "all-reduce":
+            wire = 2 * result_bytes * (n - 1) / n
+        elif kind == "all-to-all":
+            wire = result_bytes * (n - 1) / n
+        else:                                 # collective-permute
+            wire = result_bytes
+        stats.wire_bytes += wire
+        stats.by_kind[kind] = stats.by_kind.get(kind, 0.0) + wire
+        stats.count += 1
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Full HLO analysis with while-loop trip-count multiplication
+# ---------------------------------------------------------------------------
+#
+# XLA:CPU's ``compiled.cost_analysis()`` counts each while-loop *body* once,
+# so a scan-over-layers program under-reports FLOPs/bytes by ~num_layers×
+# (and the naive collective scan under-reports wire bytes the same way).
+# This analyzer parses the post-SPMD HLO text, builds the computation call
+# graph, extracts loop trip counts from the canonical counter-compare
+# pattern, and charges every dot/collective/op by the product of its
+# enclosing trip counts.
+
+_CALLED_RE = re.compile(r"(?:body|condition|to_apply|calls|"
+                        r"called_computations=\{)=?%?([\w.\-]+)")
+_FUSION_CALL_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"%?([\w.\-]+)\s*=\s*s(?:8|16|32|64)\[\]\s+"
+                       r"constant\((\d+)\)")
+
+
+def _parse_instr(line: str):
+    """Parse '[ROOT ]%name = <type> <op>(...' with a balanced-paren scan
+    (regex breaks on tuple types containing /*index=N*/ comments).
+    Returns (name, typestr, op) or None."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%") and "=" not in s.split(" ", 1)[0]:
+        if "=" not in s:
+            return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[:eq].strip().lstrip("%")
+    rest = s[eq + 3:].lstrip()
+    if rest.startswith("("):                 # tuple type: balanced scan
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    typestr = rest[:i + 1]
+                    tail = rest[i + 1:].lstrip()
+                    break
+        else:
+            return None
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        typestr = rest[:sp]
+        tail = rest[sp + 1:].lstrip()
+    op = tail.split("(", 1)[0].strip()
+    if not op or not re.fullmatch(r"[\w\-]+", op):
+        return None
+    return name, typestr, op
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+
+
+def _split_top(s: str) -> List[str]:
+    """Split on commas at paren/bracket depth 0."""
+    out, depth, buf = [], 0, ""
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append(buf.strip())
+            buf = ""
+        else:
+            buf += ch
+    if buf.strip():
+        out.append(buf.strip())
+    return out
+
+
+def _parse_computations(text: str):
+    """Split HLO text into computations: name → list of instruction lines,
+    plus name → parameter declarations.  Handles tuple-typed parameters
+    (nested parens) that defeat a naive regex."""
+    comps: Dict[str, List[str]] = {}
+    params: Dict[str, List[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        s = line.strip()
+        if cur is None:
+            if (s.endswith("{") and ") -> " in s
+                    and "=" not in s.split("(", 1)[0]):
+                head = s[:-1].strip()
+                if head.startswith("ENTRY "):
+                    head = head[len("ENTRY "):]
+                name = head.split("(", 1)[0].strip().lstrip("%")
+                psec = head.split("(", 1)[1].rsplit(") ->", 1)[0]
+                comps[name] = []
+                params[name] = _split_top(psec)
+                cur = name
+        else:
+            if s == "}" or s.startswith("}, "):
+                cur = None
+            else:
+                comps[cur].append(s)
+    return comps, params
+
+
+def _shape_dims(typestr: str):
+    m = _SHAPE_RE.search(typestr)
+    if not m:
+        return None, ()
+    dt = m.group(1)
+    dims = tuple(int(d) for d in m.group(2).split(",")) if m.group(2) \
+        else ()
+    return dt, dims
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Trip count from the canonical `compare(counter, constant), LT`
+    pattern in a while condition (scan lowers to this)."""
+    consts = {}
+    for ln in cond_lines:
+        m = _CONST_RE.search(ln)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for ln in cond_lines:
+        if " compare(" not in ln:
+            continue
+        ops = _OPERANDS_RE.search(ln.split("compare", 1)[1])
+        if not ops:
+            continue
+        names = [o.strip().lstrip("%").split(" ")[-1].lstrip("%")
+                 for o in ops.group(1).split(",")]
+        for n in names:
+            n = n.split("]")[-1].strip().lstrip("%")
+            if n in consts:
+                return max(consts[n], 1)
+        # operand may be typed: "s32[] %constant.5"
+        for o in ops.group(1).split(","):
+            o = o.strip()
+            for cname, val in consts.items():
+                if o.endswith(cname):
+                    return max(val, 1)
+    # compare may be wrapped in a fusion; fall back to the largest s32
+    # constant in the condition (the loop bound in canonical scans)
+    if consts:
+        return max(max(consts.values()), 1)
+    return 1
+
+
+@dataclasses.dataclass
+class HloAnalysis:
+    flops: float = 0.0                   # per-chip dot/conv FLOPs
+    bytes: float = 0.0                   # per-chip operand+result bytes
+    wire_bytes: float = 0.0              # per-chip ring-model collective B
+    by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_count: int = 0
+    loop_multipliers: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+
+    def to_json(self):
+        return {"flops": self.flops, "bytes": self.bytes,
+                "wire_bytes": self.wire_bytes, "by_kind": self.by_kind,
+                "collective_count": self.collective_count}
+
+
+def analyze_hlo(text: str, total_devices: int) -> HloAnalysis:
+    comps, params = _parse_computations(text)
+
+    # --- computation multipliers via the call graph -----------------------
+    # multiplier(entry) = 1; a while body/condition inherits caller × trip.
+    callers: Dict[str, List[Tuple[str, int]]] = {c: [] for c in comps}
+    fusion_called: Dict[str, bool] = {}      # comp → called ONLY as fusion
+    for cname, lines in comps.items():
+        for ln in lines:
+            parsed = _parse_instr(ln)
+            op = parsed[2] if parsed else ""
+            if op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", ln)
+                cm = re.search(r"condition=%?([\w.\-]+)", ln)
+                if bm and cm and bm.group(1) in comps:
+                    ktc = re.search(r'known_trip_count[^0-9]*"n":"(\d+)"',
+                                    ln)
+                    trip = (int(ktc.group(1)) if ktc
+                            else _trip_count(comps[cm.group(1)]))
+                    callers[bm.group(1)].append((cname, trip))
+                    fusion_called.setdefault(bm.group(1), False)
+                    fusion_called[bm.group(1)] = False
+                    if cm.group(1) in comps:
+                        callers[cm.group(1)].append((cname, trip))
+                        fusion_called[cm.group(1)] = False
+            else:
+                fus = set(c for c in _FUSION_CALL_RE.findall(ln)
+                          if c in comps)
+                for c in _CALLED_RE.findall(ln):
+                    if c not in comps:
+                        continue
+                    callers[c].append((cname, 1))
+                    is_fus = c in fus
+                    if c in fusion_called:
+                        fusion_called[c] = fusion_called[c] and is_fus
+                    else:
+                        fusion_called[c] = is_fus
+
+    mult: Dict[str, int] = {}
+
+    def get_mult(c: str, depth=0) -> int:
+        if c in mult:
+            return mult[c]
+        if depth > 50 or not callers[c]:
+            mult[c] = 1
+            return 1
+        mult[c] = max(get_mult(p, depth + 1) * t for p, t in callers[c])
+        return mult[c]
+
+    # --- per-instruction accounting ---------------------------------------
+    out = HloAnalysis()
+    for cname, lines in comps.items():
+        m_c = get_mult(cname)
+        if m_c > 1:
+            out.loop_multipliers[cname] = m_c
+        # Ops inside fusion bodies stay in registers/loop scope: they move
+        # no HBM bytes themselves (the fusion call site is charged), but
+        # dots inside fusions are still real FLOPs.
+        in_fusion_body = fusion_called.get(cname, False)
+        # symbol table: instr name → typestr (incl. computation params)
+        symtab: Dict[str, str] = {}
+        for p in params.get(cname, []):
+            parts = p.split(":", 1)
+            if len(parts) == 2:
+                symtab[parts[0].strip().lstrip("%")] = parts[1].strip()
+        parsed_lines = []
+        for ln in lines:
+            pr = _parse_instr(ln)
+            if pr:
+                symtab[pr[0]] = pr[1]
+                parsed_lines.append((ln, pr))
+        for ln, (name, typestr, op) in parsed_lines:
+            result_bytes = _shape_bytes(typestr)
+            if op in ("parameter", "constant", "get-tuple-element",
+                      "tuple", "bitcast", "after-all"):
+                continue
+            if not in_fusion_body:
+                # memory: result + operands (≈ bytes-accessed at HBM)
+                opnds = _OPERANDS_RE.search(ln.split(op + "(", 1)[-1]
+                                            if op + "(" in ln else ln)
+                body = ln.split(op + "(", 1)
+                operand_bytes = 0
+                if len(body) == 2:
+                    # operands run to the matching close paren
+                    depth, buf = 1, ""
+                    for ch in body[1]:
+                        if ch == "(":
+                            depth += 1
+                        elif ch == ")":
+                            depth -= 1
+                            if depth == 0:
+                                break
+                        buf += ch
+                    for o in _split_top(buf):
+                        o = o.strip().lstrip("%")
+                        o = o.split(" ")[-1].lstrip("%")
+                        if o in symtab:
+                            operand_bytes += _shape_bytes(symtab[o])
+                        elif "[" in o:
+                            operand_bytes += _shape_bytes(o)
+                out.bytes += (result_bytes + operand_bytes) * m_c
+
+            if op == "dot":
+                dt, rdims = _shape_dims(typestr)
+                n_out = 1
+                for dd in rdims:
+                    n_out *= dd
+                cdims = _DOT_DIMS_RE.search(ln)
+                csize = 1
+                args = ln.split(op + "(", 1)
+                if cdims and len(args) == 2:
+                    first = _split_top(args[1].rsplit(")", 1)[0])[0].strip()
+                    first = first.lstrip("%")
+                    lhs_t = (first if "[" in first
+                             else symtab.get(first.split(" ")[-1], ""))
+                    _, ldims = _shape_dims(lhs_t)
+                    for ci in cdims.group(1).split(","):
+                        if ci != "" and int(ci) < len(ldims):
+                            csize *= ldims[int(ci)]
+                out.flops += 2.0 * n_out * csize * m_c
+            elif op in _COLLECTIVES or any(
+                    op == c + s for c in _COLLECTIVES
+                    for s in ("-start",)):
+                base = op.replace("-start", "")
+                if base not in _COLLECTIVES:
+                    continue
+                n = max(_group_size(ln, total_devices), 1)
+                if n == 1:
+                    continue
+                if base == "all-gather":
+                    wire = result_bytes * (n - 1) / n
+                elif base == "reduce-scatter":
+                    wire = result_bytes * (n - 1)
+                elif base == "all-reduce":
+                    wire = 2 * result_bytes * (n - 1) / n
+                elif base == "all-to-all":
+                    wire = result_bytes * (n - 1) / n
+                else:
+                    wire = result_bytes
+                out.wire_bytes += wire * m_c
+                out.by_kind[base] = out.by_kind.get(base, 0.0) + wire * m_c
+                out.collective_count += m_c
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful model FLOPs per step: 6·N·D train, 2·N·D inference
+    (N = active params for MoE)."""
+    n = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch      # decode: one token per seq
+
+
+def active_params(cfg) -> int:
+    """Active-per-token parameter count from the real template (excludes
+    non-routed experts; embeddings counted once)."""
+    from ..models import model as M
+    total = M.num_params(cfg)
+    if cfg.family != "moe":
+        return total
+    # subtract the non-active expert weights
+    from ..models.transformer import group_layout
+    steps, subs = group_layout(cfg)
+    moe_layers = sum(1 for _, k in subs if k == "moe") * steps
+    per_expert = 3 * cfg.d_model * cfg.d_ff
+    inactive = moe_layers * (cfg.num_experts - cfg.experts_per_token) \
+        * per_expert
+    return total - inactive
+
+
+def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
+                   wire_bytes_per_chip: float) -> Dict[str, float]:
+    t_c = flops_per_chip / PEAK_FLOPS
+    t_m = bytes_per_chip / HBM_BW
+    t_x = wire_bytes_per_chip / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    return {"t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+            "dominant": dom[1],
+            "bound_s": max(t_c, t_m, t_x)}

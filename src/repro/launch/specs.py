@@ -1,0 +1,191 @@
+"""Per-(arch × input-shape) step functions and ShapeDtypeStruct input
+specs for the multi-pod dry-run.
+
+``build(arch, shape_name, mesh, ...)`` returns a :class:`LoweringSpec`
+with the step function to jit, abstract inputs (weak-type-correct,
+sharding-annotated, zero allocation) and in_shardings — everything
+``dryrun.py`` needs to ``.lower().compile()``.
+
+Shape semantics (DESIGN.md §6):
+  train_4k     → train_step          (all 10 archs)
+  prefill_32k  → prefill_step        (hubert: encode_step — encoder fwd)
+  decode_32k   → decode_step, full 32k cache   (hubert skipped)
+  long_500k    → decode_step, sub-quadratic path: recurrent state for
+                 ssm/hybrid, ring-buffer sliding-window cache
+                 (LONG_WINDOW=8192) for attention archs (hubert skipped)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from ..configs import INPUT_SHAPES, get_config
+from ..models import model as M
+from ..optim.adamw import AdamWConfig, adamw_init
+from ..sharding import rules
+from ..train.serve import LONG_WINDOW
+from ..train.step import TrainConfig, make_train_step
+
+
+@dataclasses.dataclass
+class LoweringSpec:
+    arch: str
+    shape: str
+    fn: Callable                      # positional-args step function
+    args: Tuple[Any, ...]             # ShapeDtypeStructs (sharded)
+    in_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+    skip_reason: Optional[str] = None
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def skip_reason(arch: str, shape_name: str) -> Optional[str]:
+    cfg = get_config(arch)
+    kind = INPUT_SHAPES[shape_name].kind
+    if cfg.encoder_only and kind == "decode":
+        return "encoder-only (hubert): no autoregressive decode step"
+    return None
+
+
+def _abstract(shape, dtype, mesh, axes):
+    return jax.ShapeDtypeStruct(
+        shape, dtype,
+        sharding=NamedSharding(mesh, rules.resolve(mesh, axes, shape)))
+
+
+def _batch_specs(cfg, B: int, S: int, mesh, with_labels: bool):
+    d = jnp.dtype(cfg.dtype)
+    batch: Dict[str, Any] = {}
+    tok_axes = (rules.BATCH, None)
+    if cfg.frontend == "audio":
+        batch["frames"] = _abstract((B, S, cfg.d_model), d, mesh,
+                                    (rules.BATCH, None, None))
+    else:
+        batch["tokens"] = _abstract((B, S), jnp.int32, mesh, tok_axes)
+    if cfg.frontend == "vision":
+        batch["frontend"] = _abstract((B, cfg.frontend_tokens, cfg.d_model),
+                                      d, mesh, (rules.BATCH, None, None))
+    if with_labels:
+        batch["labels"] = _abstract((B, S), jnp.int32, mesh, tok_axes)
+    return batch
+
+
+def _tree_shardings(tree):
+    return jax.tree_util.tree_map(lambda x: x.sharding, tree)
+
+
+def train_adamw_config(cfg) -> AdamWConfig:
+    """Very large models keep AdamW moments in bf16 so params+moments fit
+    the 256-chip HBM budget (DESIGN.md §7)."""
+    big = M.num_params(cfg) > 100e9
+    return AdamWConfig(moment_dtype="bfloat16" if big else "float32")
+
+
+def abstract_train_state(cfg, mesh, ac: AdamWConfig):
+    params = M.abstract_params(cfg, mesh)
+    mdt = jnp.dtype(ac.moment_dtype)
+    mom = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, mdt, sharding=p.sharding),
+        params)
+    count = jax.ShapeDtypeStruct((), jnp.int32,
+                                 sharding=NamedSharding(mesh,
+                                                        PartitionSpec()))
+    step = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(mesh,
+                                                       PartitionSpec()))
+    return {"params": params,
+            "opt": {"m": mom, "v": jax.tree_util.tree_map(lambda x: x, mom),
+                    "count": count},
+            "step": step}
+
+
+def apply_variant(cfg, variant: str):
+    """§Perf variants: beyond-paper optimizations, selectable per dry-run
+    tag so baseline and optimized artifacts coexist in the results dir."""
+    if variant == "opt":
+        if cfg.family == "moe":
+            cfg = dataclasses.replace(cfg, moe_impl="sort")
+        if cfg.family in ("ssm", "hybrid") and cfg.ssm_state:
+            cfg = dataclasses.replace(cfg, ssm_impl="ssd")
+    elif variant.startswith("opt-ssd") and cfg.ssm_state:
+        cfg = dataclasses.replace(cfg, ssm_impl="ssd")
+    # any other tag labels a code-state (sharding/layout changes live in
+    # the default path); config is unchanged
+    return cfg
+
+
+def build(arch: str, shape_name: str, mesh,
+          variant: str = "baseline") -> LoweringSpec:
+    cfg = apply_variant(get_config(arch), variant)
+    shp = INPUT_SHAPES[shape_name]
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        return LoweringSpec(arch, shape_name, None, (), None,
+                            skip_reason=reason)
+    B, S = shp.global_batch, shp.seq_len
+
+    if shp.kind == "train":
+        ac = train_adamw_config(cfg)
+        # grad accumulation for very large models: 4 microbatches brings
+        # the llama4-class activation footprint under the 16 GiB v5e HBM
+        # (§Perf iteration 3)
+        mb = 1
+        n_params = M.num_params(cfg)
+        if variant not in ("baseline", "", "opt"):
+            if n_params > 100e9:
+                mb = 8 if variant == "opt4" else 4
+            elif n_params > 30e9 or variant == "opt-mb2":
+                mb = 2
+        tc = TrainConfig(adamw=ac, microbatches=mb)
+        state = abstract_train_state(cfg, mesh, ac)
+        batch = _batch_specs(cfg, B, S, mesh, with_labels=True)
+        fn = make_train_step(cfg, tc)
+        args = (state, batch)
+        return LoweringSpec(arch, shape_name, fn, args,
+                            _tree_shardings(args), donate_argnums=(0,),
+                            meta={"moment_dtype": ac.moment_dtype})
+
+    params = M.abstract_params(cfg, mesh)
+
+    if shp.kind == "prefill":
+        batch = _batch_specs(cfg, B, S, mesh, with_labels=False)
+        if cfg.encoder_only:
+            fn = lambda p, b: M.encode_step(cfg, p, b)
+            meta = {"adapted": "encoder forward (no KV cache)"}
+        else:
+            fn = lambda p, b: M.prefill(cfg, p, b, cache_len=S)
+            meta = {"cache_len": S}
+        args = (params, batch)
+        return LoweringSpec(arch, shape_name, fn, args,
+                            _tree_shardings(args), meta=meta)
+
+    # decode kinds
+    long = shape_name == "long_500k"
+    window = LONG_WINDOW if (long and _needs_window(cfg)) else None
+    cache_len = (window if window is not None else S)
+    cache = M.abstract_cache(cfg, B, cache_len, mesh)
+    token = _abstract((B,), jnp.int32, mesh, (rules.BATCH,))
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, PartitionSpec()))
+    fn = lambda p, c, t, q: M.decode_step(cfg, p, c, t, q, window=window)
+    args = (params, cache, token, pos)
+    return LoweringSpec(arch, shape_name, fn, args, _tree_shardings(args),
+                        donate_argnums=(1,),
+                        meta={"cache_len": cache_len, "window": window,
+                              "sub_quadratic":
+                                  "recurrent state" if cfg.family == "ssm"
+                                  else ("hybrid state + windowed shared attn"
+                                        if cfg.family == "hybrid"
+                                        else (f"sliding window {window}"
+                                              if window else "full cache"))})
+
+
+def _needs_window(cfg) -> bool:
+    """Archs whose only sequence mixer is attention need the sliding-window
+    variant for long_500k; hybrids window their (shared) attention blocks
+    too, since a 500k dense cache per shared block would defeat the point."""
+    return cfg.family in ("dense", "vlm", "moe", "hybrid")

@@ -1,0 +1,5 @@
+from .model import (  # noqa: F401
+    init_params, forward, prefill, decode_step, encode_step,
+    param_template, param_specs, abstract_params,
+    init_cache, abstract_cache, cache_spec_tree,
+)

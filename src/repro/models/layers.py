@@ -1,0 +1,305 @@
+"""Shared transformer layers: norms, RoPE, GQA attention (full / sliding-
+window / decode-with-ring-buffer), SwiGLU MLP.
+
+Attention dispatches between three execution paths:
+  * the Pallas flash kernel (TPU target; ``kernels/flash_attention.py``),
+  * a chunked-online-softmax XLA path for long sequences on CPU/compile
+    (memory O(S·chunk) instead of O(S²)),
+  * the plain reference einsum for short sequences.
+
+All functions are pure; parameters arrive as dicts built from the
+templates in :mod:`repro.models.model`.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from ..kernels.ref import NEG_INF
+from ..sharding import rules
+from ..sharding.rules import constrain
+from .params import ParamMeta
+
+# Chunked attention kicks in above this query length (keeps the S×S score
+# matrix out of the compiled memory footprint).
+CHUNKED_ATTN_THRESHOLD = 2048
+ATTN_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale + bias
+
+
+def norm_template(cfg) -> Dict[str, ParamMeta]:
+    t = {"scale": ParamMeta((cfg.d_model,), (None,), "ones")}
+    if cfg.norm == "ln":
+        t["bias"] = ParamMeta((cfg.d_model,), (None,), "zeros")
+    return t
+
+
+def apply_norm(p: Dict[str, jax.Array], x: jax.Array, cfg) -> jax.Array:
+    if cfg.norm == "ln":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (with partial-dim "2d" variant: rotary over a fraction of head_dim)
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float,
+         fraction: float) -> jax.Array:
+    """x (..., S, H, D); positions (..., S) int32 absolute positions."""
+    D = x.shape[-1]
+    rot = int(D * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    half = rot // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq     # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                          # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:rot]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([xr1, xr2, x[..., rot:]], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention_template(cfg, d_in: Optional[int] = None) -> Dict[str, Any]:
+    d = d_in if d_in is not None else cfg.d_model
+    hq, hkv = rules.padded_heads(cfg.num_heads, cfg.num_kv_heads)
+    hd = cfg.head_dim_
+    kv_ax = rules.TENSOR if hkv % rules.MODEL_AXIS_SIZE == 0 else None
+    return {
+        "norm": norm_template(cfg),
+        "wq": ParamMeta((d, hq, hd), (rules.FSDP, rules.TENSOR, None)),
+        "wk": ParamMeta((d, hkv, hd), (rules.FSDP, kv_ax, None)),
+        "wv": ParamMeta((d, hkv, hd), (rules.FSDP, kv_ax, None)),
+        "wo": ParamMeta((hq, hd, cfg.d_model), (rules.TENSOR, None, rules.FSDP)),
+    }
+
+
+def _attn_mask(Sq, Skv, q_offset, causal, window):
+    q_ids = jnp.arange(Sq)[:, None] + q_offset
+    k_ids = jnp.arange(Skv)[None, :]
+    m = jnp.ones((Sq, Skv), bool)
+    if causal:
+        m &= q_ids >= k_ids
+    if window is not None:
+        m &= (q_ids - k_ids) < window
+    return m
+
+
+def _use_flat_heads(Hq: int, Hkv: int) -> bool:
+    """Flat-head (repeated-KV) attention when KV heads can't shard over
+    the model axis but query heads can: the grouped (K, G) layout would
+    otherwise make GSPMD partition the score contraction over head_dim
+    (grp-8 all-reduces inside the chunk loop — found in the llama4 §Perf
+    iteration).  The KV repeat is collective-free (each chip slices its
+    own q-heads' copy) and small (Hkv ≤ 8 here by construction)."""
+    m = rules.MODEL_AXIS_SIZE
+    return Hkv % m != 0 and Hq % m == 0
+
+
+def _sdpa(q, k, v, *, causal: bool, window: Optional[int],
+          q_offset) -> jax.Array:
+    """GQA attention, f32 math, returns q.dtype.  Two layouts:
+    grouped (no KV materialization) when KV heads shard; flat repeated-KV
+    (q-head-sharded scores) otherwise.  ``q_offset``: absolute position
+    of q[0] (int or traced scalar)."""
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = H // Hkv
+    m = _attn_mask(Sq, Skv, q_offset, causal, window)
+    if _use_flat_heads(H, Hkv):
+        qf = q.astype(jnp.float32) * D ** -0.5
+        kf = jnp.repeat(k, G, axis=2).astype(jnp.float32)
+        vf = jnp.repeat(v, G, axis=2).astype(jnp.float32)
+        kf = constrain(kf, (rules.BATCH, None, rules.TENSOR, None))
+        vf = constrain(vf, (rules.BATCH, None, rules.TENSOR, None))
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+        s = jnp.where(m[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+        return o.astype(q.dtype)
+    qg = (q.astype(jnp.float32) * D ** -0.5).reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+_sdpa_grouped = lambda q, k, v, *, causal, window, q_offset: _sdpa(
+    q, k, v, causal=causal, window=window, q_offset=q_offset)
+
+
+def _chunked_attention(q, k, v, *, causal: bool, window: Optional[int],
+                       chunk: int = ATTN_CHUNK) -> jax.Array:
+    """Online attention scanned over query chunks (XLA flash analogue).
+
+    Memory O(chunk·Skv) per step instead of O(Sq·Skv); the Pallas kernel
+    is the TPU equivalent with explicit VMEM tiles."""
+    B, Sq, H, D = q.shape
+    _, Skv, _, _ = k.shape
+    nq = -(-Sq // chunk)
+    pad = nq * chunk - Sq
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qs = jnp.moveaxis(qp.reshape(B, nq, chunk, H, D), 1, 0)
+    off = Skv - Sq
+
+    def step(_, args):
+        i, qc = args
+        o = _sdpa(qc, k, v, causal=causal, window=window,
+                  q_offset=i * chunk + off)
+        return None, o
+
+    _, outs = jax.lax.scan(step, None, (jnp.arange(nq), qs))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * chunk, H, D)
+    return out[:, :Sq]
+
+
+def attend(q, k, v, *, causal: bool, window: Optional[int]) -> jax.Array:
+    if q.shape[1] > CHUNKED_ATTN_THRESHOLD:
+        return _chunked_attention(q, k, v, causal=causal, window=window)
+    if jax.default_backend() == "tpu":
+        return ops.attention(q, k, v, causal=causal, window=window)
+    return _sdpa(q, k, v, causal=causal, window=window,
+                 q_offset=k.shape[1] - q.shape[1])
+
+
+def _decode_attend(q, ck, cv, kpos, pos, window: Optional[int]) -> jax.Array:
+    """Single-token attention against a (ring-buffer) cache.
+
+    q (B,1,H,D); ck/cv (B,Sc,Hkv,D); kpos (Sc,) absolute position of each
+    cache slot (−1 = empty); pos () current absolute position."""
+    B, _, H, D = q.shape
+    _, Sc, Hkv, _ = ck.shape
+    G = H // Hkv
+    qg = (q.astype(jnp.float32) * D ** -0.5).reshape(B, 1, Hkv, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, ck.astype(jnp.float32))
+    valid = (kpos >= 0) & (kpos <= pos)
+    if window is not None:
+        valid &= (pos - kpos) < window
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jnp.exp(s - jax.scipy.special.logsumexp(s, axis=-1, keepdims=True))
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, cv.astype(jnp.float32))
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def attention_apply(p: Dict[str, Any], x: jax.Array, cfg, *,
+                    positions: jax.Array,
+                    cache: Optional[Dict[str, jax.Array]] = None,
+                    kpos: Optional[jax.Array] = None,
+                    slot: Optional[jax.Array] = None,
+                    causal: bool = True,
+                    window: Optional[int] = None,
+                    ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Pre-norm GQA attention block (residual included).
+
+    Train/prefill: ``cache=None`` → full self-attention over ``x``.
+    Prefill-with-cache: pass a zeroed cache dict → it is filled and
+    returned.  Decode: ``x`` is (B,1,d); ``cache`` holds keys/values,
+    ``kpos`` their absolute positions, ``slot`` the ring-buffer index to
+    write; returns the updated cache.
+    """
+    h = apply_norm(p["norm"], x, cfg)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(h.dtype))
+    q = rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    k = rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    q = constrain(q, (rules.BATCH, None, rules.TENSOR, None))
+
+    new_cache = None
+    if cache is None:
+        out = attend(q, k, v, causal=causal, window=window)
+    elif x.shape[1] == 1:                                   # decode step
+        ck = jax.lax.dynamic_update_index_in_dim(cache["k"], k[:, 0], slot, 1)
+        cv = jax.lax.dynamic_update_index_in_dim(cache["v"], v[:, 0], slot, 1)
+        out = _decode_attend(q, ck, cv, kpos, positions[0], window)
+        new_cache = {"k": ck, "v": cv}
+    else:                                                   # prefill, fill cache
+        out = attend(q, k, v, causal=causal, window=window)
+        Sc = cache["k"].shape[1]
+        S = k.shape[1]
+        if Sc >= S:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 1)
+        else:
+            # ring buffer keeps the tail, rolled so slot j holds the key
+            # of absolute position p ≡ j (mod Sc) — the same invariant
+            # decode writes with (slot = pos % Sc).
+            shift = (S - Sc) % Sc
+            ck = jnp.roll(k[:, S - Sc:], shift, axis=1)
+            cv = jnp.roll(v[:, S - Sc:], shift, axis=1)
+        new_cache = {"k": ck, "v": cv}
+    out = constrain(out, (rules.BATCH, None, rules.TENSOR, None))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(out.dtype))
+    y = constrain(y, (rules.BATCH, rules.SEQ, None))
+    return x + y, new_cache
+
+
+def attention_cache_template(cfg, batch: int, cache_len: int, dtype):
+    hq, hkv = rules.padded_heads(cfg.num_heads, cfg.num_kv_heads)
+    hd = cfg.head_dim_
+    kv_ax = rules.TENSOR if hkv % rules.MODEL_AXIS_SIZE == 0 else None
+    seq_ax = rules.CACHE_SEQ if kv_ax is None else None
+    batch_ax = rules.BATCH
+    return {
+        "k": ParamMeta((batch, cache_len, hkv, hd),
+                       (batch_ax, seq_ax, kv_ax, None), "zeros"),
+        "v": ParamMeta((batch, cache_len, hkv, hd),
+                       (batch_ax, seq_ax, kv_ax, None), "zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_template(cfg, d_ff: Optional[int] = None) -> Dict[str, Any]:
+    f = d_ff if d_ff is not None else cfg.d_ff
+    d = cfg.d_model
+    return {
+        "norm": norm_template(cfg),
+        "wg": ParamMeta((d, f), (rules.FSDP, rules.TENSOR)),
+        "wu": ParamMeta((d, f), (rules.FSDP, rules.TENSOR)),
+        "wd": ParamMeta((f, d), (rules.TENSOR, rules.FSDP)),
+    }
+
+
+def mlp_apply(p: Dict[str, Any], x: jax.Array, cfg) -> jax.Array:
+    h = apply_norm(p["norm"], x, cfg)
+    g = jnp.einsum("bsd,df->bsf", h, p["wg"].astype(h.dtype))
+    u = jnp.einsum("bsd,df->bsf", h, p["wu"].astype(h.dtype))
+    g = constrain(g, (rules.BATCH, None, rules.TENSOR))
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u,
+                   p["wd"].astype(h.dtype))
+    y = constrain(y, (rules.BATCH, rules.SEQ, None))
+    return x + y

@@ -1,0 +1,219 @@
+"""Public model API: ``init_params`` / ``forward`` / ``prefill`` /
+``decode_step`` / ``encode_step`` plus the template/spec/abstract helpers
+the launcher uses for pjit and the multi-pod dry-run.
+
+All functions are pure and take the :class:`repro.configs.base.ModelConfig`
+explicitly; parameters are nested dicts built from
+:func:`transformer.stack_template`.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from ..sharding import rules
+from ..sharding.rules import constrain
+from . import params as P
+from .transformer import apply_stack, cache_template, stack_template, \
+    _has_attention
+from .layers import apply_norm
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def param_template(cfg):
+    return stack_template(cfg)
+
+
+def init_params(cfg, rng: jax.Array):
+    return P.init(stack_template(cfg), rng, _dtype(cfg))
+
+
+def param_specs(cfg, mesh):
+    return P.specs(stack_template(cfg), mesh)
+
+
+def abstract_params(cfg, mesh=None):
+    return P.abstract(stack_template(cfg), _dtype(cfg), mesh)
+
+
+def num_params(cfg) -> int:
+    return P.param_count(stack_template(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def _embed(cfg, prm, tokens: jax.Array) -> jax.Array:
+    emb = prm["tok_embed"]
+    x = jnp.take(emb, tokens, axis=0).astype(_dtype(cfg))
+    return x * cfg.d_model ** 0.5 if cfg.scale_embed else x
+
+
+def _logits(cfg, prm, x: jax.Array) -> jax.Array:
+    x = apply_norm(prm["final_norm"], x, cfg)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            prm["tok_embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            prm["lm_head"].astype(x.dtype))
+    return constrain(logits, (rules.BATCH, None, rules.VOCAB))
+
+
+def _inputs(cfg, prm, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, int]:
+    """Token/frontend embeddings.  Returns (x (B,S_total,d), n_frontend)."""
+    if cfg.frontend == "audio":
+        return batch["frames"].astype(_dtype(cfg)), 0
+    x = _embed(cfg, prm, batch["tokens"])
+    if cfg.frontend == "vision":
+        fe = batch["frontend"].astype(_dtype(cfg))
+        return jnp.concatenate([fe, x], axis=1), fe.shape[1]
+    return x, 0
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / eval / encode)
+# ---------------------------------------------------------------------------
+
+def forward(cfg, prm, batch: Dict[str, jax.Array], *, train: bool = False,
+            window: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (logits (B, S_text, Vp), aux_loss)."""
+    x, n_front = _inputs(cfg, prm, batch)
+    x = constrain(x, (rules.BATCH, None, None))
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, _, aux = apply_stack(cfg, prm, x, positions=positions,
+                            window=window if window is not None
+                            else cfg.window,
+                            train=train)
+    logits = _logits(cfg, prm, x)
+    if n_front:
+        logits = logits[:, n_front:]
+    return logits, aux
+
+
+def encode_step(cfg, prm, batch: Dict[str, jax.Array]
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Encoder-only forward (hubert): bidirectional, no cache."""
+    return forward(cfg, prm, batch, train=False)
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+def _leaf_name(path) -> str:
+    return str(getattr(path[-1], "key", path[-1]))
+
+
+def _cache_leaf_dtype(cfg, path):
+    name = _leaf_name(path)
+    if name == "kpos":
+        return jnp.int32
+    if name in ("k", "v"):
+        return _dtype(cfg)
+    return jnp.float32                       # recurrent states ride in f32
+
+
+def init_cache(cfg, batch: int, cache_len: int):
+    t = cache_template(cfg, batch, cache_len, _dtype(cfg))
+    def leaf(path, m):
+        dt = _cache_leaf_dtype(cfg, path)
+        if _leaf_name(path) == "kpos":
+            return jnp.full(m.shape, -1, dt)
+        if _leaf_name(path) == "m":          # exp-gating stabilizer floor
+            return jnp.full(m.shape, -1e30, dt)
+        return jnp.zeros(m.shape, dt)
+    return jax.tree_util.tree_map_with_path(leaf, t, is_leaf=P.is_meta)
+
+
+def abstract_cache(cfg, batch: int, cache_len: int, mesh=None):
+    t = cache_template(cfg, batch, cache_len, _dtype(cfg))
+    def leaf(path, m):
+        dt = _cache_leaf_dtype(cfg, path)
+        if mesh is None:
+            return jax.ShapeDtypeStruct(m.shape, dt)
+        return jax.ShapeDtypeStruct(
+            m.shape, dt,
+            sharding=NamedSharding(mesh, rules.resolve(mesh, m.axes, m.shape)))
+    return jax.tree_util.tree_map_with_path(leaf, t, is_leaf=P.is_meta)
+
+
+def cache_spec_tree(cfg, batch: int, cache_len: int, mesh):
+    t = cache_template(cfg, batch, cache_len, _dtype(cfg))
+    return jax.tree_util.tree_map(
+        lambda m: NamedSharding(mesh, rules.resolve(mesh, m.axes, m.shape)),
+        t, is_leaf=P.is_meta)
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+def prefill(cfg, prm, batch: Dict[str, jax.Array], *, cache_len: int,
+            window: Optional[int] = None
+            ) -> Tuple[jax.Array, Any]:
+    """Process a prompt, build the decode cache.  Returns
+    (last-token logits (B, Vp), cache)."""
+    assert not cfg.encoder_only, "encoder-only archs have no decode path"
+    x, n_front = _inputs(cfg, prm, batch)
+    x = constrain(x, (rules.BATCH, None, None))
+    B, S = x.shape[:2]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    cache = init_cache(cfg, B, cache_len)
+    kpos = cache.pop("kpos", None)
+    x, new_cache, _ = apply_stack(cfg, prm, x, positions=positions,
+                                  cache=cache,
+                                  window=window if window is not None
+                                  else cfg.window)
+    if kpos is not None:
+        sc = kpos.shape[0]
+        if sc >= S:
+            kpos = jnp.where(jnp.arange(sc) < S, jnp.arange(sc), -1
+                             ).astype(jnp.int32)
+        else:                                # ring holds the tail, rolled
+            kpos = jnp.roll(jnp.arange(S - sc, S, dtype=jnp.int32),
+                            (S - sc) % sc)
+        new_cache["kpos"] = kpos
+    logits = _logits(cfg, prm, x[:, -1:])[:, 0]
+    return logits, new_cache
+
+
+def decode_step(cfg, prm, cache, token: jax.Array, pos: jax.Array, *,
+                window: Optional[int] = None
+                ) -> Tuple[jax.Array, Any]:
+    """One autoregressive step.  token (B,) int32; pos () int32 absolute
+    position of this token.  Returns (logits (B, Vp), updated cache)."""
+    assert not cfg.encoder_only, "encoder-only archs have no decode path"
+    if cfg.frontend == "audio":
+        raise ValueError("audio arch is encoder-only")
+    x = _embed(cfg, prm, token[:, None])
+    x = constrain(x, (rules.BATCH, None, None))
+    kpos = cache.get("kpos")
+    slot = None
+    cache_in = dict(cache)
+    if kpos is not None:
+        cache_in.pop("kpos")
+        sc = kpos.shape[0]
+        slot = pos % sc
+        kpos = kpos.at[slot].set(pos)
+    positions = jnp.full((1,), pos, jnp.int32)
+    x, new_cache, _ = apply_stack(cfg, prm, x, positions=positions,
+                                  cache=cache_in, kpos=kpos, slot=slot,
+                                  window=window if window is not None
+                                  else cfg.window)
+    if kpos is not None:
+        new_cache["kpos"] = kpos
+    logits = _logits(cfg, prm, x)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,169 @@
+"""Mixture-of-Experts layer: top-k router + expert-parallel FFN.
+
+The router *is* the STRADS correspondence made concrete (DESIGN.md §4):
+``schedule`` = top-k gating picks which variables (experts) each token
+engages; ``push`` = per-expert FFN partial compute; ``pull`` = the
+gate-weighted combine; ``sync`` = the all-to-all / collective traffic the
+sharded einsums lower to.
+
+Two dispatch implementations are provided:
+
+* ``einsum`` — classic capacity-based one-hot dispatch (Switch/GShard
+  style).  Baseline.  Its one-hot matmuls show up as real HLO FLOPs,
+  which the roofline analysis quantifies.
+* ``sort``  — beyond-paper optimization: tokens are sorted by expert id
+  and moved with gathers/scatters, eliminating the dispatch-matmul FLOPs
+  entirely (see EXPERIMENTS.md §Perf).
+
+Experts are sharded over the ``model`` mesh axis (expert parallelism);
+token groups over ``data``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from ..sharding import rules
+from ..sharding.rules import constrain
+from .params import ParamMeta
+from .layers import apply_norm, norm_template, mlp_template, mlp_apply
+
+# Token-group size for capacity accounting (tokens are dispatched within
+# groups so the (g, E, C) one-hots stay small and data-sharded).
+GROUP = 4096
+
+
+def moe_template(cfg) -> Dict[str, Any]:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    t = {
+        "norm": norm_template(cfg),
+        "router": ParamMeta((d, E), (rules.FSDP, None), scale=d ** -0.5),
+        "wg": ParamMeta((E, d, f), (rules.EXPERT, rules.FSDP, None)),
+        "wu": ParamMeta((E, d, f), (rules.EXPERT, rules.FSDP, None)),
+        "wd": ParamMeta((E, f, d), (rules.EXPERT, None, rules.FSDP)),
+    }
+    if cfg.moe_shared_expert:
+        t["shared"] = mlp_template(cfg)
+    return t
+
+
+def _capacity(g: int, k: int, E: int, factor: float) -> int:
+    c = int(g * k / E * factor)
+    return max(4, -(-c // 4) * 4)
+
+
+def _router(p, h, cfg):
+    """Common gating: returns (probs (T,k), idx (T,k), aux-loss scalar)."""
+    logits = jnp.einsum("td,de->te", h, p["router"].astype(h.dtype))
+    logits = logits.astype(jnp.float32)
+    probs, idx = ops.topk_gating(logits, cfg.experts_per_token)
+    # GShard load-balance loss: E * Σ_e (fraction_e · mean-prob_e)
+    full = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(idx[:, 0], cfg.num_experts, dtype=jnp.float32)
+    aux = cfg.num_experts * jnp.mean(
+        jnp.mean(onehot, axis=0) * jnp.mean(full, axis=0))
+    return probs, idx, aux
+
+
+def _dispatch_einsum(p, h, cfg, probs, idx):
+    """Capacity-based one-hot dispatch (GShard).  h (T, d) → y (T, d)."""
+    T, d = h.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    g = min(GROUP, T)
+    G = T // g
+    C = _capacity(g, k, E, cfg.capacity_factor)
+    hg = h.reshape(G, g, d)
+    pg = probs.reshape(G, g, k)
+    ig = idx.reshape(G, g, k)
+
+    # Rank every (token, slot) within its expert queue without ever
+    # materializing a (G,g,k,E,C) one-hot: int8 expert one-hot → int32
+    # cumsum → gather own rank → single (E·C)-wide one-hot (sharded over
+    # the expert/model axis).
+    sel = jax.nn.one_hot(ig, E, dtype=jnp.int8)             # (G,g,k,E)
+    selF = constrain(sel.reshape(G, g * k, E),
+                     (rules.BATCH, None, rules.EXPERT))
+    prio = jnp.cumsum(selF.astype(jnp.int32), axis=1).reshape(G, g, k, E)
+    rank = jnp.take_along_axis(prio, ig[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0] - 1         # (G,g,k)
+    keep = (rank >= 0) & (rank < C)
+    comb_idx = jnp.where(keep, ig * C + rank, E * C)        # OOB → zeros
+    disp_flat = jax.nn.one_hot(comb_idx, E * C, dtype=h.dtype)
+    disp_flat = constrain(disp_flat, (rules.BATCH, None, None, rules.EXPERT))
+    dispatch = jnp.sum(disp_flat, axis=2).reshape(G, g, E, C)
+    combine = jnp.sum(pg[..., None].astype(h.dtype) * disp_flat,
+                      axis=2).reshape(G, g, E, C)
+    dispatch = constrain(dispatch, (rules.BATCH, None, rules.EXPERT, None))
+    combine = constrain(combine, (rules.BATCH, None, rules.EXPERT, None))
+
+    xin = jnp.einsum("gsec,gsd->gecd", dispatch.astype(h.dtype), hg)
+    xin = constrain(xin, (rules.BATCH, rules.EXPERT, None, None))
+    gate = jnp.einsum("gecd,edf->gecf", xin, p["wg"].astype(h.dtype))
+    up = jnp.einsum("gecd,edf->gecf", xin, p["wu"].astype(h.dtype))
+    hidden = jax.nn.silu(gate) * up
+    hidden = constrain(hidden, (rules.BATCH, rules.EXPERT, None, None))
+    out = jnp.einsum("gecf,efd->gecd", hidden, p["wd"].astype(h.dtype))
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(h.dtype), out)
+    return y.reshape(T, d)
+
+
+def _dispatch_sort(p, h, cfg, probs, idx):
+    """Sort-based dispatch: argsort tokens by expert, gather → dense
+    per-expert batches → scatter-add back.  No one-hot matmul FLOPs."""
+    T, d = h.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    C = _capacity(T, k, E, cfg.capacity_factor)
+
+    flat_e = idx.reshape(-1)                                 # (T*k,)
+    flat_p = probs.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    t_sorted = flat_t[order]
+    p_sorted = flat_p[order]
+    # rank of each entry within its expert run
+    same = jnp.cumsum(jnp.ones_like(e_sorted))
+    run_start = jnp.where(
+        jnp.concatenate([jnp.array([True]), e_sorted[1:] != e_sorted[:-1]]),
+        same - 1, 0)
+    run_start = jax.lax.associative_scan(jnp.maximum, run_start)
+    rank = (same - 1) - run_start
+    keep = rank < C
+    dest = e_sorted * C + rank.astype(jnp.int32)             # (T*k,) in [0,E*C)
+    dest = jnp.where(keep, dest, E * C)                      # overflow bin
+
+    xin = jnp.zeros((E * C + 1, d), h.dtype).at[dest].set(h[t_sorted])
+    xin = xin[:-1].reshape(E, C, d)
+    xin = constrain(xin, (rules.EXPERT, None, None))
+    gate = jnp.einsum("ecd,edf->ecf", xin, p["wg"].astype(h.dtype))
+    up = jnp.einsum("ecd,edf->ecf", xin, p["wu"].astype(h.dtype))
+    hidden = jax.nn.silu(gate) * up
+    out = jnp.einsum("ecf,efd->ecd", hidden, p["wd"].astype(h.dtype))
+    out = constrain(out, (rules.EXPERT, None, None))
+
+    gathered = out.reshape(E * C, d)
+    contrib = jnp.where(keep, p_sorted, 0.0)[:, None].astype(h.dtype)
+    picked = jnp.take(gathered, jnp.minimum(dest, E * C - 1), axis=0)
+    y = jnp.zeros((T, d), h.dtype).at[t_sorted].add(picked * contrib)
+    return y
+
+
+def moe_apply(p: Dict[str, Any], x: jax.Array, cfg,
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Pre-norm MoE block (residual included).  Returns (y, aux_loss)."""
+    B, S, d = x.shape
+    h = apply_norm(p["norm"], x, cfg).reshape(B * S, d)
+    probs, idx, aux = _router(p, h, cfg)
+    if cfg.moe_impl == "sort":
+        y = _dispatch_sort(p, h, cfg, probs, idx)
+    else:
+        y = _dispatch_einsum(p, h, cfg, probs, idx)
+    y = y.reshape(B, S, d)
+    if cfg.moe_shared_expert:
+        # shared expert runs densely on every token (Llama-4 style);
+        # mlp_apply adds its own residual, so feed x and take the delta.
+        y = y + (mlp_apply(p["shared"], x, cfg) - x)
+    return x + constrain(y, (rules.BATCH, rules.SEQ, None)), aux

@@ -1,0 +1,261 @@
+"""Composable decoder/encoder stack for all six assigned families.
+
+Layers are organized into *groups* that repeat down the stack; the stack
+is a ``lax.scan`` over stacked group parameters (fast compiles at 48–54
+layers, clean stacked sharding specs).  Group contents per family:
+
+  dense / vlm / audio : [attn, mlp]                       × num_layers
+  moe (moe_every=g)   : [attn, mlp] × (g−1) + [attn, moe] × (layers / g)
+  hybrid (attn_every=g): [mamba] × g + shared-attn(+mlp)  × (layers / g)
+                         — the attention block params are SHARED (one set,
+                         applied every g layers; Zamba2 style)
+  ssm (xlstm)         : unrolled per-layer (12 layers; sLSTM at
+                        ``slstm_layers`` indices, mLSTM elsewhere)
+
+Caches/states mirror the group structure and are threaded through the
+same scan (xs → updated ys), so decode is a single fused program.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import rules
+from ..sharding.rules import constrain as rules_constrain
+from . import params as P
+from .layers import (attention_template, attention_apply,
+                     attention_cache_template, mlp_template, mlp_apply,
+                     norm_template)
+from .moe import moe_template, moe_apply
+from .ssm import ssm_template, ssm_apply, ssm_state_template
+from .xlstm import (mlstm_template, mlstm_apply, mlstm_state_template,
+                    slstm_template, slstm_apply, slstm_state_template)
+
+ParamMeta = P.ParamMeta
+
+
+# ---------------------------------------------------------------------------
+# Stack layout
+# ---------------------------------------------------------------------------
+
+def group_layout(cfg) -> Tuple[int, List[Tuple[str, str]]]:
+    """Returns (num_scan_steps, [(sub_name, kind), ...]) for scanned
+    families; xlstm is unrolled and handled separately."""
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio"):
+        return cfg.num_layers, [("attn0", "attn"), ("ffn0", "mlp")]
+    if fam == "moe":
+        g = max(1, cfg.moe_every)
+        subs = []
+        for i in range(g):
+            subs.append((f"attn{i}", "attn"))
+            subs.append((f"ffn{i}", "moe" if i == g - 1 else "mlp"))
+        return cfg.num_layers // g, subs
+    if fam == "hybrid":
+        g = max(1, cfg.attn_every)
+        return cfg.num_layers // g, [(f"mamba{i}", "mamba") for i in range(g)]
+    if fam == "ssm":
+        raise ValueError("xlstm stack is unrolled; no group layout")
+    raise ValueError(fam)
+
+
+_SUB_TEMPLATE = {
+    "attn": attention_template,
+    "mlp": mlp_template,
+    "moe": moe_template,
+    "mamba": ssm_template,
+    "mlstm": mlstm_template,
+    "slstm": slstm_template,
+}
+
+
+def _xlstm_kinds(cfg) -> List[str]:
+    return ["slstm" if i in cfg.slstm_layers else "mlstm"
+            for i in range(cfg.num_layers)]
+
+
+def stack_template(cfg) -> Dict[str, Any]:
+    """Template for the full parameter tree."""
+    d = cfg.d_model
+    vp = rules.padded_vocab(cfg.vocab_size)
+    t: Dict[str, Any] = {}
+    if cfg.frontend != "audio":
+        t["tok_embed"] = ParamMeta((vp, d), (rules.VOCAB, rules.FSDP),
+                                   scale=0.02)
+    if cfg.family == "ssm":                                  # xlstm: unrolled
+        layers = {}
+        for i, kind in enumerate(_xlstm_kinds(cfg)):
+            layers[f"layer_{i:02d}"] = _SUB_TEMPLATE[kind](cfg)
+        t["layers"] = layers
+    else:
+        steps, subs = group_layout(cfg)
+        group = {name: _SUB_TEMPLATE[kind](cfg) for name, kind in subs}
+        t["layers"] = P.stack(group, steps)
+        if cfg.family == "hybrid":                           # shared block
+            t["shared_attn"] = attention_template(cfg)
+            t["shared_mlp"] = mlp_template(cfg)
+    t["final_norm"] = norm_template(cfg)
+    if not cfg.tie_embeddings:
+        t["lm_head"] = ParamMeta((d, vp), (rules.FSDP, rules.VOCAB))
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Cache / recurrent-state templates
+# ---------------------------------------------------------------------------
+
+def cache_template(cfg, batch: int, cache_len: int, dtype) -> Dict[str, Any]:
+    """Abstract layout of the decode cache (mirrors the layer groups)."""
+    t: Dict[str, Any] = {}
+    if cfg.family == "ssm":
+        layers = {}
+        for i, kind in enumerate(_xlstm_kinds(cfg)):
+            layers[f"layer_{i:02d}"] = (mlstm_state_template(cfg, batch)
+                                        if kind == "mlstm"
+                                        else slstm_state_template(cfg, batch))
+        t["layers"] = layers
+        return t
+    steps, subs = group_layout(cfg)
+    group: Dict[str, Any] = {}
+    for name, kind in subs:
+        if kind == "attn":
+            group[name] = attention_cache_template(cfg, batch, cache_len,
+                                                   dtype)
+        elif kind == "mamba":
+            group[name] = ssm_state_template(cfg, batch, dtype)
+    t["layers"] = P.stack(group, steps)
+    if cfg.family == "hybrid":
+        t["shared_attn"] = P.stack(
+            attention_cache_template(cfg, batch, cache_len, dtype), steps)
+    if _has_attention(cfg):
+        t["kpos"] = ParamMeta((cache_len,), (None,), "zeros")  # int32 − 1
+    return t
+
+
+def _has_attention(cfg) -> bool:
+    return cfg.family != "ssm"
+
+
+# ---------------------------------------------------------------------------
+# Sub-layer application
+# ---------------------------------------------------------------------------
+
+def _apply_sub(kind: str, p, x, cfg, ctx) -> Tuple[jax.Array, Any, jax.Array]:
+    """Returns (x, new_cache_or_None, aux_loss)."""
+    zero = jnp.zeros((), jnp.float32)
+    if kind == "attn":
+        x, new_cache = attention_apply(
+            p, x, cfg, positions=ctx["positions"], cache=ctx.get("cache"),
+            kpos=ctx.get("kpos"), slot=ctx.get("slot"),
+            causal=cfg.causal, window=ctx["window"])
+        return x, new_cache, zero
+    if kind == "mlp":
+        return mlp_apply(p, x, cfg), None, zero
+    if kind == "moe":
+        x, aux = moe_apply(p, x, cfg)
+        return x, None, aux
+    if kind == "mamba":
+        x, new_state = ssm_apply(p, x, cfg, state=ctx.get("cache"))
+        return x, new_state, zero
+    if kind == "mlstm":
+        st = ctx.get("cache")
+        st_t = None if st is None else (st["C"], st["n"], st["m"])
+        x, new = mlstm_apply(p, x, cfg, state=st_t, return_state=True)
+        new_d = None if new is None else {"C": new[0], "n": new[1],
+                                          "m": new[2]}
+        return x, new_d, zero
+    if kind == "slstm":
+        st = ctx.get("cache")
+        st_t = None if st is None else (st["c"], st["n"], st["m"], st["h"])
+        x, new = slstm_apply(p, x, cfg, state=st_t, return_state=True)
+        new_d = None if new is None else dict(zip("cnmh", new))
+        return x, new_d, zero
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Stack application (shared by train forward / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def apply_stack(cfg, prm, x, *, positions, cache=None, kpos=None, slot=None,
+                window=None, train=False):
+    """Runs the layer stack.  Returns (x, new_cache_tree, aux_loss)."""
+    base_ctx = {"positions": positions, "kpos": kpos, "slot": slot,
+                "window": window}
+
+    if cfg.family == "ssm":                                  # unrolled xlstm
+        aux = jnp.zeros((), jnp.float32)
+        new_layers = {}
+        for i, kind in enumerate(_xlstm_kinds(cfg)):
+            name = f"layer_{i:02d}"
+            ctx = dict(base_ctx)
+            ctx["cache"] = None if cache is None else cache["layers"][name]
+            fn = _apply_sub
+            if train:
+                fn = jax.checkpoint(
+                    _apply_sub, static_argnums=(0, 3),
+                    policy=jax.checkpoint_policies.nothing_saveable)
+            x, new_c, a = fn(kind, prm["layers"][name], x, cfg, ctx)
+            aux += a
+            if new_c is not None:
+                new_layers[name] = new_c
+        new_cache = {"layers": new_layers} if cache is not None else None
+        return x, new_cache, aux
+
+    steps, subs = group_layout(cfg)
+    decode_or_prefill = cache is not None
+
+    def body(carry, xs):
+        x, aux = carry
+        # Sequence-shard the inter-layer activation (it is what the scan
+        # saves for backward): (batch@data, seq@model, d).  Dropped
+        # automatically when seq doesn't divide (decode S=1).
+        x = rules_constrain(x, (rules.BATCH, rules.SEQ, None))
+        layer_p, layer_cache = xs
+        new_cache_slices = {}
+        for name, kind in subs:
+            ctx = dict(base_ctx)
+            ctx["cache"] = None if layer_cache is None \
+                else layer_cache.get(name)
+            x, new_c, a = _apply_sub(kind, layer_p[name], x, cfg, ctx)
+            aux += a
+            if kind in ("attn", "mamba"):
+                new_cache_slices[name] = new_c if new_c is not None else 0
+        if cfg.family == "hybrid":
+            ctx = dict(base_ctx)
+            ctx["cache"] = None if layer_cache is None \
+                else layer_cache.get("__shared_attn")
+            x, new_c, _ = _apply_sub("attn", shared_p, x, cfg, ctx)
+            if new_c is not None:
+                new_cache_slices["__shared_attn"] = new_c
+            x = mlp_apply(shared_mlp_p, x, cfg)
+        return (x, aux), (new_cache_slices if decode_or_prefill else 0)
+
+    shared_p = prm.get("shared_attn")
+    shared_mlp_p = prm.get("shared_mlp")
+
+    layer_xs = prm["layers"]
+    if decode_or_prefill:
+        lc = dict(cache["layers"])
+        if cfg.family == "hybrid":
+            lc["__shared_attn"] = cache["shared_attn"]
+        cache_xs = lc
+    else:
+        cache_xs = None
+
+    fn = body
+    if train:
+        fn = jax.checkpoint(body,
+                            policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), ys = jax.lax.scan(fn, (x, jnp.zeros((), jnp.float32)),
+                                (layer_xs, cache_xs))
+    new_cache = None
+    if decode_or_prefill:
+        ys = dict(ys)
+        shared = ys.pop("__shared_attn", None)
+        new_cache = {"layers": ys}
+        if shared is not None:
+            new_cache["shared_attn"] = shared
+    return x, new_cache, aux

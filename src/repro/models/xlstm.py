@@ -1,0 +1,275 @@
+"""xLSTM blocks (sLSTM + mLSTM) per arXiv:2405.04517 (simplified but
+faithful recurrences; exponential gating with stabilizer state).
+
+* mLSTM — matrix memory C ∈ R^{H×hd×hd} updated with outer products
+  k vᵀ, queried with q; parallel over heads; ``proj_factor`` up-projection
+  wraps the cell (the xlstm-125m config has d_ff=0 because the FFN lives
+  here).
+* sLSTM — scalar memory per (head, dim) with recurrent input from the
+  previous hidden state.
+
+Both run as a ``lax.scan`` over the sequence for train/prefill and expose
+an O(1)-state single step for decode — xLSTM is sub-quadratic by
+construction, so ``long_500k`` runs the recurrent state, no KV cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import rules
+from ..sharding.rules import constrain
+from .params import ParamMeta
+from .layers import apply_norm, norm_template
+from .scan_utils import chunked_scan
+
+
+def _dims(cfg):
+    d_inner = int(cfg.xlstm_proj_factor * cfg.d_model)
+    H = cfg.num_heads
+    hd = d_inner // H
+    return d_inner, H, hd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_template(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    d_inner, H, hd = _dims(cfg)
+    return {
+        "norm": norm_template(cfg),
+        "wup": ParamMeta((d, d_inner), (rules.FSDP, rules.TENSOR)),
+        "wgate": ParamMeta((d, d_inner), (rules.FSDP, rules.TENSOR)),
+        "wq": ParamMeta((d_inner, d_inner), (rules.FSDP, rules.TENSOR)),
+        "wk": ParamMeta((d_inner, d_inner), (rules.FSDP, rules.TENSOR)),
+        "wv": ParamMeta((d_inner, d_inner), (rules.FSDP, rules.TENSOR)),
+        "wif": ParamMeta((d_inner, 2 * H), (rules.FSDP, None),
+                         scale=1e-2),
+        "if_bias": ParamMeta((2 * H,), (None,), "zeros"),
+        "onorm": ParamMeta((d_inner,), (rules.TENSOR,), "ones"),
+        "wdown": ParamMeta((d_inner, d), (rules.TENSOR, rules.FSDP)),
+    }
+
+
+def _mlstm_cell(q, k, v, i_gate, f_gate, state):
+    """One recurrent step.  q,k,v (B,H,hd); gates (B,H) pre-activation.
+    state = (C (B,H,hd,hd), n (B,H,hd), m (B,H))."""
+    C, n, m = state
+    logf = -jax.nn.softplus(-f_gate)                      # log σ(f)
+    m_new = jnp.maximum(logf + m, i_gate)
+    fa = jnp.exp(logf + m - m_new)
+    ia = jnp.exp(i_gate - m_new)
+    C = fa[..., None, None] * C + ia[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = fa[..., None] * n + ia[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", C, q)
+    # xLSTM eq. (21): max(|ñᵀq|, e^{−m}) in stabilized units — this is
+    # max(|nᵀq|, 1) in actual units
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return h, (C, n, m_new)
+
+
+def mlstm_chunkwise(qf, kf, vf, ig, fg, state, chunk: int = 256):
+    """Chunkwise-parallel mLSTM (TFLA-style): matmul form of the matrix-
+    memory recurrence with exp-gating stabilization, numerically matching
+    the sequential cell.  qf/kf/vf (B,S,H,hd) f32; ig/fg (B,S,H) f32
+    pre-activations; state = (C (B,H,hd,hd), n (B,H,hd), m (B,H)).
+
+    Per chunk, in stabilized units (actual = tilde · e^m):
+        F_t  = Σ_{r≤t} log σ(f_r)       (cumulative log-forget)
+        g_r  = i_r − F_r
+        m_t  = max(F_t + m_prev, F_t + cummax_r≤t g_r)
+        D_tr = exp(F_t − F_r + i_r − m_t) · [r ≤ t]
+        h̃_t = (D ∘ qkᵀ) v + e^{F_t + m_prev − m_t} q C_prev
+        ñ_t = D k + e^{F_t + m_prev − m_t} n_prev
+        h_t  = h̃_t / max(|ñ_tᵀq̂_t|, e^{−m_t})
+    Converts O(S) sequential HBM round-trips into S/Lc chunk matmuls
+    (§Perf xlstm iteration; ~same trick as Mamba2 SSD)."""
+    B, S, H, hd = qf.shape
+    Lc = min(chunk, S)
+    if S % Lc:
+        return None                                     # caller falls back
+    nc = S // Lc
+    resh = lambda a: a.reshape((B, nc, Lc) + a.shape[2:])
+    q_c, k_c, v_c = resh(qf), resh(kf), resh(vf)
+    i_c = resh(ig)                                      # (B,nc,Lc,H)
+    logf = -jax.nn.softplus(-resh(fg))                  # log σ(f)
+    F = jnp.cumsum(logf, axis=2)                        # (B,nc,Lc,H)
+    g = i_c - F
+    gmax = jax.lax.cummax(g, axis=2)                    # (B,nc,Lc,H)
+    F_last = F[:, :, -1]                                # (B,nc,H)
+
+    def outer(carry, xs):
+        C, n, m = carry                                 # stabilized units
+        qg, kg, vg, ic, Fc, gc, gmx, Flast = xs
+        m_new = jnp.maximum(Fc + m[:, None], Fc + gmx)  # (B,Lc,H)
+        a = jnp.exp(Fc + m[:, None] - m_new)            # inter scale
+        # D matrix (B,H,Lc,Lc)
+        Ft = jnp.moveaxis(Fc, -1, 1)                    # (B,H,Lc)
+        it = jnp.moveaxis(ic, -1, 1)
+        mt = jnp.moveaxis(m_new, -1, 1)
+        d = Ft[:, :, :, None] - Ft[:, :, None, :] \
+            + it[:, :, None, :] - mt[:, :, :, None]     # (B,H,t,r)
+        mask = jnp.tril(jnp.ones((Lc, Lc), bool))
+        D = jnp.exp(jnp.where(mask[None, None], d, -1e30))
+        qh = jnp.moveaxis(qg, 2, 1)                     # (B,H,Lc,hd)
+        kh = jnp.moveaxis(kg, 2, 1)
+        vh = jnp.moveaxis(vg, 2, 1)
+        s_qk = jnp.einsum("bhtd,bhrd->bhtr", qh, kh)
+        intra_h = jnp.einsum("bhtr,bhrd->bhtd", D * s_qk, vh)
+        intra_n = jnp.einsum("bhtr,bhrd->bhtd", D, kh)
+        ah = jnp.moveaxis(a, -1, 1)[..., None]          # (B,H,Lc,1)
+        inter_h = ah * jnp.einsum("bhtd,bhdv->bhtv", qh, C)
+        inter_n = ah * n[:, :, None, :]
+        num = intra_h + inter_h                         # (B,H,Lc,hd)
+        ntot = intra_n + inter_n
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhtd,bhtd->bht", ntot, qh)),
+                          jnp.exp(-mt))
+        h = num / den[..., None]                        # (B,H,Lc,hd)
+        # chunk-end state
+        m_end = m_new[:, -1]                            # (B,H)
+        a_end = jnp.exp(Flast + m - m_end)              # (B,H)
+        w = jnp.exp(Flast[:, None, :] - Fc + ic - m_end[:, None, :])
+        wh = jnp.moveaxis(w, -1, 1)                     # (B,H,Lc)
+        C_new = a_end[..., None, None] * C \
+            + jnp.einsum("bhrd,bhrv->bhdv", wh[..., None] * kh, vh)
+        n_new = a_end[..., None] * n \
+            + jnp.einsum("bhr,bhrd->bhd", wh, kh)
+        return (C_new, n_new, m_end), jnp.moveaxis(h, 1, 2)  # (B,Lc,H,hd)
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in
+               (q_c, k_c, v_c, i_c, F, g, gmax, F_last))
+    inner = jax.checkpoint(outer)
+    (C, n, m), hs = jax.lax.scan(inner, state, xs)
+    return jnp.moveaxis(hs, 0, 1).reshape(B, S, H, hd), (C, n, m)
+
+
+def mlstm_apply(p: Dict[str, Any], x: jax.Array, cfg, *,
+                state: Optional[Tuple] = None, return_state: bool = False,
+                ) -> Tuple[jax.Array, Optional[Tuple]]:
+    B, S, d = x.shape
+    d_inner, H, hd = _dims(cfg)
+    hin = apply_norm(p["norm"], x, cfg)
+    up = jnp.einsum("bsd,di->bsi", hin, p["wup"].astype(hin.dtype))
+    gate = jnp.einsum("bsd,di->bsi", hin, p["wgate"].astype(hin.dtype))
+    q = jnp.einsum("bsi,ij->bsj", up, p["wq"].astype(up.dtype))
+    k = jnp.einsum("bsi,ij->bsj", up, p["wk"].astype(up.dtype)) * hd ** -0.5
+    v = jnp.einsum("bsi,ij->bsj", up, p["wv"].astype(up.dtype))
+    gf = jnp.einsum("bsi,ig->bsg", up, p["wif"].astype(up.dtype)
+                    ).astype(jnp.float32) + p["if_bias"]
+    shape_h = (B, S, H, hd)
+    qf = q.reshape(shape_h).astype(jnp.float32)
+    kf = k.reshape(shape_h).astype(jnp.float32)
+    vf = v.reshape(shape_h).astype(jnp.float32)
+    ig, fg = gf[..., :H], gf[..., H:]
+
+    if state is None:
+        state = (jnp.zeros((B, H, hd, hd), jnp.float32),
+                 jnp.zeros((B, H, hd), jnp.float32),
+                 jnp.full((B, H), -jnp.inf, jnp.float32))
+    if S == 1:
+        h, state = _mlstm_cell(qf[:, 0], kf[:, 0], vf[:, 0],
+                               ig[:, 0], fg[:, 0], state)
+        hs = h[:, None]
+    else:
+        ck = mlstm_chunkwise(qf, kf, vf, ig, fg, state)
+        if ck is not None:                                 # matmul form
+            hs, state = ck
+        else:                                              # tiny/ragged S
+            def step(carry, x):
+                qt, kt, vt, it, ft = x
+                h, carry = _mlstm_cell(qt, kt, vt, it, ft, carry)
+                return carry, h
+            xs = tuple(jnp.moveaxis(a, 1, 0) for a in (qf, kf, vf, ig, fg))
+            state, hs = chunked_scan(step, state, xs)
+            hs = jnp.moveaxis(hs, 0, 1)                    # (B,S,H,hd)
+    hflat = hs.reshape(B, -1, d_inner).astype(x.dtype)
+    from .ssm import rms_gnorm
+    hflat = rms_gnorm(hflat, p["onorm"], cfg.norm_eps)
+    out = hflat * jax.nn.silu(gate)
+    y = jnp.einsum("bsi,id->bsd", out, p["wdown"].astype(out.dtype))
+    y = constrain(y, (rules.BATCH, rules.SEQ, None))
+    return x + y, (state if return_state else None)
+
+
+def mlstm_state_template(cfg, batch: int) -> Dict[str, ParamMeta]:
+    _, H, hd = _dims(cfg)
+    return {
+        "C": ParamMeta((batch, H, hd, hd), (rules.BATCH, None, None, None),
+                       "zeros"),
+        "n": ParamMeta((batch, H, hd), (rules.BATCH, None, None), "zeros"),
+        "m": ParamMeta((batch, H), (rules.BATCH, None), "zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_template(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "norm": norm_template(cfg),
+        "wx": ParamMeta((d, 4 * d), (rules.FSDP, rules.TENSOR)),
+        "wr": ParamMeta((d, 4 * d), (rules.FSDP, rules.TENSOR), scale=1e-2),
+        "bias": ParamMeta((4 * d,), (None,), "zeros"),
+        "wdown": ParamMeta((d, d), (rules.TENSOR, rules.FSDP)),
+    }
+
+
+def _slstm_cell(gx, wr, bias, state, d):
+    """gx (B,4d) input contribution; state = (c, n, m, h) each (B,d)."""
+    c, n, m, h = state
+    g = gx + h @ wr + bias                                 # (B,4d)
+    zi, ii, fi, oi = jnp.split(g, 4, axis=-1)
+    z = jnp.tanh(zi)
+    o = jax.nn.sigmoid(oi)
+    logf = -jax.nn.softplus(-fi)
+    m_new = jnp.maximum(logf + m, ii)
+    fa = jnp.exp(logf + m - m_new)
+    ia = jnp.exp(ii - m_new)
+    c = fa * c + ia * z
+    n = fa * n + ia
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return h_new, (c, n, m_new, h_new)
+
+
+def slstm_apply(p: Dict[str, Any], x: jax.Array, cfg, *,
+                state: Optional[Tuple] = None, return_state: bool = False,
+                ) -> Tuple[jax.Array, Optional[Tuple]]:
+    B, S, d = x.shape
+    hin = apply_norm(p["norm"], x, cfg)
+    gx = jnp.einsum("bsd,dg->bsg", hin, p["wx"].astype(hin.dtype)
+                    ).astype(jnp.float32)
+    wr = p["wr"].astype(jnp.float32)
+    bias = p["bias"].astype(jnp.float32)
+    if state is None:
+        state = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(3)) \
+            + (jnp.zeros((B, d), jnp.float32),)
+        state = (state[0], state[1],
+                 jnp.full((B, d), -jnp.inf, jnp.float32), state[3])
+    if S == 1:
+        h, state = _slstm_cell(gx[:, 0], wr, bias, state, d)
+        hs = h[:, None]
+    else:
+        def step(carry, gt):
+            h, carry = _slstm_cell(gt, wr, bias, carry, d)
+            return carry, h
+        state, hs = chunked_scan(step, state, jnp.moveaxis(gx, 1, 0))
+        hs = jnp.moveaxis(hs, 0, 1)
+    y = jnp.einsum("bsd,de->bse", hs.astype(x.dtype),
+                   p["wdown"].astype(x.dtype))
+    y = constrain(y, (rules.BATCH, rules.SEQ, None))
+    return x + y, (state if return_state else None)
+
+
+def slstm_state_template(cfg, batch: int) -> Dict[str, ParamMeta]:
+    d = cfg.d_model
+    return {k: ParamMeta((batch, d), (rules.BATCH, None), "zeros")
+            for k in ("c", "n", "m", "h")}

@@ -1,0 +1,100 @@
+"""AdamW with dtype-configurable moments and global-norm clipping.
+
+Moments shard exactly like their parameters (the spec tree is reused), so
+FSDP params give ZeRO-sharded optimizer state for free.  ``moment_dtype``
+lets very large models (llama4-maverick) keep m/v in bf16 to fit the HBM
+budget — see DESIGN.md §7 and the dry-run memory analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    moment_dtype: str = "float32"
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> Any:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(grads: Any, opt: Any, params: Any, lr: jax.Array,
+                 cfg: AdamWConfig,
+                 update_mask: Optional[Callable[[Any], Any]] = None,
+                 ) -> Tuple[Any, Any, jax.Array]:
+    """One AdamW step.  Returns (new_params, new_opt, pre-clip grad norm).
+
+    ``update_mask``: optional fn(updates_tree) → masked updates — the hook
+    the STRADS block scheduler uses to zero unscheduled blocks."""
+    count = opt["count"] + 1
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+    dt = jnp.dtype(cfg.moment_dtype)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def moments(g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        return m_new, v_new
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(opt["m"])
+    flat_v = treedef.flatten_up_to(opt["v"])
+    flat_p = treedef.flatten_up_to(params)
+    new_m, new_v, upd = [], [], []
+    for g, m, v in zip(flat_g, flat_m, flat_v):
+        mf, vf = moments(g, m, v)
+        new_m.append(mf.astype(dt))
+        new_v.append(vf.astype(dt))
+        upd.append((mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps))
+    updates = jax.tree_util.tree_unflatten(treedef, upd)
+    if update_mask is not None:
+        updates = update_mask(updates)
+    flat_u = jax.tree_util.tree_leaves(updates)
+    new_p = [
+        (p.astype(jnp.float32)
+         - lr * (u + cfg.weight_decay * p.astype(jnp.float32))
+         ).astype(p.dtype)
+        for p, u in zip(flat_p, flat_u)]
+    return (jax.tree_util.tree_unflatten(treedef, new_p),
+            {"m": jax.tree_util.tree_unflatten(treedef, new_m),
+             "v": jax.tree_util.tree_unflatten(treedef, new_v),
+             "count": count},
+            gnorm)
+
+
+def opt_specs(param_spec_tree: Any, mesh) -> Any:
+    """Moment specs mirror param specs; count is replicated."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    return {
+        "m": param_spec_tree,
+        "v": param_spec_tree,
+        "count": NamedSharding(mesh, PartitionSpec()),
+    }

@@ -1,0 +1,32 @@
+"""LR schedules: cosine-with-warmup and WSD (warmup–stable–decay, the
+MiniCPM schedule [arXiv:2404.06395] — assigned arch minicpm-2b trains
+with it)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor_frac * peak_lr + (1 - floor_frac) * peak_lr \
+            * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+def wsd_schedule(peak_lr: float, warmup: int, stable: int, decay: int,
+                 floor_frac: float = 0.01):
+    """Warmup → flat plateau → short exponential-ish decay tail."""
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        t = jnp.clip((s - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        tail = peak_lr * (floor_frac ** t)
+        out = jnp.where(s < warmup, warm,
+                        jnp.where(s < warmup + stable, peak_lr, tail))
+        return out
+    return lr

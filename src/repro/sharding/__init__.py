@@ -1,0 +1,6 @@
+from .rules import (  # noqa: F401
+    BATCH, EXPERT, FSDP, TENSOR, VOCAB,
+    axis_size, batch_axes, logical_to_mesh, resolve, named_sharding,
+    constrain, activation_mesh, pad_to_multiple, padded_vocab, padded_heads,
+    MODEL_AXIS_SIZE, CACHE_SEQ, SEQ,
+)

@@ -1,0 +1,177 @@
+"""Logical-axis sharding rules (MaxText-style) for the Big-Model substrate.
+
+Parameters and activations are annotated with *logical* axis names; this
+module resolves them against a concrete mesh ((data, model) single-pod or
+(pod, data, model) multi-pod) into ``PartitionSpec``s.
+
+Resolution rules
+----------------
+* A logical name maps to a tuple of mesh axes (e.g. ``batch`` →
+  ``("pod", "data")``); axes absent from the mesh are dropped (so the same
+  template works on single- and multi-pod meshes and on the 1-device CPU
+  test mesh).
+* jax requires explicitly-sharded dims to be **divisible** by the product
+  of mesh axis sizes; ``resolve`` silently drops the mapping when it does
+  not divide (e.g. kv_heads=2 over a 16-way model axis → replicated).
+  Where dropping would be catastrophic for efficiency (query heads, vocab)
+  the model instead *pads the physical dimension* — see ``padded_heads`` /
+  ``padded_vocab`` — so the spec always applies.
+
+Layouts produced
+----------------
+* **TP** (tensor parallel): heads / d_ff / experts / vocab over ``model``.
+* **FSDP**: the d_model dim of every weight over ``data`` (ZeRO-3 —
+  GSPMD inserts per-layer all-gathers; optimizer moments shard the same
+  way, giving ZeRO moments for free).
+* **DP**: batch over ``("pod", "data")``; grads all-reduce over both.
+* **Decode**: KV-cache sequence dim over ``model`` (cache-sequence
+  parallelism — softmax/psum stays collective-cheap because the reduction
+  over the sharded key axis is a scalar-sized psum, not a gather).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# Logical axis names -------------------------------------------------------
+BATCH = "batch"            # data-parallel batch dim
+FSDP = "fsdp"              # weight d_model dim (ZeRO-3 over data)
+TENSOR = "tensor"          # heads / d_ff / d_inner (TP over model)
+EXPERT = "expert"          # MoE expert dim (EP over model)
+VOCAB = "vocab"            # vocab dim (TP over model)
+CACHE_SEQ = "cache_seq"    # decode KV-cache sequence dim
+SEQ = "seq"                # activation sequence dim (sequence parallelism)
+
+LOGICAL_TO_MESH = {
+    BATCH: ("pod", "data"),
+    FSDP: ("data",),
+    TENSOR: ("model",),
+    EXPERT: ("model",),
+    VOCAB: ("model",),
+    CACHE_SEQ: ("pod", "model"),
+    SEQ: ("model",),
+}
+
+# The production model axis is 16 on both assigned meshes; padding targets
+# (query heads, vocab) are derived from it.
+MODEL_AXIS_SIZE = 16
+
+
+def logical_to_mesh(name: Optional[str], mesh: Mesh
+                    ) -> Union[None, str, Tuple[str, ...]]:
+    """Map one logical name to the mesh axes present in ``mesh``."""
+    if name is None:
+        return None
+    axes = tuple(a for a in LOGICAL_TO_MESH[name] if a in mesh.axis_names)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def axis_size(mesh: Mesh, name: Optional[str]) -> int:
+    """Product of mesh-axis sizes a logical name resolves to (1 if none)."""
+    m = logical_to_mesh(name, mesh)
+    if m is None:
+        return 1
+    if isinstance(m, str):
+        m = (m,)
+    return math.prod(mesh.shape[a] for a in m)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in LOGICAL_TO_MESH[BATCH] if a in mesh.axis_names)
+
+
+def resolve(mesh: Mesh, axes: Sequence[Optional[str]],
+            shape: Sequence[int]) -> PartitionSpec:
+    """Resolve logical axes against ``mesh``, dropping non-divisible dims."""
+    assert len(axes) == len(shape), (axes, shape)
+    entries = []
+    used = set()
+    for name, dim in zip(axes, shape):
+        m = logical_to_mesh(name, mesh)
+        if m is not None:
+            flat = (m,) if isinstance(m, str) else m
+            if any(a in used for a in flat):
+                m = None                       # mesh axis already consumed
+            elif dim % math.prod(mesh.shape[a] for a in flat) != 0:
+                m = None                       # jax requires divisibility
+            else:
+                used.update(flat)
+        entries.append(m)
+    while entries and entries[-1] is None:
+        entries.pop()                          # canonical short spec
+    return PartitionSpec(*entries)
+
+
+def named_sharding(mesh: Mesh, axes: Sequence[Optional[str]],
+                   shape: Sequence[int]) -> NamedSharding:
+    return NamedSharding(mesh, resolve(mesh, axes, shape))
+
+
+_ACTIVE_MESH: list = []       # stack managed by ``activation_mesh``
+
+
+class activation_mesh:
+    """Context manager installing the mesh that ``constrain`` annotates
+    activations against.  The launcher enters it around tracing; unit
+    tests (1-device) never do, so ``constrain`` is an identity there."""
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+
+    def __enter__(self):
+        _ACTIVE_MESH.append(self.mesh)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        _ACTIVE_MESH.pop()
+        return False
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """``with_sharding_constraint`` against the active mesh (identity when
+    no mesh is installed or the mesh is trivial)."""
+    if not _ACTIVE_MESH:
+        return x
+    mesh = _ACTIVE_MESH[-1]
+    if math.prod(mesh.shape.values()) == 1:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve(mesh, axes, x.shape)))
+
+
+# Padding helpers -----------------------------------------------------------
+
+def pad_to_multiple(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def padded_vocab(vocab_size: int) -> int:
+    """Pad vocab so each model shard is a multiple of 128 (MXU lane width).
+
+    152k-class softmaxes dominate nothing; the pad rows carry −inf logits
+    via masking in the loss.
+    """
+    return pad_to_multiple(vocab_size, 128 * MODEL_AXIS_SIZE)
+
+
+def padded_heads(num_heads: int, num_kv_heads: int) -> Tuple[int, int]:
+    """Physical (q, kv) head counts for TP over the 16-way model axis.
+
+    * q heads are always padded up to a multiple of 16 **that keeps the GQA
+      group count integral** (llama4: 40→48 with kv=8 → G=6).
+    * kv heads shard only when ≥ the axis and divisible; smaller kv groups
+      are replicated (their projections are tiny), except MHA-style counts
+      (kv == q) which pad together (minicpm: 36/36 → 48/48).
+    """
+    hq = pad_to_multiple(num_heads, MODEL_AXIS_SIZE)
+    if num_kv_heads == num_heads:
+        return hq, hq
+    kv = num_kv_heads
+    while hq % kv:
+        hq += MODEL_AXIS_SIZE                 # keep G = hq / kv integral
+    return hq, kv

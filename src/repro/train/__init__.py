@@ -1,0 +1,4 @@
+from .losses import cross_entropy, token_accuracy  # noqa: F401
+from .step import TrainConfig, make_train_step, make_strads_train_step, \
+    init_train_state  # noqa: F401
+from .serve import make_prefill_step, make_decode_step, greedy_generate  # noqa: F401

@@ -1,0 +1,38 @@
+"""Token-level losses over the padded-vocab logits.
+
+Vocab padding (sharding/rules.padded_vocab) is masked to −inf before the
+softmax so the normalizer only runs over real classes."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _mask_pad(logits: jax.Array, vocab_size: int) -> jax.Array:
+    vp = logits.shape[-1]
+    if vp == vocab_size:
+        return logits
+    mask = jnp.arange(vp) < vocab_size
+    return jnp.where(mask, logits, -1e30)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab_size: int,
+                  label_mask: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Mean CE over (B,S) tokens.  Returns (loss, denominator)."""
+    lf = _mask_pad(logits.astype(jnp.float32), vocab_size)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if label_mask is None:
+        label_mask = jnp.ones_like(nll)
+    denom = jnp.maximum(jnp.sum(label_mask), 1.0)
+    return jnp.sum(nll * label_mask) / denom, denom
+
+
+def token_accuracy(logits: jax.Array, labels: jax.Array, vocab_size: int
+                   ) -> jax.Array:
+    lf = _mask_pad(logits.astype(jnp.float32), vocab_size)
+    return jnp.mean((jnp.argmax(lf, -1) == labels).astype(jnp.float32))

@@ -1,0 +1,71 @@
+"""Serving steps: batched prefill + autoregressive decode.
+
+``decode_32k`` / ``long_500k`` dry-run shapes lower ``decode_step`` — one
+new token against a ``cache_len`` KV cache / recurrent state.  For full-
+attention architectures ``long_500k`` uses the sliding-window variant
+(ring-buffer cache of ``LONG_WINDOW`` slots), which is what makes the
+shape sub-quadratic; SSM/hybrid archs carry O(1) recurrent state instead
+(their "cache_len" only sizes the attention slots they do have, if any).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as M
+
+# Sliding-window width used for long-context decode on attention archs.
+LONG_WINDOW = 8192
+
+
+def make_prefill_step(cfg, cache_len: int, window: Optional[int] = None):
+    def prefill_step(params, batch):
+        return M.prefill(cfg, params, batch, cache_len=cache_len,
+                         window=window)
+    return prefill_step
+
+
+def make_decode_step(cfg, window: Optional[int] = None):
+    def decode_step(params, cache, token, pos):
+        return M.decode_step(cfg, params, cache, token, pos, window=window)
+    return decode_step
+
+
+def greedy_generate(cfg, params, batch: Dict[str, jax.Array], *,
+                    steps: int, cache_len: int,
+                    window: Optional[int] = None,
+                    rng: Optional[jax.Array] = None,
+                    temperature: float = 0.0) -> jax.Array:
+    """Prefill then generate ``steps`` tokens (greedy or sampled).
+
+    Returns (B, steps) int32.  Runs as a lax.scan over decode steps, so it
+    jits into a single program — this is the serving driver the examples
+    use."""
+    logits, cache = M.prefill(cfg, params, batch, cache_len=cache_len,
+                              window=window)
+    n_front = cfg.frontend_tokens if cfg.frontend == "vision" else 0
+    start = batch["tokens"].shape[1] + n_front
+
+    def pick(lg, key):
+        lg = lg[:, :cfg.vocab_size]
+        if temperature <= 0.0:
+            return jnp.argmax(lg, -1).astype(jnp.int32)
+        return jax.random.categorical(key, lg / temperature).astype(jnp.int32)
+
+    key = rng if rng is not None else jax.random.PRNGKey(0)
+    tok0 = pick(logits, key)
+
+    def step(carry, i):
+        cache, tok, key = carry
+        key, sub = jax.random.split(key)
+        lg, cache = M.decode_step(cfg, params, cache, tok,
+                                  jnp.int32(start) + i, window=window)
+        nxt = pick(lg, sub)
+        return (cache, nxt, key), tok
+
+    (_, _, _), toks = jax.lax.scan(step, (cache, tok0, key),
+                                   jnp.arange(steps, dtype=jnp.int32))
+    return jnp.moveaxis(toks, 0, 1)                       # (B, steps)

@@ -1,0 +1,199 @@
+"""Training steps.
+
+* ``make_train_step`` — standard full-parameter AdamW step (the dry-run
+  lowers this for the ``train_4k`` shape).
+* ``make_strads_train_step`` — the paper's technique as a first-class
+  trainer feature: a DynamicPriority block scheduler (core/block_scheduler)
+  picks which layer-blocks receive optimizer updates each step
+  (schedule), per-block update norms are the partial results (push), the
+  masked AdamW commit is the aggregation (pull), and SPMD program order
+  is the BSP sync.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.block_scheduler import (BlockScheduleConfig, block_norms,
+                                    init_priority, mask_updates_by_block,
+                                    select_blocks, update_priority)
+from ..models import model as M
+from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
+from .losses import cross_entropy, token_accuracy
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: AdamWConfig = AdamWConfig()
+    schedule: Optional[Callable[[jax.Array], jax.Array]] = None
+    peak_lr: float = 3e-4
+    microbatches: int = 1            # grad accumulation (llama4-class fit)
+    accum_dtype: str = "bfloat16"    # grad accumulator dtype
+
+
+def _lr(tc: TrainConfig, step: jax.Array) -> jax.Array:
+    if tc.schedule is None:
+        return jnp.asarray(tc.peak_lr, jnp.float32)
+    return tc.schedule(step)
+
+
+def init_train_state(cfg, tc: TrainConfig, rng: jax.Array) -> Dict[str, Any]:
+    params = M.init_params(cfg, rng)
+    return {"params": params, "opt": adamw_init(params, tc.adamw),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def loss_fn(cfg, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = M.forward(cfg, params, batch, train=True)
+    label_mask = batch.get("label_mask")
+    ce, _ = cross_entropy(logits, batch["labels"], cfg.vocab_size,
+                          label_mask)
+    loss = ce + cfg.router_aux_weight * aux
+    return loss, {"ce": ce, "aux": aux,
+                  "acc": token_accuracy(logits, batch["labels"],
+                                        cfg.vocab_size)}
+
+
+def _accumulated_grads(cfg, tc: TrainConfig, params, batch):
+    """Grad accumulation over ``tc.microbatches`` via lax.scan: live
+    activation footprint shrinks ×microbatches (the fit-enabler for the
+    400B-class train_4k dry-run); grads accumulate in ``accum_dtype``."""
+    mb = tc.microbatches
+    split = lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+    batches = jax.tree_util.tree_map(split, batch)
+    adt = jnp.dtype(tc.accum_dtype)
+    acc0 = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, adt), params)
+
+    def mb_step(acc, mbatch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, mbatch), has_aux=True)(params)
+        acc = jax.tree_util.tree_map(
+            lambda a, g: a + g.astype(adt), acc, grads)
+        return acc, (loss, metrics)
+
+    acc, (losses, metricses) = jax.lax.scan(mb_step, acc0, batches)
+    grads = jax.tree_util.tree_map(lambda a: a / mb, acc)
+    loss = jnp.mean(losses)
+    metrics = jax.tree_util.tree_map(jnp.mean, metricses)
+    return loss, metrics, grads
+
+
+def make_train_step(cfg, tc: TrainConfig):
+    def train_step(state, batch):
+        if tc.microbatches > 1:
+            loss, metrics, grads = _accumulated_grads(
+                cfg, tc, state["params"], batch)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, batch),
+                has_aux=True)(state["params"])
+        lr = _lr(tc, state["step"])
+        new_p, new_opt, gnorm = adamw_update(
+            grads, state["opt"], state["params"], lr, tc.adamw)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return ({"params": new_p, "opt": new_opt,
+                 "step": state["step"] + 1}, metrics)
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# STRADS block-coordinate training
+# ---------------------------------------------------------------------------
+
+def layer_blocks(cfg, params) -> Tuple[Dict[str, int], int]:
+    """Assign every parameter to a block: one block per layer-group scan
+    step (plus one for embeddings/head/shared)."""
+    leaves, _ = jax.tree_util.tree_flatten_with_path(params)
+    if cfg.family == "ssm":
+        num_layer_blocks = cfg.num_layers
+    else:
+        from ..models.transformer import group_layout
+        num_layer_blocks, _ = group_layout(cfg)
+    mapping: Dict[str, int] = {}
+    for path, leaf in leaves:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        if name.startswith("layers/layer_"):          # unrolled xlstm
+            mapping[name] = int(name.split("_")[1].split("/")[0])
+        elif name.startswith("layers/"):
+            mapping[name] = -1                        # scanned: per-step mask
+        else:
+            mapping[name] = num_layer_blocks          # embeddings & co
+    return mapping, num_layer_blocks + 1
+
+
+def make_strads_train_step(cfg, tc: TrainConfig, sched: BlockScheduleConfig):
+    """Block-coordinate variant.  State gains "priority" and "rng".
+
+    For scanned stacks the per-layer mask is applied along the stacked
+    leading dim (every layer-group leaf has shape (steps, ...)); for
+    unrolled stacks the block_of_param mapping is used."""
+
+    def train_step(state, batch):
+        rng, sub = jax.random.split(state["rng"])
+        mask = select_blocks(sched, state["priority"], sub)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(state["params"])
+
+        def mask_updates(updates):
+            def leaf(path, u):
+                name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                                for p in path)
+                if name.startswith("layers/layer_"):
+                    b = int(name.split("_")[1].split("/")[0])
+                    return u * mask[b]
+                if name.startswith("layers/"):        # scanned (steps, ...)
+                    m = mask[:u.shape[0]].reshape(
+                        (u.shape[0],) + (1,) * (u.ndim - 1))
+                    return u * m.astype(u.dtype)
+                return u * mask[-1]
+            return jax.tree_util.tree_map_with_path(leaf, updates)
+
+        def norms(updates):
+            sq = jnp.zeros((sched.num_blocks,), jnp.float32)
+            for path, u in jax.tree_util.tree_flatten_with_path(updates)[0]:
+                name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                                for p in path)
+                uf = jnp.square(u.astype(jnp.float32))
+                if name.startswith("layers/layer_"):
+                    b = int(name.split("_")[1].split("/")[0])
+                    sq = sq.at[b].add(jnp.sum(uf))
+                elif name.startswith("layers/"):
+                    per = jnp.sum(uf, axis=tuple(range(1, u.ndim)))
+                    sq = sq.at[:u.shape[0]].add(per)
+                else:
+                    sq = sq.at[-1].add(jnp.sum(uf))
+            return jnp.sqrt(sq)
+
+        lr = _lr(tc, state["step"])
+        # capture pre-mask updates for priorities via a small closure hack:
+        captured = {}
+        def mask_and_capture(updates):
+            captured["norms"] = norms(updates)
+            return mask_updates(updates)
+        new_p, new_opt, gnorm = adamw_update(
+            grads, state["opt"], state["params"], lr, tc.adamw,
+            update_mask=mask_and_capture)
+        priority = update_priority(sched, state["priority"],
+                                   captured["norms"], mask)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr,
+                       blocks_active=jnp.sum(mask))
+        return ({"params": new_p, "opt": new_opt, "step": state["step"] + 1,
+                 "priority": priority, "rng": rng}, metrics)
+
+    return train_step
+
+
+def init_strads_state(cfg, tc: TrainConfig, sched: BlockScheduleConfig,
+                      rng: jax.Array) -> Dict[str, Any]:
+    r1, r2 = jax.random.split(rng)
+    st = init_train_state(cfg, tc, r1)
+    st["priority"] = init_priority(sched)
+    st["rng"] = r2
+    return st

@@ -1,0 +1,13 @@
+"""Shared test fixtures.
+
+NOTE: XLA_FLAGS device-count forcing is deliberately NOT set here — smoke
+tests and benches see the real single device.  Multi-worker tests spawn
+subprocesses (see helpers in test_multiworker.py) or use mesh size 1.
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,121 @@
+"""System-level invariants, property-tested across families.
+
+* Causality: perturbing future tokens must not change past logits — for
+  every decoder family (attention masks, Mamba scans, xLSTM recurrences,
+  MoE routing are all causal paths).
+* STRADS block masking: unscheduled blocks must not move under the
+  block-coordinate trainer.
+* RoPE decode consistency: rotating at absolute positions makes logits
+  depend only on relative offsets within a window.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import model as M
+
+CAUSAL_ARCHS = [a for a in ARCHS if not get_config(a).encoder_only]
+
+
+@pytest.mark.parametrize("arch", CAUSAL_ARCHS)
+def test_causality(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.family == "moe":
+        # token drops couple tokens within a dispatch group via capacity
+        # ranking; causality holds in the no-drop regime
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    prm = M.init_params(cfg, key)
+    B, S, cut = 2, 20, 11
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.frontend == "vision":
+        batch["frontend"] = jax.random.normal(
+            key, (B, cfg.frontend_tokens, cfg.d_model), jnp.float32) * 0.02
+    l1, _ = M.forward(cfg, prm, batch)
+    toks2 = toks.at[:, cut:].set((toks[:, cut:] + 7) % cfg.vocab_size)
+    l2, _ = M.forward(cfg, prm, dict(batch, tokens=toks2))
+    np.testing.assert_allclose(
+        np.asarray(l1[:, :cut], np.float32),
+        np.asarray(l2[:, :cut], np.float32), rtol=0, atol=1e-3,
+        err_msg=f"{arch}: future tokens leaked into past logits")
+    # and the perturbation is actually visible at/after the cut
+    assert float(jnp.max(jnp.abs(
+        l1[:, cut:].astype(jnp.float32)
+        - l2[:, cut:].astype(jnp.float32)))) > 1e-4
+
+
+def test_hubert_is_bidirectional():
+    cfg = get_config("hubert-xlarge").reduced()
+    key = jax.random.PRNGKey(0)
+    prm = M.init_params(cfg, key)
+    frames = jax.random.normal(key, (1, 16, cfg.d_model), jnp.float32)
+    l1, _ = M.encode_step(cfg, prm, {"frames": frames})
+    frames2 = frames.at[:, -1].set(-frames[:, -1] * 5.0)
+    l2, _ = M.encode_step(cfg, prm, {"frames": frames2})
+    # encoder attention is non-causal: early positions see the change
+    assert float(jnp.max(jnp.abs(
+        l1[:, 0].astype(jnp.float32)
+        - l2[:, 0].astype(jnp.float32)))) > 1e-6
+
+
+def test_strads_unscheduled_blocks_do_not_move():
+    from repro.core.block_scheduler import BlockScheduleConfig
+    from repro.data import SyntheticLMConfig, make_batch
+    from repro.train import TrainConfig
+    from repro.train.step import init_strads_state, make_strads_train_step
+
+    cfg = get_config("granite-3-2b").reduced()
+    tc = TrainConfig(adamw=dataclasses.replace(tc_default(), weight_decay=0.0))
+    sched = BlockScheduleConfig(num_blocks=3, blocks_per_step=1,
+                                candidates_per_step=2, min_distance=1)
+    state = init_strads_state(cfg, tc, sched, jax.random.PRNGKey(0))
+    before = jax.tree_util.tree_map(lambda x: x, state["params"])
+    step = jax.jit(make_strads_train_step(cfg, tc, sched))
+    dc = SyntheticLMConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                           batch_size=4)
+    state, metrics = step(state, make_batch(dc, 0))
+    assert float(metrics["blocks_active"]) <= sched.blocks_per_step
+    # per-layer stacked leaves: layers whose mask was 0 must be unchanged
+    moved = []
+    for (path, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(before["params"]
+                                                 if "params" in before
+                                                 else before)[0],
+            jax.tree_util.tree_flatten_with_path(state["params"])[0]):
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        if name.startswith("layers/") and a.ndim >= 1 \
+                and a.shape[0] == 2:                    # stacked 2 layers
+            per_layer = np.asarray(jnp.sum(jnp.abs(
+                a.astype(jnp.float32) - b.astype(jnp.float32)),
+                axis=tuple(range(1, a.ndim))))
+            moved.append(per_layer > 0)
+    moved = np.stack(moved)                              # (leaves, 2)
+    layer_moved = moved.any(axis=0)
+    # exactly the scheduled layer block(s) moved — at most 1 of 2 here
+    assert layer_moved.sum() <= 1, layer_moved
+
+
+def tc_default():
+    from repro.optim import AdamWConfig
+    return AdamWConfig()
+
+
+def test_window_limits_receptive_field():
+    """With window W, logits at position t are invariant to tokens more
+    than W positions back."""
+    cfg = dataclasses.replace(get_config("granite-3-2b").reduced())
+    key = jax.random.PRNGKey(2)
+    prm = M.init_params(cfg, key)
+    B, S, W = 1, 24, 4
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    l1, _ = M.forward(cfg, prm, {"tokens": toks}, window=W)
+    toks2 = toks.at[:, 0:2].set((toks[:, 0:2] + 3) % cfg.vocab_size)
+    l2, _ = M.forward(cfg, prm, {"tokens": toks2}, window=W)
+    np.testing.assert_allclose(
+        np.asarray(l1[:, 10:], np.float32),
+        np.asarray(l2[:, 10:], np.float32), rtol=0, atol=1e-3)

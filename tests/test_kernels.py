@@ -1,0 +1,240 @@
+"""Per-kernel validation: shape/dtype sweeps asserting allclose against the
+ref.py pure-jnp oracles, in Pallas interpret mode (CPU container)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.lasso_cd import gram_block, lasso_partial
+from repro.kernels.moe_gating import topk_gating
+from repro.kernels.ssm_scan import ssm_scan
+
+R = np.random.default_rng(42)
+
+
+def randn(*shape, dtype=jnp.float32):
+    return jnp.asarray(R.normal(size=shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # B, Sq, Skv, Hq, Hkv, D, causal, window, bq, bk
+    (2, 32, 32, 4, 2, 8, True, None, 16, 16),
+    (1, 64, 64, 2, 2, 16, True, 8, 16, 16),
+    (1, 1, 40, 4, 1, 8, True, None, 8, 16),     # decode
+    (2, 17, 33, 2, 1, 8, False, None, 8, 8),    # ragged, full attn
+    (1, 1, 64, 8, 2, 16, True, 16, 8, 16),      # decode + window
+    (1, 24, 24, 1, 1, 4, True, None, 8, 8),
+    (1, 16, 128, 4, 4, 8, True, 32, 8, 32),     # prefill suffix + window
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_flash_attention_matches_ref(case):
+    B, Sq, Skv, Hq, Hkv, D, causal, window, bq, bk = case
+    q = randn(B, Sq, Hq, D)
+    k = randn(B, Skv, Hkv, D)
+    v = randn(B, Skv, Hkv, D)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    tr = lambda x: x.transpose(0, 2, 1, 3)
+    got = tr(flash_attention(tr(q), tr(k), tr(v), causal=causal,
+                             window=window, block_q=bq, block_k=bk,
+                             interpret=True))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q = randn(1, 32, 2, 8, dtype=dtype)
+    k = randn(1, 32, 2, 8, dtype=dtype)
+    v = randn(1, 32, 2, 8, dtype=dtype)
+    want = ref.attention_ref(q, k, v, causal=True)
+    tr = lambda x: x.transpose(0, 2, 1, 3)
+    got = tr(flash_attention(tr(q), tr(k), tr(v), causal=True,
+                             block_q=16, block_k=16, interpret=True))
+    assert got.dtype == dtype
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 48), st.integers(1, 48),
+       st.sampled_from([(4, 4), (4, 2), (4, 1), (2, 1)]),
+       st.booleans(), st.sampled_from([None, 4, 16]))
+def test_flash_attention_property(b, sq, skv, heads, causal, window):
+    """Property sweep: arbitrary ragged shapes, GQA ratios, masks."""
+    if causal and sq > skv:
+        skv = sq      # causal suffix layout needs Skv >= Sq
+    hq, hkv = heads
+    q = randn(b, sq, hq, 8)
+    k = randn(b, skv, hkv, 8)
+    v = randn(b, skv, hkv, 8)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    tr = lambda x: x.transpose(0, 2, 1, 3)
+    got = tr(flash_attention(tr(q), tr(k), tr(v), causal=causal,
+                             window=window, block_q=8, block_k=8,
+                             interpret=True))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssm scan
+# ---------------------------------------------------------------------------
+
+SSM_CASES = [
+    # B, S, C, N, chunk
+    (2, 32, 8, 4, 8),
+    (1, 17, 4, 8, 8),       # ragged seq
+    (1, 1, 8, 16, 4),       # decode: single step
+    (3, 64, 16, 8, 16),
+]
+
+
+@pytest.mark.parametrize("case", SSM_CASES)
+def test_ssm_scan_matches_ref(case):
+    B, S, C, N, chunk = case
+    x = randn(B, S, C)
+    dt = jnp.abs(randn(B, S, C)) * 0.1
+    A = -jnp.abs(randn(C)) - 0.1
+    Bm = randn(B, S, N)
+    Cm = randn(B, S, N)
+    y_want, h_want = ref.ssm_scan_ref(x, dt, A, Bm, Cm)
+    y_got, h_got = ssm_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_want),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_got), np.asarray(h_want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssm_scan_initial_state_threading():
+    """Chunked scan with h0 == running the ref in two halves."""
+    B, S, C, N = 1, 24, 4, 4
+    x, dt = randn(B, S, C), jnp.abs(randn(B, S, C)) * 0.1
+    A = -jnp.abs(randn(C)) - 0.1
+    Bm, Cm = randn(B, S, N), randn(B, S, N)
+    y1, h1 = ref.ssm_scan_ref(x[:, :12], dt[:, :12], A, Bm[:, :12],
+                              Cm[:, :12])
+    y2, h2 = ref.ssm_scan_ref(x[:, 12:], dt[:, 12:], A, Bm[:, 12:],
+                              Cm[:, 12:], h0=h1)
+    y_got, h_got = ssm_scan(x, dt, A, Bm, Cm, chunk=6, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_got[:, 12:]), np.asarray(y2),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_got), np.asarray(h2),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 2), st.integers(1, 40), st.sampled_from([2, 4, 8]),
+       st.sampled_from([2, 4]), st.sampled_from([4, 8]))
+def test_ssm_scan_property(b, s, c, n, chunk):
+    x = randn(b, s, c)
+    dt = jnp.abs(randn(b, s, c)) * 0.1
+    A = -jnp.abs(randn(c)) - 0.1
+    Bm, Cm = randn(b, s, n), randn(b, s, n)
+    y_want, h_want = ref.ssm_scan_ref(x, dt, A, Bm, Cm)
+    y_got, h_got = ssm_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_want),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# moe gating
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,E,k,bt", [
+    (16, 8, 2, 8), (100, 16, 2, 32), (7, 128, 1, 8), (64, 16, 4, 16),
+])
+def test_topk_gating_matches_ref(T, E, k, bt):
+    logits = randn(T, E)
+    p_want, i_want = ref.topk_gating_ref(logits, k)
+    p_got, i_got = topk_gating(logits, k, block_t=bt, interpret=True)
+    np.testing.assert_allclose(np.asarray(p_got), np.asarray(p_want),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i_got), np.asarray(i_want))
+
+
+def test_topk_gating_probs_sum_to_one():
+    logits = randn(33, 16)
+    p, i = topk_gating(logits, 3, block_t=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(p.sum(-1)), 1.0, atol=1e-5)
+    assert ((0 <= np.asarray(i)) & (np.asarray(i) < 16)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 50), st.sampled_from([4, 16, 64]),
+       st.sampled_from([1, 2, 4]))
+def test_topk_gating_property(t, e, k):
+    logits = randn(t, e)
+    p_want, i_want = ref.topk_gating_ref(logits, k)
+    p_got, i_got = topk_gating(logits, k, block_t=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(p_got), np.asarray(p_want),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i_got), np.asarray(i_want))
+
+
+# ---------------------------------------------------------------------------
+# lasso cd
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,U,bn", [(64, 8, 16), (100, 4, 32), (7, 16, 8),
+                                    (256, 32, 64)])
+def test_lasso_partial_matches_ref(n, U, bn):
+    X, r = randn(n, U), randn(n)
+    want = ref.lasso_partial_ref(X, r)
+    got = lasso_partial(X, r, block_n=bn, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("n,U,bn", [(64, 8, 16), (100, 12, 32), (9, 4, 8)])
+def test_gram_block_matches_ref(n, U, bn):
+    X = randn(n, U)
+    want = ref.gram_ref(X)
+    got = gram_block(X, block_n=bn, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 80), st.integers(1, 16), st.sampled_from([8, 16, 32]))
+def test_lasso_partial_property(n, u, bn):
+    X, r = randn(n, u), randn(n)
+    want = ref.lasso_partial_ref(X, r)
+    got = lasso_partial(X, r, block_n=bn, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ops dispatch
+# ---------------------------------------------------------------------------
+
+def test_ops_ref_and_interpret_agree():
+    q = randn(1, 16, 2, 8)
+    k = randn(1, 16, 1, 8)
+    v = randn(1, 16, 1, 8)
+    a = ops.attention(q, k, v, backend="ref")
+    b = ops.attention(q, k, v, backend="interpret", block_q=8, block_k=8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+    logits = randn(12, 8)
+    pa, ia = ops.topk_gating(logits, 2, backend="ref")
+    pb, ib = ops.topk_gating(logits, 2, backend="interpret", block_t=8)
+    np.testing.assert_allclose(np.asarray(pa), np.asarray(pb), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+
+
+def test_ops_auto_resolves_to_ref_on_cpu():
+    q = randn(1, 8, 1, 4)
+    out = ops.attention(q, q, q)     # backend="auto" on CPU → ref path
+    assert out.shape == (1, 8, 1, 4)

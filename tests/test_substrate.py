@@ -1,0 +1,177 @@
+"""Substrate tests: optimizer, schedules, data pipeline, checkpointing,
+losses, serving loop — plus hypothesis property tests on their invariants."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.data import SyntheticLMConfig, make_batch
+from repro.models import model as M
+from repro.optim import AdamWConfig, adamw_init, adamw_update, \
+    cosine_schedule, wsd_schedule
+from repro.optim.adamw import global_norm
+from repro.train import greedy_generate
+from repro.train.losses import cross_entropy, token_accuracy
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def test_adamw_minimizes_quadratic():
+    cfg = AdamWConfig(weight_decay=0.0, clip_norm=None)
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    opt = adamw_init(params, cfg)
+    loss = lambda p: jnp.sum(jnp.square(p["w"] - 1.0))
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(g, opt, params, 0.05, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]),
+                               np.ones(3), atol=1e-2)
+
+
+def test_adamw_bf16_moments_still_converge():
+    cfg = AdamWConfig(weight_decay=0.0, clip_norm=None,
+                      moment_dtype="bfloat16")
+    params = {"w": jnp.array([4.0])}
+    opt = adamw_init(params, cfg)
+    assert opt["m"]["w"].dtype == jnp.bfloat16
+    loss = lambda p: jnp.sum(jnp.square(p["w"]))
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(g, opt, params, 0.05, cfg)
+    assert abs(float(params["w"][0])) < 0.1
+
+
+def test_adamw_clip_bounds_update():
+    cfg = AdamWConfig(clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    opt = adamw_init(params, cfg)
+    huge = {"w": jnp.full((4,), 1e6)}
+    _, _, gnorm = adamw_update(huge, opt, params, 1e-3, cfg)
+    assert float(gnorm) == pytest.approx(2e6, rel=1e-3)  # pre-clip norm
+
+
+@given(st.floats(1e-5, 1e-2), st.integers(1, 50), st.integers(60, 200))
+@settings(max_examples=15, deadline=None)
+def test_schedules_bounded_and_warm(peak, warmup, total):
+    for sched in (cosine_schedule(peak, warmup, total),
+                  wsd_schedule(peak, warmup, total // 2, total // 4)):
+        for s in (0, warmup, total // 2, total, total * 2):
+            v = float(sched(s))
+            assert 0.0 <= v <= peak * (1 + 1e-6)
+    assert float(cosine_schedule(peak, warmup, total)(warmup)) \
+        == pytest.approx(peak, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 40))
+@settings(max_examples=10, deadline=None)
+def test_cross_entropy_uniform_is_log_v(v):
+    logits = jnp.zeros((2, 3, v + 8))        # 8 padded classes
+    labels = jnp.zeros((2, 3), jnp.int32)
+    loss, denom = cross_entropy(logits, labels, v)
+    assert float(loss) == pytest.approx(np.log(v), abs=1e-4)
+    assert float(denom) == 6.0
+
+
+def test_cross_entropy_label_mask():
+    logits = jnp.zeros((1, 4, 8))
+    labels = jnp.zeros((1, 4), jnp.int32)
+    mask = jnp.array([[1.0, 1.0, 0.0, 0.0]])
+    loss, denom = cross_entropy(logits, labels, 8, mask)
+    assert float(denom) == 2.0
+
+
+def test_token_accuracy_perfect():
+    logits = jax.nn.one_hot(jnp.array([[1, 2], [3, 0]]), 8) * 10
+    labels = jnp.array([[1, 2], [3, 0]])
+    assert float(token_accuracy(logits, labels, 8)) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_shaped():
+    cfg = SyntheticLMConfig(vocab_size=128, seq_len=32, batch_size=4,
+                            seed=7)
+    b1, b2 = make_batch(cfg, 5), make_batch(cfg, 5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = make_batch(cfg, 6)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+    assert b1["tokens"].shape == (4, 32) and b1["labels"].shape == (4, 32)
+    # labels are next-token-shifted tokens
+    np.testing.assert_array_equal(np.asarray(b1["tokens"][:, 1:]),
+                                  np.asarray(b1["labels"][:, :-1]))
+
+
+@given(st.integers(8, 512))
+@settings(max_examples=10, deadline=None)
+def test_data_tokens_in_vocab(v):
+    cfg = SyntheticLMConfig(vocab_size=v, seq_len=16, batch_size=2)
+    b = make_batch(cfg, 0)
+    assert int(b["tokens"].min()) >= 0
+    assert int(b["tokens"].max()) < v
+
+
+def test_data_frontends():
+    cfg = SyntheticLMConfig(vocab_size=64, seq_len=16, batch_size=2)
+    audio = make_batch(cfg, 0, d_model=32, frames=True)
+    assert audio["frames"].shape == (2, 16, 32) and "tokens" not in audio
+    vlm = make_batch(cfg, 0, d_model=32, frontend_tokens=8)
+    assert vlm["frontend"].shape == (2, 8, 32) and "tokens" in vlm
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("xlstm-125m").reduced()
+    prm = M.init_params(cfg, jax.random.PRNGKey(0))
+    ckpt = str(tmp_path / "ck")
+    save_checkpoint(ckpt, 3, {"params": prm})
+    save_checkpoint(ckpt, 7, {"params": prm})
+    assert latest_step(ckpt) == 7
+    template = {"params": M.init_params(cfg, jax.random.PRNGKey(1))}
+    restored = restore_checkpoint(ckpt, 7, template)
+    for a, b in zip(jax.tree_util.tree_leaves(restored["params"]),
+                    jax.tree_util.tree_leaves(prm)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    ckpt = str(tmp_path / "ck")
+    save_checkpoint(ckpt, 1, {"w": jnp.zeros((3,))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(ckpt, 1, {"w": jnp.zeros((4,))})
+
+
+# ---------------------------------------------------------------------------
+# serving loop
+# ---------------------------------------------------------------------------
+
+def test_greedy_generate_deterministic():
+    cfg = get_config("granite-3-2b").reduced()
+    prm = M.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    out1 = greedy_generate(cfg, prm, {"tokens": toks}, steps=6,
+                           cache_len=32)
+    out2 = greedy_generate(cfg, prm, {"tokens": toks}, steps=6,
+                           cache_len=32)
+    assert out1.shape == (2, 6)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert int(out1.max()) < cfg.vocab_size
