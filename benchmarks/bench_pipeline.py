@@ -1,0 +1,87 @@
+"""Executor benchmark: host loop vs scanned vs pipelined (the tentpole
+claim of the pipelined executor PR).
+
+For 1/2/4 forced host devices, run STRADS Lasso under the three engine
+paths and report rounds/sec with compile time excluded (each path is
+warmed up on its own program first).  The host loop pays one dispatch and
+one host↔device sync per round; ``run_scanned`` amortizes R rounds into
+one XLA program; ``pipelined`` additionally overlaps round t+1's
+schedule with round t's push/pull (one-round-stale schedules, paper
+§pipelining).  CPU caveat: forced host devices share the same cores, so
+cross-U scaling is not meaningful here — the loop-vs-scan dispatch
+overhead ratio is.
+
+Writes ``benchmarks/results/BENCH_pipeline.json`` so later PRs have a
+perf trajectory to compare against.
+"""
+from __future__ import annotations
+
+import json
+
+from .common import run_sub, save
+
+_CODE = """
+import json, time
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.apps import lasso
+from repro.core import worker_mesh
+
+U, R = {workers}, {rounds}
+rng = np.random.default_rng(0)
+X, y, _ = lasso.synthetic_correlated(rng, n={rows}, J={feats}, k_true=10)
+cfg = lasso.LassoConfig(num_features={feats}, lam=0.02, block_size=16,
+                        num_candidates=64, rho=0.3)
+mesh = worker_mesh(U)
+eng = lasso.make_engine(cfg, mesh)
+data = eng.shard_data({{"X": jnp.asarray(X), "y": jnp.asarray(y)}})
+
+def init():
+    st = eng.app.init_state(jax.random.key(0), y=y)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(
+            x, jax.sharding.NamedSharding(mesh, s)),
+        st, eng.app.state_specs())
+
+out = {{}}
+st = eng.run(init(), data, jax.random.key(1), 2)          # compile warmup
+t0 = time.time()
+st = eng.run(st, data, jax.random.key(1), R)
+jax.block_until_ready(st)
+out["loop"] = R / (time.time() - t0)
+for name, depth in (("scan", 0), ("pipelined", 1)):
+    st = eng.run_scanned(init(), data, jax.random.key(1), R,
+                         pipeline_depth=depth)             # compile warmup
+    st = init()
+    t0 = time.time()
+    st = eng.run_scanned(st, data, jax.random.key(1), R,
+                         pipeline_depth=depth)
+    jax.block_until_ready(st)
+    out[name] = R / (time.time() - t0)
+print("PAYLOAD:" + json.dumps(out))
+"""
+
+
+def run(quick: bool = True):
+    rounds = 60 if quick else 300
+    rows, feats = (256, 256) if quick else (2048, 2048)
+    out = {"rounds": rounds, "rows": rows, "feats": feats, "workers": {}}
+    for U in (1, 2, 4):
+        stdout = run_sub(_CODE.format(workers=U, rounds=rounds,
+                                      rows=rows, feats=feats),
+                         devices=U, timeout=560)
+        payload = json.loads(
+            stdout.strip().splitlines()[-1][len("PAYLOAD:"):])
+        out["workers"][U] = payload
+    save("BENCH_pipeline", out)
+    return out
+
+
+def rows(out):
+    for U, p in out["workers"].items():
+        for name in ("loop", "scan", "pipelined"):
+            rps = p[name]
+            yield (f"pipeline/U{U}/{name}_us_per_round", 1e6 / rps,
+                   round(rps, 2))
+        yield (f"pipeline/U{U}/scan_speedup_vs_loop", 0.0,
+               round(p["scan"] / p["loop"], 3))

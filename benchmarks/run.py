@@ -12,7 +12,8 @@ import argparse
 import sys
 import traceback
 
-from . import bench_lasso, bench_lda, bench_memory, bench_mf, bench_scaling
+from . import (bench_lasso, bench_lda, bench_memory, bench_mf,
+               bench_pipeline, bench_scaling)
 
 BENCHES = {
     "lasso": bench_lasso,       # Fig 8/9 right
@@ -20,6 +21,7 @@ BENCHES = {
     "lda": bench_lda,           # Fig 5 + Fig 8/9 left
     "memory": bench_memory,     # Fig 3
     "scaling": bench_scaling,   # Fig 10
+    "pipeline": bench_pipeline,  # loop vs scan vs pipelined executor
 }
 
 

@@ -1,0 +1,43 @@
+"""Shared executor dispatch for the app-level ``fit`` drivers.
+
+Every app exposes ``fit(..., executor="loop"|"scan"|"pipelined")``; the
+non-loop paths all reduce to the same call into
+:meth:`~repro.core.engine.StradsEngine.run_scanned` plus the same trace
+decimation, so they live here once.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, Optional, Tuple
+
+_EXEC_DEPTH = {"scan": 0, "pipelined": 1}
+
+
+def scan_depth(executor: str) -> int:
+    """Map an executor name to its pipeline depth (raising on typos)."""
+    depth = _EXEC_DEPTH.get(executor)
+    if depth is None:
+        raise ValueError(f"executor must be 'loop', 'scan' or 'pipelined'; "
+                         f"got {executor!r}")
+    return depth
+
+
+def run_scanned_executor(eng, state, data, rng, num_rounds: int,
+                         executor: str,
+                         collect: Optional[Callable[[Any], Any]] = None):
+    """``run_scanned`` with the executor string resolved to a depth."""
+    return eng.run_scanned(state, data, rng, num_rounds,
+                           pipeline_depth=scan_depth(executor),
+                           collect=collect)
+
+
+def trace_points(num_rounds: int, trace_every: int) -> List[int]:
+    """The round indices a host-loop trace callback would record."""
+    return [t for t in range(num_rounds)
+            if t % trace_every == 0 or t == num_rounds - 1]
+
+
+def decimate(values, num_rounds: int,
+             trace_every: int) -> List[Tuple[int, float]]:
+    """Per-round collect output → the host-loop-style (t, float) trace."""
+    return [(t, float(values[t]))
+            for t in trace_points(num_rounds, trace_every)]

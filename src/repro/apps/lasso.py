@@ -33,8 +33,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import (DynamicPriorityScheduler, StradsAppBase,
                         StradsEngine)
-from repro.core.schedulers import dependency_filter, sample_candidates
+from repro.core.compat import shard_map
 from repro.kernels import ops
+
+from . import _exec
 
 
 def soft_threshold(x: jax.Array, lam: float) -> jax.Array:
@@ -77,7 +79,7 @@ class StradsLasso(StradsAppBase):
                              "residual r = y at β = 0)")
         return {
             "beta": jnp.zeros((J,), jnp.float32),
-            "delta": jnp.ones((J,), jnp.float32),   # uniform priority at t=0
+            "delta": self.dyn.init_carry(),         # scheduler scan carry
             "r": jnp.asarray(y, jnp.float32),       # r = y − Xβ, β=0
         }
 
@@ -135,8 +137,7 @@ class StradsLasso(StradsAppBase):
         # applies (mask already ensures kept indices are distinct).
         beta = state["beta"].at[idx].set(
             jnp.where(mask, beta_new, jnp.take(state["beta"], idx)))
-        delta = state["delta"].at[idx].set(
-            jnp.where(mask, jnp.abs(d), jnp.take(state["delta"], idx)))
+        delta = self.dyn.update_carry(state["delta"], idx, mask, d)
 
         # residual maintenance on this worker's rows (the automatic sync of
         # the shared quantity r):  r ← r − X_B Δβ
@@ -154,9 +155,16 @@ class StradsLasso(StradsAppBase):
             sse = 0.5 * jnp.sum(r * r)
             return jax.lax.psum(sse, "data") + cfg.lam * jnp.sum(jnp.abs(beta))
 
-        fn = jax.shard_map(local, mesh=mesh, in_specs=(P("data"), P()),
-                           out_specs=P(), check_vma=False)
+        fn = shard_map(local, mesh=mesh, in_specs=(P("data"), P()),
+                       out_specs=P())
         return jax.jit(lambda state: fn(state["r"], state["beta"]))
+
+    def objective_collect(self):
+        """Same objective as a global (non-shard_map) expression, usable as
+        a ``run_scanned`` collect fn inside the scan trace."""
+        lam = self.cfg.lam
+        return lambda s: (0.5 * jnp.sum(s["r"] * s["r"])
+                          + lam * jnp.sum(jnp.abs(s["beta"])))
 
 
 # ---------------------------------------------------------------------------
@@ -197,8 +205,14 @@ def make_engine(cfg: LassoConfig, mesh) -> StradsEngine:
 
 def fit(cfg: LassoConfig, X: np.ndarray, y: np.ndarray, mesh,
         num_rounds: int, rng: Optional[jax.Array] = None,
-        trace_every: int = 0):
-    """Run STRADS Lasso; returns (state, trace of objective values)."""
+        trace_every: int = 0, executor: str = "loop"):
+    """Run STRADS Lasso; returns (state, trace of objective values).
+
+    ``executor`` selects the engine path: ``"loop"`` (host loop, one jit
+    per round), ``"scan"`` (all rounds in one ``lax.scan`` program,
+    bit-identical to the loop), or ``"pipelined"`` (scan + one-round-stale
+    schedule prefetch — the paper's pipelined scheduler).
+    """
     rng = rng if rng is not None else jax.random.key(0)
     eng = make_engine(cfg, mesh)
     data = eng.shard_data({"X": jnp.asarray(X), "y": jnp.asarray(y)})
@@ -206,6 +220,17 @@ def fit(cfg: LassoConfig, X: np.ndarray, y: np.ndarray, mesh,
     state = jax.tree.map(
         lambda x, s: jax.device_put(x, jax.sharding.NamedSharding(mesh, s)),
         state, eng.app.state_specs())
+
+    if executor != "loop":
+        collect = eng.app.objective_collect() if trace_every else None
+        out = _exec.run_scanned_executor(eng, state, data, rng, num_rounds,
+                                         executor, collect)
+        if collect is None:
+            return out, []
+        state, ys = out
+        return state, _exec.decimate(np.asarray(ys), num_rounds,
+                                     trace_every)
+
     obj = eng.app.objective_fn(mesh)
     trace = []
 

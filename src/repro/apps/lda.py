@@ -36,7 +36,6 @@ regardless of cluster size.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +44,9 @@ from jax.scipy.special import gammaln
 from jax.sharding import PartitionSpec as P
 
 from repro.core import StradsAppBase, StradsEngine
+from repro.core.compat import shard_map
+
+from . import _exec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,6 +108,9 @@ class StradsLDA(StradsAppBase):
 
     def __init__(self, cfg: LDAConfig):
         self.cfg = cfg
+        # one full rotation = U rounds; the scanned executor unrolls a
+        # whole rotation per scan step so each ppermute stays static
+        self.phase_period = cfg.num_workers
 
     def static_phase(self, t: int) -> int:
         return t % self.cfg.num_workers
@@ -171,9 +176,9 @@ class StradsLDA(StradsAppBase):
             tot = jax.lax.psum(lb + ld, "data")
             return tot - jnp.sum(gammaln(s + cfg.padded_vocab * cfg.gamma))
 
-        fn = jax.shard_map(local, mesh=mesh,
-                           in_specs=(P("data"), P("data"), P()),
-                           out_specs=P(), check_vma=False)
+        fn = shard_map(local, mesh=mesh,
+                       in_specs=(P("data"), P("data"), P()),
+                       out_specs=P())
         return jax.jit(lambda st: fn(st["B"], st["D"], st["s"]))
 
 
@@ -289,8 +294,23 @@ def make_engine(cfg: LDAConfig, mesh, baseline: bool = False) -> StradsEngine:
                         state_specs=app.state_specs())
 
 
+def _global_loglik(cfg: LDAConfig, state):
+    """The collapsed log P(W, Z) as a plain global expression (equal to the
+    shard_map reduction — psum of per-shard sums is the global sum), so it
+    can run as a ``run_scanned`` collect fn inside the scan."""
+    lb = jnp.sum(gammaln(state["B"] + cfg.gamma))
+    ld = jnp.sum(gammaln(state["D"] + cfg.alpha)) \
+        - jnp.sum(gammaln(jnp.sum(state["D"], 1)
+                          + cfg.num_topics * cfg.alpha))
+    return lb + ld - jnp.sum(gammaln(state["s"]
+                                     + cfg.padded_vocab * cfg.gamma))
+
+
 def fit(cfg: LDAConfig, words, docs, z0, mesh, num_rounds: int,
-        baseline: bool = False, trace_every: int = 0):
+        baseline: bool = False, trace_every: int = 0,
+        executor: str = "loop"):
+    """``executor``: "loop" | "scan" | "pipelined" (see lasso.fit).  For
+    "pipelined", num_rounds must be a multiple of the rotation length U."""
     eng = make_engine(cfg, mesh, baseline=baseline)
     data = eng.shard_data({"words": jnp.asarray(words),
                            "docs": jnp.asarray(docs)})
@@ -300,6 +320,27 @@ def fit(cfg: LDAConfig, words, docs, z0, mesh, num_rounds: int,
     state = jax.tree.map(
         lambda x, sp: jax.device_put(x, jax.sharding.NamedSharding(mesh, sp)),
         state, eng.app.state_specs())
+
+    if executor != "loop":
+        collect = None
+        if trace_every:
+            def collect(s):
+                out = {"ll": _global_loglik(cfg, s)}
+                if "s_err" in s:
+                    out["s_err"] = s["s_err"]
+                return out
+        out = _exec.run_scanned_executor(eng, state, data,
+                                         jax.random.key(0), num_rounds,
+                                         executor, collect)
+        if collect is None:
+            return out, [], []
+        state, ys = out
+        trace = _exec.decimate(np.asarray(ys["ll"]), num_rounds,
+                               trace_every)
+        s_errs = (_exec.decimate(np.asarray(ys["s_err"]), num_rounds,
+                                 trace_every) if "s_err" in ys else [])
+        return state, trace, s_errs
+
     llfn = StradsLDA(cfg).loglik_fn(mesh) if not baseline else \
         _baseline_loglik(cfg, mesh)
     trace, s_errs = [], []
@@ -323,6 +364,6 @@ def _baseline_loglik(cfg: LDAConfig, mesh):
         lb = jnp.sum(gammaln(B + cfg.gamma))
         return tot + lb - jnp.sum(gammaln(s + cfg.padded_vocab * cfg.gamma))
 
-    fn = jax.shard_map(local, mesh=mesh, in_specs=(P(), P("data"), P()),
-                       out_specs=P(), check_vma=False)
+    fn = shard_map(local, mesh=mesh, in_specs=(P(), P("data"), P()),
+                   out_specs=P())
     return jax.jit(lambda st: fn(st["B"], st["D"], st["s"]))

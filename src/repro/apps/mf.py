@@ -36,6 +36,9 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import StradsAppBase, StradsEngine
+from repro.core.compat import shard_map
+
+from . import _exec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +52,8 @@ class MFConfig:
 
 class StradsMF(StradsAppBase):
     """Round-robin rank-wise CD on STRADS primitives."""
+
+    phase_period = 2                     # H-phase / W-phase alternation
 
     def __init__(self, cfg: MFConfig):
         self.cfg = cfg
@@ -137,10 +142,17 @@ class StradsMF(StradsAppBase):
             tot = jax.lax.psum(sse + cfg.lam * wn, "data")
             return tot + cfg.lam * jnp.sum(H * H)
 
-        fn = jax.shard_map(local, mesh=mesh,
-                           in_specs=(P("data"), P("data"), P()),
-                           out_specs=P(), check_vma=False)
+        fn = shard_map(local, mesh=mesh,
+                       in_specs=(P("data"), P("data"), P()),
+                       out_specs=P())
         return jax.jit(lambda s: fn(s["R"], s["W"], s["H"]))
+
+    def objective_collect(self):
+        """Global-expression objective for ``run_scanned`` collect."""
+        lam = self.cfg.lam
+        return lambda s: (jnp.sum(s["R"] * s["R"])
+                          + lam * jnp.sum(s["W"] * s["W"])
+                          + lam * jnp.sum(s["H"] * s["H"]))
 
 
 # ---------------------------------------------------------------------------
@@ -208,7 +220,9 @@ def make_engine(cfg: MFConfig, mesh) -> StradsEngine:
 
 def fit(cfg: MFConfig, A: np.ndarray, mask: np.ndarray, mesh,
         num_rounds: int, rng: Optional[jax.Array] = None,
-        trace_every: int = 0):
+        trace_every: int = 0, executor: str = "loop"):
+    """``executor``: "loop" | "scan" | "pipelined" (see lasso.fit).  For
+    "pipelined", num_rounds must be even (H/W phase alternation)."""
     rng = rng if rng is not None else jax.random.key(0)
     eng = make_engine(cfg, mesh)
     data = eng.shard_data({"A": jnp.asarray(A), "mask": jnp.asarray(mask)})
@@ -216,6 +230,17 @@ def fit(cfg: MFConfig, A: np.ndarray, mask: np.ndarray, mesh,
     state = jax.tree.map(
         lambda x, s: jax.device_put(x, jax.sharding.NamedSharding(mesh, s)),
         state, eng.app.state_specs())
+
+    if executor != "loop":
+        collect = eng.app.objective_collect() if trace_every else None
+        out = _exec.run_scanned_executor(eng, state, data, rng, num_rounds,
+                                         executor, collect)
+        if collect is None:
+            return out, []
+        state, ys = out
+        return state, _exec.decimate(np.asarray(ys), num_rounds,
+                                     trace_every)
+
     obj = eng.app.objective_fn(mesh)
     trace = []
 

@@ -1,6 +1,6 @@
-"""The STRADS BSP round executor.
+"""The STRADS round executors: host loop, scanned, and pipelined.
 
-Turns a :class:`~repro.core.primitives.StradsApp` into a jitted function
+Turns a :class:`~repro.core.primitives.StradsApp` into jitted programs
 executing
 
     propose → [schedule_stats → psum] → schedule → push → psum → pull
@@ -9,18 +9,48 @@ with ``push``/``schedule_stats`` running under ``shard_map`` over the
 ``data`` mesh axis and schedule decisions replicated.  ``sync`` is
 automatic: SPMD program order is the BSP barrier (DESIGN.md §3).
 
+Three execution paths share one traced round body:
+
+* :meth:`StradsEngine.run` — the host loop: one jitted round per
+  dispatch, a host↔device sync every round, arbitrary Python callbacks
+  between rounds.  The debugging/metrics path.
+* :meth:`StradsEngine.run_scanned` with ``pipeline_depth=0`` — rolls R
+  rounds into a single ``jax.lax.scan`` (one XLA program, donated state
+  buffers, zero per-round host round-trips).  Bit-identical to the host
+  loop: same PRNG stream, same op order.
+* ``pipeline_depth=1`` — the paper's pipelined scheduler: inside scan
+  step t the schedule for round t+1 is computed from the state *before*
+  round t's update, so it carries no data dependency on round t's
+  push/pull and XLA is free to overlap the two (software pipelining).
+  The schedule each round executes is therefore exactly one round stale
+  — the STRADS stale-schedule guarantee (Lee et al. 2014 §pipelining;
+  dynamic Lasso keeps converging because priorities c_j change slowly
+  between adjacent rounds).
+
+Apps whose communication pattern cycles with period L (``phase_period``,
+e.g. LDA's rotation over U workers, MF's H/W alternation) get L rounds
+unrolled per scan step so every ``phase`` stays a static Python int (the
+LDA ``ppermute`` needs a static permutation).
+
+Scheduler state (e.g. ``DynamicPriorityScheduler``'s Δx history) must
+live in the state pytree / scan carry, never host-side — see
+``schedulers.init_carry``/``update_carry``.
+
 The engine runs identically on a single device (unit tests, laptop-scale
-experiments) and on multi-chip meshes; the production 256/512-chip lowering
-is exercised by ``launch/dryrun.py``.
+experiments) and on multi-chip meshes; the production 256/512-chip
+lowering is exercised by ``launch/dryrun.py`` (``--engine`` mode for this
+executor).
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .compat import make_mesh, shard_map
 from .primitives import RoundResult, StradsApp, StradsAppBase, tree_psum
 
 DATA_AXIS = "data"
@@ -31,7 +61,7 @@ def _replicate_spec(tree: Any) -> Any:
 
 
 class StradsEngine:
-    """Compiles a StradsApp into a BSP round on a device mesh.
+    """Compiles a StradsApp into BSP round programs on a device mesh.
 
     Parameters
     ----------
@@ -54,46 +84,59 @@ class StradsEngine:
             app, "needs_schedule_stats",
             type(app).schedule_stats is not StradsAppBase.schedule_stats)
         self._round = self._build_round()
+        self._scan_cache: dict = {}
 
-    # -- construction ------------------------------------------------------
+    # -- traced round pieces (shared by every executor) ---------------------
+
+    @property
+    def phase_period(self) -> int:
+        """Length of the app's static-phase cycle (1 = phaseless)."""
+        return int(getattr(self.app, "phase_period", 1))
+
+    def _sspec(self, state):
+        return (_replicate_spec(state) if self.state_specs is None
+                else self.state_specs)
+
+    def _make_schedule(self, state, data, rng, t, phase):
+        """propose → [schedule_stats → psum] → schedule (replicated)."""
+        app = self.app
+        r1, r2 = jax.random.split(rng)
+        cand = app.propose(state, r1, t, phase)
+        if self._needs_stats:
+            def stats_fn(data, state, cand):
+                s = app.schedule_stats(data, state, cand, phase)
+                return tree_psum(s, DATA_AXIS)
+            stats = shard_map(
+                stats_fn, mesh=self.mesh,
+                in_specs=(self.data_specs, self._sspec(state),
+                          _replicate_spec(cand)),
+                out_specs=P(),
+            )(data, state, cand)
+        else:
+            stats = None
+        return app.schedule(state, cand, stats, r2, t, phase)
+
+    def _apply(self, state, data, sched, phase):
+        """push → psum → pull under shard_map (the BSP update + sync)."""
+        app = self.app
+        sspec = self._sspec(state)
+
+        def push_pull(data, state, sched):
+            z, local = app.push(data, state, sched, phase)
+            z = tree_psum(z, DATA_AXIS)      # pull aggregation Σ_p z^p
+            return app.pull(state, sched, z, local, data, phase)
+
+        return shard_map(
+            push_pull, mesh=self.mesh,
+            in_specs=(self.data_specs, sspec, _replicate_spec(sched)),
+            out_specs=sspec,
+        )(data, state, sched)
 
     def _build_round(self):
-        app, mesh, data_specs = self.app, self.mesh, self.data_specs
-        needs_stats = self._needs_stats
-        state_specs = self.state_specs
-
         @partial(jax.jit, static_argnums=(3,))
         def round_fn(state, data, rng, phase, t):
-            r1, r2 = jax.random.split(rng)
-            sspec = (_replicate_spec(state) if state_specs is None
-                     else state_specs)
-
-            cand = app.propose(state, r1, t, phase)
-
-            if needs_stats:
-                def stats_fn(data, state, cand):
-                    s = app.schedule_stats(data, state, cand, phase)
-                    return tree_psum(s, DATA_AXIS)
-                stats = jax.shard_map(
-                    stats_fn, mesh=mesh,
-                    in_specs=(data_specs, sspec, _replicate_spec(cand)),
-                    out_specs=P(), check_vma=False,
-                )(data, state, cand)
-            else:
-                stats = None
-
-            sched = app.schedule(state, cand, stats, r2, t, phase)
-
-            def push_pull(data, state, sched):
-                z, local = app.push(data, state, sched, phase)
-                z = tree_psum(z, DATA_AXIS)      # pull aggregation Σ_p z^p
-                return app.pull(state, sched, z, local, data, phase)
-
-            new_state = jax.shard_map(
-                push_pull, mesh=mesh,
-                in_specs=(data_specs, sspec, _replicate_spec(sched)),
-                out_specs=sspec, check_vma=False,
-            )(data, state, sched)
+            sched = self._make_schedule(state, data, rng, t, phase)
+            new_state = self._apply(state, data, sched, phase)
             return RoundResult(state=new_state, sched=sched)
 
         return round_fn
@@ -113,11 +156,10 @@ class StradsEngine:
             lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)),
             data, self.data_specs)
 
-    # -- execution -------------------------------------------------------------
+    # -- execution: host loop ------------------------------------------------
 
     def run_round(self, state, data, rng, t: int = 0) -> RoundResult:
         phase = self.app.static_phase(t)
-        import jax.numpy as jnp
         return self._round(state, data, rng, phase, jnp.int32(t))
 
     def run(self, state, data, rng, num_rounds: int, callback=None):
@@ -133,11 +175,167 @@ class StradsEngine:
                 break
         return state
 
+    # -- execution: scanned / pipelined --------------------------------------
+
+    def run_scanned(self, state, data, rng, num_rounds: int, *,
+                    pipeline_depth: int = 0,
+                    collect: Optional[Callable[[Any], Any]] = None,
+                    donate: bool = True):
+        """Execute ``num_rounds`` rounds as one XLA program.
+
+        ``pipeline_depth=0`` reproduces :meth:`run` bit-for-bit (same PRNG
+        stream, fresh schedules).  ``pipeline_depth=1`` software-pipelines
+        the scheduler one round ahead (see module docstring); round t then
+        executes the schedule computed from the state after round t−2 —
+        the paper's one-round schedule staleness.  The round-t schedule
+        uses the *same* PRNG key in both modes, so depth-1 differs from
+        depth-0 only through staleness, never through a different random
+        stream.
+
+        ``collect(state) -> pytree`` is evaluated after every round inside
+        the scan; the stacked results (leading axis ``num_rounds``) are
+        returned as the trace without any per-round host sync.
+
+        ``donate=True`` donates the state buffers to the XLA program (the
+        caller's ``state`` is consumed); pass ``donate=False`` when the
+        input state must stay alive (e.g. A/B comparisons in tests).
+
+        Returns ``state`` when ``collect is None``, else
+        ``(state, trace)``.
+        """
+        if pipeline_depth not in (0, 1):
+            raise ValueError(f"pipeline_depth must be 0 or 1, got "
+                             f"{pipeline_depth}")
+        if num_rounds < 1:
+            raise ValueError("run_scanned needs num_rounds >= 1 (use the "
+                             "host loop `run` for zero-round calls)")
+        period = self.phase_period
+        num_steps, tail = divmod(num_rounds, period)
+        if tail and pipeline_depth == 1:
+            raise ValueError(
+                f"pipeline_depth=1 needs num_rounds divisible by the app's "
+                f"phase_period ({period}); got {num_rounds}")
+
+        traces = []
+        if num_steps:
+            fn = self._get_scan_fn(num_steps, pipeline_depth,
+                                   collect, donate)
+            state, rng, ys = fn(state, data, rng)
+            if collect is not None:
+                traces.append(ys)
+
+        # Remainder rounds (num_rounds % period) fall back to the host
+        # loop with fresh schedules — only reachable at depth 0.
+        for k in range(tail):
+            t = num_steps * period + k
+            rng, sub = jax.random.split(rng)
+            out = self.run_round(state, data, sub, t)
+            state = out.state
+            if collect is not None:
+                traces.append(jax.tree.map(
+                    lambda x: jnp.asarray(x)[None], collect(state)))
+
+        if collect is None:
+            return state
+        trace = (jax.tree.map(lambda *xs: jnp.concatenate(xs), *traces)
+                 if len(traces) > 1 else traces[0])
+        return state, trace
+
+    def scanned_fn(self, num_rounds: int, *, pipeline_depth: int = 0,
+                   collect: Optional[Callable] = None,
+                   donate: bool = True):
+        """The jitted ``(state, data, rng) → (state, rng, trace)`` multi-
+        round program, exposed for AOT ``.lower().compile()`` (the
+        production-mesh dry-run in ``launch/dryrun.py``).  ``num_rounds``
+        must be a multiple of ``phase_period``."""
+        num_steps, tail = divmod(num_rounds, self.phase_period)
+        if tail or num_steps == 0:
+            raise ValueError(
+                f"num_rounds must be a positive multiple of phase_period "
+                f"({self.phase_period}); got {num_rounds}")
+        return self._get_scan_fn(num_steps, pipeline_depth, collect, donate)
+
+    def _get_scan_fn(self, num_steps: int, depth: int,
+                     collect: Optional[Callable], donate: bool):
+        key = (num_steps, depth, collect, donate)
+        fn = self._scan_cache.get(key)
+        if fn is None:
+            fn = self._build_scan(num_steps, depth, collect, donate)
+            self._scan_cache[key] = fn
+        return fn
+
+    def _build_scan(self, num_steps: int, depth: int,
+                    collect: Optional[Callable], donate: bool):
+        period = self.phase_period
+
+        def one_round(state, data, rng, t, phase, ys):
+            # Depth-0 inner round: fresh schedule, then update — the exact
+            # op/PRNG order of the host-loop round.
+            sched = self._make_schedule(state, data, rng, t, phase)
+            state = self._apply(state, data, sched, phase)
+            if collect is not None:
+                ys.append(collect(state))
+            return state
+
+        def scanned(state, data, rng):
+            if depth == 0:
+                def step(carry, _):
+                    state, rng, t0 = carry
+                    ys: list = []
+                    for i in range(period):
+                        rng, sub = jax.random.split(rng)
+                        state = one_round(state, data, sub, t0 + i, i, ys)
+                    return ((state, rng, t0 + period),
+                            _stack_rounds(ys) if collect else None)
+
+                (state, rng, _), ys = jax.lax.scan(
+                    step, (state, rng, jnp.int32(0)), None,
+                    length=num_steps)
+            else:
+                # Pipelined: carry the next round's schedule.  At the top
+                # of step t we compute sched_{t+1} from the *pre-update*
+                # state — it is independent of round t's push/pull, so the
+                # two overlap; the executed schedule is one round stale.
+                rng, sub = jax.random.split(rng)
+                sched = self._make_schedule(state, data, sub,
+                                            jnp.int32(0), 0)
+
+                def step(carry, _):
+                    state, rng, t0, sched = carry
+                    ys: list = []
+                    for i in range(period):
+                        t = t0 + i
+                        rng, sub = jax.random.split(rng)
+                        sched_next = self._make_schedule(
+                            state, data, sub, t + 1, (i + 1) % period)
+                        state = self._apply(state, data, sched, i)
+                        sched = sched_next
+                        if collect is not None:
+                            ys.append(collect(state))
+                    return ((state, rng, t0 + period, sched),
+                            _stack_rounds(ys) if collect else None)
+
+                (state, rng, _, _), ys = jax.lax.scan(
+                    step, (state, rng, jnp.int32(0), sched), None,
+                    length=num_steps)
+
+            if collect is not None:
+                # (num_steps, period, ...) → (num_rounds, ...)
+                ys = jax.tree.map(
+                    lambda x: x.reshape((num_steps * period,)
+                                        + x.shape[2:]), ys)
+            return state, rng, ys
+
+        return jax.jit(scanned, donate_argnums=(0,) if donate else ())
+
+
+def _stack_rounds(ys: list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *ys)
+
 
 def single_device_mesh() -> Mesh:
     """A 1-device ``data`` mesh for laptop-scale runs and unit tests."""
-    return jax.make_mesh((1,), (DATA_AXIS,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((1,), (DATA_AXIS,))
 
 
 def worker_mesh(num_workers: int) -> Mesh:
@@ -147,5 +345,4 @@ def worker_mesh(num_workers: int) -> Mesh:
             f"mesh of {num_workers} workers needs ≥{num_workers} devices; "
             f"have {len(devs)} (set XLA_FLAGS=--xla_force_host_platform_"
             f"device_count=N before importing jax)")
-    return jax.make_mesh((num_workers,), (DATA_AXIS,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((num_workers,), (DATA_AXIS,))

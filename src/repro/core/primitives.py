@@ -32,11 +32,14 @@ sharded leaves of the state pytree.
 ``phase`` is a *static* Python int (``app.static_phase(t)``) enabling
 schedules whose communication pattern changes per round (LDA's rotation
 ``ppermute`` needs a static permutation); apps with a fixed pattern return 0.
+Apps declare the cycle length as ``phase_period`` (``static_phase(t)`` must
+equal ``t % phase_period``): the scanned executor unrolls one full phase
+cycle per ``lax.scan`` step so every phase stays static inside the trace.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Protocol, runtime_checkable
+from typing import Any, Protocol, runtime_checkable
 
 import jax
 
@@ -78,8 +81,12 @@ class StradsAppBase:
 
     Subclasses override what they need; ``schedule_stats`` is only invoked
     by the engine when overridden (data-independent schedules skip the
-    extra shard_map pass entirely).
+    extra shard_map pass entirely).  Apps with phase-dependent rounds set
+    ``phase_period`` to the cycle length and keep ``static_phase(t) ==
+    t % phase_period``.
     """
+
+    phase_period: int = 1
 
     def static_phase(self, t: int) -> int:
         return 0

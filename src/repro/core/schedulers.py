@@ -14,11 +14,17 @@
 
 Everything is shape-static so it jits: candidate sets have fixed size U′,
 the filtered schedule is a fixed-size index vector with a validity mask.
+
+Scheduler state lives on-device as explicit *scan carries*, never
+host-side: :class:`DynamicPriorityScheduler` owns its Δx history through
+``init_carry``/``update_carry`` (the app threads the carry through its
+state pytree, so the scanned executor in :mod:`repro.core.engine` rolls it
+through ``lax.scan`` untouched); :class:`RotationScheduler`'s only state
+is the round counter, which the engine carries as ``t``.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -146,6 +152,22 @@ class DynamicPriorityScheduler:
     block_size: int          # U  (≤ num_candidates)
     rho: float = 0.1
     eta: float = 1e-6
+
+    # -- carry: the Δx history driving the priorities c_j -------------------
+    # The carry is a plain (J,) array so it rides any pytree (app state,
+    # scan carry) without wrappers.  Host code must never own it: the
+    # scanned executor keeps it on-device across all R rounds.
+
+    def init_carry(self) -> jax.Array:
+        """Uniform priority at t=0 (every variable equally likely)."""
+        return jnp.ones((self.num_vars,), jnp.float32)
+
+    def update_carry(self, delta: jax.Array, idx: jax.Array,
+                     mask: jax.Array, dx: jax.Array) -> jax.Array:
+        """Fold round t's updates Δx into the history: scheduled-and-kept
+        entries take |Δx|, everything else keeps its previous priority."""
+        return delta.at[idx].set(
+            jnp.where(mask, jnp.abs(dx), jnp.take(delta, idx)))
 
     def propose(self, delta: jax.Array, rng: jax.Array) -> jax.Array:
         c = priority_weights(delta, self.eta)

@@ -92,8 +92,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(j == nj - 1)
     def _finalize():
-        l = l_ref[...]
-        safe = jnp.where(l == 0.0, 1.0, l)
+        lsum = l_ref[...]
+        safe = jnp.where(lsum == 0.0, 1.0, lsum)
         o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
 
 

@@ -16,7 +16,6 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from . import flash_attention as _fa
 from . import lasso_cd as _lc

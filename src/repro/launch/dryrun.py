@@ -9,6 +9,14 @@ shape) on the production meshes, record memory/cost/collective analysis.
         --shape train_4k --mesh single
     PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
 
+``--engine lasso`` instead lowers the pipelined multi-round STRADS
+executor (``StradsEngine.run_scanned``) on a worker mesh carved from the
+forced 512-device topology — proving that R rounds × U workers compile
+into ONE XLA program (scan + psum + donated state) at production scale:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --engine lasso \
+        --workers 16 --rounds 16 --pipeline-depth 1
+
 Results land in ``benchmarks/results/dryrun/<arch>__<shape>__<mesh>[__tag]
 .json`` (existing files are skipped unless --force), which
 ``benchmarks/roofline.py`` renders into EXPERIMENTS.md §Dry-run/§Roofline.
@@ -28,6 +36,10 @@ from .specs import build, skip_reason
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "benchmarks", "results", "dryrun")
+# --engine records have a different schema (no arch/shape/mesh keys), so
+# they live beside — not inside — the dryrun dir that roofline_report
+# globs for its tables.
+ENGINE_RESULTS_DIR = os.path.join(os.path.dirname(RESULTS_DIR), "engine")
 
 
 def _result_path(arch, shape, mesh_name, tag):
@@ -119,6 +131,56 @@ def run_one(arch: str, shape_name: str, mesh_name: str, tag: str = "",
     return out
 
 
+def run_engine(workers: int, rounds: int, depth: int) -> dict:
+    """Lower + compile the scanned STRADS executor on a ``workers``-wide
+    data mesh (a slice of the forced-512 topology)."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from ..apps import lasso
+
+    mesh = Mesh(np.array(jax.devices()[:workers]), ("data",))
+    n, J = workers * 64, 1024
+    rng = np.random.default_rng(0)
+    X, y, _ = lasso.synthetic_correlated(rng, n=n, J=J, k_true=16)
+    cfg = lasso.LassoConfig(num_features=J, lam=0.02, block_size=32,
+                            num_candidates=128, rho=0.3)
+    eng = lasso.make_engine(cfg, mesh)
+    data = eng.shard_data({"X": X, "y": y})
+    state = eng.app.init_state(jax.random.key(0), y=y)
+    state = jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(
+            x, jax.sharding.NamedSharding(mesh, s)),
+        state, eng.app.state_specs())
+
+    out = {"engine": "lasso", "workers": workers, "rounds": rounds,
+           "pipeline_depth": depth, "n": n, "J": J}
+    fn = eng.scanned_fn(rounds, pipeline_depth=depth)
+    t0 = time.time()
+    lowered = fn.lower(state, data, jax.random.key(1))
+    out["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    out["compile_s"] = round(time.time() - t0, 2)
+    try:
+        ma = compiled.memory_analysis()
+        out["memory"] = {k: int(getattr(ma, k)) for k in
+                         ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "alias_size_in_bytes")
+                         if hasattr(ma, k)}
+    except Exception as e:                                # pragma: no cover
+        out["memory"] = {"error": repr(e)}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        out["cost"] = {"flops": float(ca.get("flops", 0.0)),
+                       "bytes": float(ca.get("bytes accessed", 0.0))}
+    except Exception as e:                                # pragma: no cover
+        out["cost"] = {"error": repr(e)}
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCHS)
@@ -130,9 +192,33 @@ def main():
     ap.add_argument("--tag", default="", help="variant tag (e.g. 'opt')")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--engine", choices=("lasso",),
+                    help="lower the scanned STRADS executor instead of an "
+                         "arch × shape spec")
+    ap.add_argument("--workers", type=int, default=16)
+    ap.add_argument("--rounds", type=int, default=16)
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    choices=(0, 1))
     args = ap.parse_args()
 
     os.makedirs(RESULTS_DIR, exist_ok=True)
+
+    if args.engine:
+        os.makedirs(ENGINE_RESULTS_DIR, exist_ok=True)
+        name = (f"strads-{args.engine}__U{args.workers}"
+                f"__R{args.rounds}__d{args.pipeline_depth}")
+        path = os.path.join(ENGINE_RESULTS_DIR, name + ".json")
+        if os.path.exists(path) and not args.force:
+            print(f"[skip-cached] {name}")
+            return
+        print(f"[dryrun] {name} ...", flush=True)
+        res = run_engine(args.workers, args.rounds, args.pipeline_depth)
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"  lower {res['lower_s']}s compile {res['compile_s']}s"
+              f"  args {res['memory'].get('argument_size_in_bytes', -1)}B"
+              f"  temp {res['memory'].get('temp_size_in_bytes', -1)}B")
+        return
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
     pairs = ([(a, s) for a in ARCHS for s in INPUT_SHAPES]
              if args.all else [(args.arch, args.shape)])

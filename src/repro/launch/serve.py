@@ -13,12 +13,10 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from ..configs import ARCHS, get_config
 from ..data import SyntheticLMConfig, make_batch
 from ..models import model as M
-from ..sharding.rules import activation_mesh
 from ..train.serve import greedy_generate
 from .mesh import make_test_mesh
 

@@ -25,7 +25,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from ..configs import INPUT_SHAPES, get_config
 from ..models import model as M
-from ..optim.adamw import AdamWConfig, adamw_init
+from ..optim.adamw import AdamWConfig
 from ..sharding import rules
 from ..train.serve import LONG_WINDOW
 from ..train.step import TrainConfig, make_train_step

@@ -8,6 +8,11 @@ TPU pods via the same pjit path — the mesh is built from jax.devices()):
 synthetic data pipeline → pjit'd train step (AdamW + schedule) →
 checkpointing.  ``--strads`` turns on the paper's technique as
 block-coordinate scheduled training (core/block_scheduler).
+
+``--scan-steps K`` rolls K train steps into a single ``lax.scan`` XLA
+program with donated state (the training-substrate twin of
+``StradsEngine.run_scanned``): one dispatch and one host sync per K
+steps instead of per step.
 """
 from __future__ import annotations
 
@@ -41,6 +46,8 @@ def main(argv=None):
     ap.add_argument("--schedule", choices=("cosine", "wsd"), default=None)
     ap.add_argument("--strads", action="store_true",
                     help="STRADS block-coordinate scheduled updates")
+    ap.add_argument("--scan-steps", type=int, default=1,
+                    help="steps per lax.scan chunk (1 = host loop)")
     ap.add_argument("--blocks-per-step", type=int, default=0,
                     help="U for --strads (default: half the blocks)")
     ap.add_argument("--ckpt-dir", default="")
@@ -86,8 +93,17 @@ def main(argv=None):
         state = init_train_state(cfg, tc, rng)
         step_fn = make_train_step(cfg, tc)
 
+    def chunk_fn(state, batches):
+        # K steps as one scanned XLA program (run_scanned's sibling)
+        def body(st, batch):
+            return step_fn(st, batch)
+        return jax.lax.scan(body, state, batches)
+
     with activation_mesh(mesh):
-        step_jit = jax.jit(step_fn, donate_argnums=(0,))
+        if args.scan_steps > 1:
+            chunk_jit = jax.jit(chunk_fn, donate_argnums=(0,))
+        else:
+            step_jit = jax.jit(step_fn, donate_argnums=(0,))
 
     dcfg = SyntheticLMConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                              batch_size=args.batch, seed=args.seed)
@@ -98,24 +114,49 @@ def main(argv=None):
         dkw = {"frontend_tokens": cfg.frontend_tokens,
                "d_model": cfg.d_model}
 
-    history = []
-    t0 = time.time()
-    for i in range(args.steps):
-        batch = make_batch(dcfg, i, **dkw)
-        state, metrics = step_jit(state, batch)
-        if i % args.log_every == 0 or i == args.steps - 1:
-            m = {k: float(v) for k, v in metrics.items()}
-            m["step"] = i
-            m["wall_s"] = round(time.time() - t0, 1)
-            history.append(m)
-            print(f"step {i:5d}  loss {m['loss']:.4f}  acc {m['acc']:.3f}"
-                  f"  gnorm {m['grad_norm']:.2f}  lr {m['lr']:.2e}"
-                  f"  [{m['wall_s']}s]")
-        if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+    def log_step(i, metrics, t0, history):
+        m = {k: float(v) for k, v in metrics.items()}
+        m["step"] = i
+        m["wall_s"] = round(time.time() - t0, 1)
+        history.append(m)
+        print(f"step {i:5d}  loss {m['loss']:.4f}  acc {m['acc']:.3f}"
+              f"  gnorm {m['grad_norm']:.2f}  lr {m['lr']:.2e}"
+              f"  [{m['wall_s']}s]")
+
+    def maybe_ckpt(i, chunk=None):
+        # For a scanned chunk, fire if ANY step in it crossed a ckpt_every
+        # boundary (the saved state is end-of-chunk — coarser cadence, but
+        # no silently skipped checkpoints when the periods don't align).
+        due = (any((j + 1) % args.ckpt_every == 0 for j in chunk)
+               if chunk is not None else (i + 1) % args.ckpt_every == 0)
+        if args.ckpt_dir and due:
             p = save_checkpoint(args.ckpt_dir, i + 1,
                                 {"params": state["params"],
                                  "step": state["step"]})
             print(f"checkpoint → {p}")
+
+    history = []
+    t0 = time.time()
+    if args.scan_steps > 1:
+        K = args.scan_steps
+        for start in range(0, args.steps, K):
+            steps = range(start, min(start + K, args.steps))
+            batches = [make_batch(dcfg, j, **dkw) for j in steps]
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+            state, ms = chunk_jit(state, stacked)
+            last = steps[-1]
+            if (any(j % args.log_every == 0 for j in steps)
+                    or last == args.steps - 1):
+                log_step(last, jax.tree.map(lambda v: v[-1], ms), t0,
+                         history)
+            maybe_ckpt(last, chunk=steps)
+    else:
+        for i in range(args.steps):
+            batch = make_batch(dcfg, i, **dkw)
+            state, metrics = step_jit(state, batch)
+            if i % args.log_every == 0 or i == args.steps - 1:
+                log_step(i, metrics, t0, history)
+            maybe_ckpt(i)
     print(json.dumps({"first_loss": history[0]["loss"],
                       "last_loss": history[-1]["loss"],
                       "steps": args.steps,

@@ -12,7 +12,6 @@ templates in :mod:`repro.models.model`.
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax

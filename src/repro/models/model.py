@@ -17,8 +17,7 @@ from jax.sharding import NamedSharding
 from ..sharding import rules
 from ..sharding.rules import constrain
 from . import params as P
-from .transformer import apply_stack, cache_template, stack_template, \
-    _has_attention
+from .transformer import apply_stack, cache_template, stack_template
 from .layers import apply_norm
 
 

@@ -12,7 +12,7 @@ Logical sharding axes come from :mod:`repro.sharding.rules`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ import math
 from typing import Any, Callable, Tuple
 
 import jax
-import jax.numpy as jnp
 
 
 def default_chunk(S: int) -> int:

@@ -36,8 +36,8 @@ def adamw_init(params: Any, cfg: AdamWConfig) -> Any:
 
 def global_norm(tree: Any) -> jax.Array:
     leaves = jax.tree_util.tree_leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
 
 
 def adamw_update(grads: Any, opt: Any, params: Any, lr: jax.Array,

@@ -9,8 +9,7 @@ shape sub-quadratic; SSM/hybrid archs carry O(1) recurrent state instead
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

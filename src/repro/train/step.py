@@ -12,14 +12,12 @@
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..core.block_scheduler import (BlockScheduleConfig, block_norms,
-                                    init_priority, mask_updates_by_block,
+from ..core.block_scheduler import (BlockScheduleConfig, init_priority,
                                     select_blocks, update_priority)
 from ..models import model as M
 from ..optim.adamw import AdamWConfig, adamw_init, adamw_update

@@ -1,0 +1,98 @@
+"""Deterministic fallback for `hypothesis` when it isn't installed.
+
+CI installs the real hypothesis via the ``test`` extra in pyproject.toml;
+this stub only kicks in on bare environments (no network, no extras) so
+the suite still collects and the property tests still run — each
+``@given`` test executes ``max_examples`` deterministic samples drawn
+from a fixed-seed RNG.  It implements exactly the subset this repo's
+tests use: ``given``, ``settings``, and ``strategies.integers / floats /
+booleans / sampled_from``.
+
+Activated by ``conftest.py`` installing this module under the name
+``hypothesis`` in ``sys.modules``; it must never shadow the real package.
+"""
+from __future__ import annotations
+
+import inspect
+import sys
+import types
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, sampler):
+        self._sampler = sampler
+
+    def sample(self, rng: np.random.Generator):
+        return self._sampler(rng)
+
+
+def _integers(min_value, max_value):
+    # hypothesis integers: both bounds inclusive
+    return _Strategy(lambda r: int(r.integers(min_value, max_value + 1)))
+
+
+def _floats(min_value, max_value):
+    return _Strategy(lambda r: float(r.uniform(min_value, max_value)))
+
+
+def _booleans():
+    return _Strategy(lambda r: bool(r.integers(0, 2)))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda r: elements[int(r.integers(len(elements)))])
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.floats = _floats
+strategies.booleans = _booleans
+strategies.sampled_from = _sampled_from
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        def wrapper(*fixture_args, **fixture_kwargs):
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples",
+                                DEFAULT_MAX_EXAMPLES))
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                vals = [s.sample(rng) for s in strats]
+                fn(*fixture_args, *vals, **fixture_kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._stub_max_examples = getattr(fn, "_stub_max_examples",
+                                             DEFAULT_MAX_EXAMPLES)
+        # Hide the strategy-filled parameters from pytest's fixture
+        # resolution: only leading params (fixtures) remain visible.
+        params = list(inspect.signature(fn).parameters.values())
+        remaining = params[:max(0, len(params) - len(strats))]
+        wrapper.__signature__ = inspect.Signature(remaining)
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` (no-op if the real one is
+    importable)."""
+    if "hypothesis" in sys.modules:         # pragma: no cover
+        return
+    mod = sys.modules[__name__]
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

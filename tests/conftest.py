@@ -1,11 +1,23 @@
 """Shared test fixtures.
 
 NOTE: XLA_FLAGS device-count forcing is deliberately NOT set here — smoke
-tests and benches see the real single device.  Multi-worker tests spawn
-subprocesses (see helpers in test_multiworker.py) or use mesh size 1.
+tests and benches see whatever devices the environment provides (CI runs
+the suite twice: once single-device, once with 4 forced host devices).
+Multi-worker tests spawn subprocesses (see helpers in
+test_multiworker.py) or use mesh size 1.
+
+If `hypothesis` is not installed (bare container, no test extra), a
+deterministic stub is registered so the property tests still collect and
+run — see tests/_hypothesis_stub.py.
 """
 import numpy as np
 import pytest
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import _hypothesis_stub
+    _hypothesis_stub.install()
 
 
 @pytest.fixture

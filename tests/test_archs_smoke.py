@@ -137,7 +137,6 @@ def test_moe_expert_counts():
 
 def test_param_counts_roughly_match_names():
     """Sanity: template-derived N lands near each model's nameplate."""
-    import math
     expect = {"llama4-maverick-400b-a17b": 400e9, "chatglm3-6b": 6e9,
               "zamba2-2.7b": 2.7e9, "stablelm-3b": 3e9,
               "granite-3-2b": 2.5e9, "minicpm-2b": 2.7e9,

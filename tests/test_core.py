@@ -2,13 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (DynamicPriorityScheduler, RandomScheduler,
                         RotationScheduler, RoundRobinScheduler,
                         dependency_filter, priority_weights,
-                        sample_candidates, single_device_mesh)
+                        sample_candidates)
 from repro.core.block_scheduler import (BlockScheduleConfig, block_norms,
                                         init_priority,
                                         mask_updates_by_block,

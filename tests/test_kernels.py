@@ -1,6 +1,5 @@
 """Per-kernel validation: shape/dtype sweeps asserting allclose against the
 ref.py pure-jnp oracles, in Pallas interpret mode (CPU container)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,6 +1,5 @@
 """STRADS LDA: count conservation, likelihood ascent, s-error bounds,
 single-worker exactness."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,7 +1,5 @@
 """Substrate tests: optimizer, schedules, data pipeline, checkpointing,
 losses, serving loop — plus hypothesis property tests on their invariants."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,7 +12,6 @@ from repro.data import SyntheticLMConfig, make_batch
 from repro.models import model as M
 from repro.optim import AdamWConfig, adamw_init, adamw_update, \
     cosine_schedule, wsd_schedule
-from repro.optim.adamw import global_norm
 from repro.train import greedy_generate
 from repro.train.losses import cross_entropy, token_accuracy
 
