@@ -37,11 +37,7 @@ eng = lasso.make_engine(cfg, mesh)
 data = eng.shard_data({{"X": jnp.asarray(X), "y": jnp.asarray(y)}})
 
 def init():
-    st = eng.app.init_state(jax.random.key(0), y=y)
-    return jax.tree.map(
-        lambda x, s: jax.device_put(
-            x, jax.sharding.NamedSharding(mesh, s)),
-        st, eng.app.state_specs())
+    return eng.init_state(jax.random.key(0), y=y)
 
 out = {{}}
 st = eng.run(init(), data, jax.random.key(1), 2)          # compile warmup

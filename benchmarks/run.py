@@ -13,7 +13,7 @@ import sys
 import traceback
 
 from . import (bench_lasso, bench_lda, bench_memory, bench_mf,
-               bench_pipeline, bench_scaling)
+               bench_pipeline, bench_scaling, bench_ssp)
 
 BENCHES = {
     "lasso": bench_lasso,       # Fig 8/9 right
@@ -22,6 +22,7 @@ BENCHES = {
     "memory": bench_memory,     # Fig 3
     "scaling": bench_scaling,   # Fig 10
     "pipeline": bench_pipeline,  # loop vs scan vs pipelined executor
+    "ssp": bench_ssp,           # bounded staleness vs BSP (repro.ps)
 }
 
 

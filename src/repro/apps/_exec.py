@@ -1,9 +1,9 @@
 """Shared executor dispatch for the app-level ``fit`` drivers.
 
-Every app exposes ``fit(..., executor="loop"|"scan"|"pipelined")``; the
-non-loop paths all reduce to the same call into
-:meth:`~repro.core.engine.StradsEngine.run_scanned` plus the same trace
-decimation, so they live here once.
+Every app exposes ``fit(..., executor="loop"|"scan"|"pipelined"|"ssp")``;
+the non-loop paths all reduce to the same call into the engine's scanned
+executors (``run_scanned`` / ``run_ssp``) plus the same trace decimation,
+so they live here once.
 """
 from __future__ import annotations
 
@@ -16,15 +16,22 @@ def scan_depth(executor: str) -> int:
     """Map an executor name to its pipeline depth (raising on typos)."""
     depth = _EXEC_DEPTH.get(executor)
     if depth is None:
-        raise ValueError(f"executor must be 'loop', 'scan' or 'pipelined'; "
-                         f"got {executor!r}")
+        raise ValueError(f"executor must be 'loop', 'scan', 'pipelined' "
+                         f"or 'ssp'; got {executor!r}")
     return depth
 
 
-def run_scanned_executor(eng, state, data, rng, num_rounds: int,
-                         executor: str,
-                         collect: Optional[Callable[[Any], Any]] = None):
-    """``run_scanned`` with the executor string resolved to a depth."""
+def run_executor(eng, state, data, rng, num_rounds: int, executor: str,
+                 collect: Optional[Callable[[Any], Any]] = None,
+                 staleness: int = 0):
+    """Dispatch a non-loop executor.  ``staleness`` only applies to
+    ``executor="ssp"`` (the bounded-staleness path in ``repro.ps``)."""
+    if executor == "ssp":
+        return eng.run_ssp(state, data, rng, num_rounds,
+                           staleness=staleness, collect=collect)
+    if staleness:
+        raise ValueError(f"staleness={staleness} requires executor='ssp'; "
+                         f"got executor={executor!r}")
     return eng.run_scanned(state, data, rng, num_rounds,
                            pipeline_depth=scan_depth(executor),
                            collect=collect)

@@ -115,6 +115,15 @@ class StradsLasso(StradsAppBase):
         idx, mask = self.dyn.finalize(candidates, stats)
         return {"idx": idx, "mask": mask}
 
+    def ssp_mark_scheduled(self, view, candidates, phase):
+        # In-flight exclusion for the SSP window: coordinates already
+        # proposed this window drop to the η priority floor, so later
+        # stale-read rounds pick fresh coordinates instead of compounding
+        # the same deferred update (the divergence mode of stale CD).
+        if self.cfg.scheduler != "strads":
+            return view
+        return {**view, "delta": view["delta"].at[candidates].set(0.0)}
+
     # -- push / pull ----------------------------------------------------------
 
     def push(self, data, state, sched, phase):
@@ -205,26 +214,24 @@ def make_engine(cfg: LassoConfig, mesh) -> StradsEngine:
 
 def fit(cfg: LassoConfig, X: np.ndarray, y: np.ndarray, mesh,
         num_rounds: int, rng: Optional[jax.Array] = None,
-        trace_every: int = 0, executor: str = "loop"):
+        trace_every: int = 0, executor: str = "loop", staleness: int = 0):
     """Run STRADS Lasso; returns (state, trace of objective values).
 
     ``executor`` selects the engine path: ``"loop"`` (host loop, one jit
     per round), ``"scan"`` (all rounds in one ``lax.scan`` program,
-    bit-identical to the loop), or ``"pipelined"`` (scan + one-round-stale
-    schedule prefetch — the paper's pipelined scheduler).
+    bit-identical to the loop), ``"pipelined"`` (scan + one-round-stale
+    schedule prefetch — the paper's pipelined scheduler), or ``"ssp"``
+    (bounded staleness ``staleness``; at 0 bit-identical to ``"scan"``).
     """
     rng = rng if rng is not None else jax.random.key(0)
     eng = make_engine(cfg, mesh)
     data = eng.shard_data({"X": jnp.asarray(X), "y": jnp.asarray(y)})
-    state = eng.app.init_state(rng, y=y)
-    state = jax.tree.map(
-        lambda x, s: jax.device_put(x, jax.sharding.NamedSharding(mesh, s)),
-        state, eng.app.state_specs())
+    state = eng.init_state(rng, y=y)
 
     if executor != "loop":
         collect = eng.app.objective_collect() if trace_every else None
-        out = _exec.run_scanned_executor(eng, state, data, rng, num_rounds,
-                                         executor, collect)
+        out = _exec.run_executor(eng, state, data, rng, num_rounds,
+                                 executor, collect, staleness=staleness)
         if collect is None:
             return out, []
         state, ys = out

@@ -115,6 +115,12 @@ class StradsLDA(StradsAppBase):
     def static_phase(self, t: int) -> int:
         return t % self.cfg.num_workers
 
+    def init_state(self, rng, words=None, docs=None, z0=None):
+        if words is None:
+            raise ValueError("StradsLDA.init_state needs the corpus "
+                             "(words=, docs=, z0=)")
+        return build_state(self.cfg, words, docs, z0)
+
     def state_specs(self):
         return {"z": P("data"), "D": P("data"), "B": P("data"),
                 "s": P(), "s_err": P()}
@@ -162,6 +168,27 @@ class StradsLDA(StradsAppBase):
         s_err = jax.lax.psum(err_p, "data") / (cfg.num_workers * M)
         return {"z": local["z"], "D": local["D"], "B": local["B"],
                 "s": s_new, "s_err": s_err}
+
+    # -- SSP hooks (repro.ps): tables are worker-local, so they commit
+    # every round (a worker's own Gibbs moves must never be re-sampled
+    # from a stale table); only the synced column sums ``s`` defer — the
+    # LightLDA-style staleness-tolerant server, where s̃ is exactly the
+    # stale quantity the paper's Fig-5 error bound is about.
+
+    def ssp_commit_local(self, state, sched, local, data, phase):
+        return {**state, "z": local["z"], "D": local["D"],
+                "B": local["B"]}
+
+    def ssp_defer_local(self, local, phase):
+        return {"s_tilde": local["s_tilde"]}
+
+    def ssp_commit_shared(self, state, sched, z, local, data, phase):
+        cfg = self.cfg
+        s_new = z["s"]
+        err_p = jnp.sum(jnp.abs(local["s_tilde"] - s_new))
+        M = cfg.num_workers * cfg.tokens_per_worker
+        s_err = jax.lax.psum(err_p, "data") / (cfg.num_workers * M)
+        return {**state, "s": s_new, "s_err": s_err}
 
     # -- diagnostics ------------------------------------------------------------
 
@@ -218,6 +245,13 @@ class DataParallelLDAApp(StradsAppBase):
 
     def __init__(self, cfg: LDAConfig):
         self.cfg = cfg
+
+    def init_state(self, rng, words=None, docs=None, z0=None):
+        if words is None:
+            raise ValueError("DataParallelLDAApp.init_state needs the "
+                             "corpus (words=, docs=, z0=)")
+        full = build_state(self.cfg, words, docs, z0)
+        return {k: full[k] for k in ("z", "D", "B", "s")}
 
     def state_specs(self):
         return {"z": P("data"), "D": P("data"), "B": P(), "s": P()}
@@ -308,18 +342,15 @@ def _global_loglik(cfg: LDAConfig, state):
 
 def fit(cfg: LDAConfig, words, docs, z0, mesh, num_rounds: int,
         baseline: bool = False, trace_every: int = 0,
-        executor: str = "loop"):
-    """``executor``: "loop" | "scan" | "pipelined" (see lasso.fit).  For
-    "pipelined", num_rounds must be a multiple of the rotation length U."""
+        executor: str = "loop", staleness: int = 0):
+    """``executor``: "loop" | "scan" | "pipelined" | "ssp" (see
+    lasso.fit).  For "pipelined"/"ssp", num_rounds must tile the rotation
+    length U (and the SSP window)."""
     eng = make_engine(cfg, mesh, baseline=baseline)
     data = eng.shard_data({"words": jnp.asarray(words),
                            "docs": jnp.asarray(docs)})
-    state = build_state(cfg, words, docs, z0)
-    if baseline:
-        state = {k: state[k] for k in ("z", "D", "B", "s")}
-    state = jax.tree.map(
-        lambda x, sp: jax.device_put(x, jax.sharding.NamedSharding(mesh, sp)),
-        state, eng.app.state_specs())
+    state = eng.init_state(jax.random.key(0), words=words, docs=docs,
+                           z0=z0)
 
     if executor != "loop":
         collect = None
@@ -329,9 +360,9 @@ def fit(cfg: LDAConfig, words, docs, z0, mesh, num_rounds: int,
                 if "s_err" in s:
                     out["s_err"] = s["s_err"]
                 return out
-        out = _exec.run_scanned_executor(eng, state, data,
-                                         jax.random.key(0), num_rounds,
-                                         executor, collect)
+        out = _exec.run_executor(eng, state, data,
+                                 jax.random.key(0), num_rounds,
+                                 executor, collect, staleness=staleness)
         if collect is None:
             return out, [], []
         state, ys = out

@@ -220,21 +220,19 @@ def make_engine(cfg: MFConfig, mesh) -> StradsEngine:
 
 def fit(cfg: MFConfig, A: np.ndarray, mask: np.ndarray, mesh,
         num_rounds: int, rng: Optional[jax.Array] = None,
-        trace_every: int = 0, executor: str = "loop"):
-    """``executor``: "loop" | "scan" | "pipelined" (see lasso.fit).  For
-    "pipelined", num_rounds must be even (H/W phase alternation)."""
+        trace_every: int = 0, executor: str = "loop", staleness: int = 0):
+    """``executor``: "loop" | "scan" | "pipelined" | "ssp" (see
+    lasso.fit).  For "pipelined"/"ssp", num_rounds must divide into H/W
+    phase cycles (and SSP windows)."""
     rng = rng if rng is not None else jax.random.key(0)
     eng = make_engine(cfg, mesh)
     data = eng.shard_data({"A": jnp.asarray(A), "mask": jnp.asarray(mask)})
-    state = eng.app.init_state(rng, A=jnp.asarray(A), mask=jnp.asarray(mask))
-    state = jax.tree.map(
-        lambda x, s: jax.device_put(x, jax.sharding.NamedSharding(mesh, s)),
-        state, eng.app.state_specs())
+    state = eng.init_state(rng, A=jnp.asarray(A), mask=jnp.asarray(mask))
 
     if executor != "loop":
         collect = eng.app.objective_collect() if trace_every else None
-        out = _exec.run_scanned_executor(eng, state, data, rng, num_rounds,
-                                         executor, collect)
+        out = _exec.run_executor(eng, state, data, rng, num_rounds,
+                                 executor, collect, staleness=staleness)
         if collect is None:
             return out, []
         state, ys = out

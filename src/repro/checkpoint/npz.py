@@ -2,9 +2,11 @@
 
 Trees are flattened with '/'-joined key paths; ints in paths (scan-stacked
 layers) round-trip.  Works for any pytree of arrays (params, optimizer
-moments, full train state).  On a real multi-host cluster each host would
-write its addressable shards; in this single-host container the global
-array is materialized — the format is the same.
+moments, full train state, engine run state incl. typed PRNG keys — keys
+are stored as their ``key_data`` and re-wrapped on restore, so a resumed
+run continues the exact random stream).  On a real multi-host cluster
+each host would write its addressable shards; in this single-host
+container the global array is materialized — the format is the same.
 """
 from __future__ import annotations
 
@@ -16,11 +18,18 @@ import jax
 import numpy as np
 
 
+def _is_key(leaf: Any) -> bool:
+    return (isinstance(leaf, jax.Array)
+            and jax.dtypes.issubdtype(leaf.dtype, jax.dtypes.prng_key))
+
+
 def _flatten(tree: Any) -> Dict[str, np.ndarray]:
     out = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                         for p in path)
+        if _is_key(leaf):
+            leaf = jax.random.key_data(leaf)
         out[name] = np.asarray(leaf)
     return out
 
@@ -34,6 +43,14 @@ def _unflatten_into(template: Any, flat: Dict[str, np.ndarray]) -> Any:
         if name not in flat:
             raise KeyError(f"checkpoint missing {name}")
         arr = flat[name]
+        if _is_key(leaf):
+            kd = jax.random.key_data(leaf)
+            if tuple(arr.shape) != tuple(kd.shape):
+                raise ValueError(f"{name}: key data shape {arr.shape} != "
+                                 f"{kd.shape}")
+            vals.append(jax.random.wrap_key_data(
+                arr.astype(kd.dtype), impl=jax.random.key_impl(leaf)))
+            continue
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"{name}: shape {arr.shape} != {leaf.shape}")
         vals.append(arr.astype(leaf.dtype))

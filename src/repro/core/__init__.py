@@ -5,7 +5,8 @@ from .schedulers import (DynamicPriorityScheduler, RandomScheduler,
                          dependency_filter, priority_weights,
                          sample_candidates)
 from .engine import StradsEngine, single_device_mesh, worker_mesh, DATA_AXIS
-from .kvstore import KVStore, VarSpec
+from .kvstore import (KVStore, VarSpec, is_replicated, specs_from_tree,
+                      store_from_tree)
 from . import block_scheduler
 
 __all__ = [
@@ -13,5 +14,6 @@ __all__ = [
     "DynamicPriorityScheduler", "RandomScheduler", "RotationScheduler",
     "RoundRobinScheduler", "dependency_filter", "priority_weights",
     "sample_candidates", "StradsEngine", "single_device_mesh",
-    "worker_mesh", "DATA_AXIS", "KVStore", "VarSpec", "block_scheduler",
+    "worker_mesh", "DATA_AXIS", "KVStore", "VarSpec", "is_replicated",
+    "specs_from_tree", "store_from_tree", "block_scheduler",
 ]

@@ -26,6 +26,12 @@ Three execution paths share one traced round body:
   — the STRADS stale-schedule guarantee (Lee et al. 2014 §pipelining;
   dynamic Lasso keeps converging because priorities c_j change slowly
   between adjacent rounds).
+* :meth:`StradsEngine.run_ssp` — the bounded-staleness (SSP) executor,
+  implemented by the parameter-server subsystem in :mod:`repro.ps`:
+  reads of replicated state served from worker caches up to s rounds
+  old, pushes aggregated lazily into one batched flush collective per
+  s+1-round window.  ``staleness=0`` is bit-identical to
+  ``run_scanned(pipeline_depth=0)``.
 
 Apps whose communication pattern cycles with period L (``phase_period``,
 e.g. LDA's rotation over U workers, MF's H/W alternation) get L rounds
@@ -51,6 +57,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .compat import make_mesh, shard_map
+from .kvstore import KVStore, store_from_tree
 from .primitives import RoundResult, StradsApp, StradsAppBase, tree_psum
 
 DATA_AXIS = "data"
@@ -85,6 +92,7 @@ class StradsEngine:
             type(app).schedule_stats is not StradsAppBase.schedule_stats)
         self._round = self._build_round()
         self._scan_cache: dict = {}
+        self.kvstore: Optional[KVStore] = None   # built by place_state
 
     # -- traced round pieces (shared by every executor) ---------------------
 
@@ -143,13 +151,20 @@ class StradsEngine:
 
     # -- placement helpers ---------------------------------------------------
 
-    def init_state(self, rng: jax.Array):
-        state = self.app.init_state(rng)
-        if self.state_specs is not None:
-            state = jax.tree.map(
-                lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)),
-                state, self.state_specs)
-        return state
+    def init_state(self, rng: jax.Array, **app_kwargs):
+        """Initialize the app state and place it through the KV store
+        (extra keyword args go to ``app.init_state`` — e.g. the Lasso
+        residual seed ``y``)."""
+        return self.place_state(self.app.init_state(rng, **app_kwargs))
+
+    def place_state(self, state):
+        """Place a state pytree via :class:`~repro.core.kvstore.KVStore`
+        — the single source of variable placement and byte accounting
+        (``self.kvstore`` afterwards answers Fig-3-style questions like
+        ``bytes_per_device()``, and ``repro.ps`` derives the server-/
+        worker-resident split from the same VarSpecs)."""
+        self.kvstore = store_from_tree(self.mesh, state, self._sspec(state))
+        return self.kvstore.place_tree(state)
 
     def shard_data(self, data):
         return jax.tree.map(
@@ -254,6 +269,28 @@ class StradsEngine:
                 f"num_rounds must be a positive multiple of phase_period "
                 f"({self.phase_period}); got {num_rounds}")
         return self._get_scan_fn(num_steps, pipeline_depth, collect, donate)
+
+    # -- execution: SSP (bounded staleness — repro.ps) -----------------------
+
+    def run_ssp(self, state, data, rng, num_rounds: int, *,
+                staleness: int = 0, **kw):
+        """The bounded-staleness executor (see :mod:`repro.ps.ssp`):
+        reads of replicated state served from worker caches up to
+        ``staleness`` rounds old, pushes aggregated lazily at the flush.
+        ``staleness=0`` is bit-identical to
+        ``run_scanned(pipeline_depth=0)``."""
+        from ..ps.ssp import run_ssp
+        return run_ssp(self, state, data, rng, num_rounds,
+                       staleness=staleness, **kw)
+
+    def ssp_fn(self, num_rounds: int, *, staleness: int = 0,
+               collect: Optional[Callable] = None, donate: bool = True):
+        """The jitted multi-round SSP program, exposed for AOT
+        ``.lower().compile()`` (``launch/dryrun.py --engine --staleness``).
+        """
+        from ..ps.ssp import ssp_fn
+        return ssp_fn(self, num_rounds, staleness=staleness,
+                      collect=collect, donate=donate)
 
     def _get_scan_fn(self, num_steps: int, depth: int,
                      collect: Optional[Callable], donate: bool):

@@ -18,6 +18,18 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def path_name(path) -> str:
+    """'/'-joined pytree key path (same convention as checkpoint/npz)."""
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def is_replicated(spec: P) -> bool:
+    """True iff a PartitionSpec places the variable on every device whole
+    — the paper's synced KV-store values (vs worker-local partitions)."""
+    return all(axis is None for axis in spec)
+
+
 @dataclasses.dataclass
 class VarSpec:
     """Declared model variable: shape/dtype + how it shards."""
@@ -71,6 +83,14 @@ class KVStore:
         return {name: jax.device_put(v, self.sharding(name))
                 for name, v in values.items()}
 
+    def place_tree(self, tree: Any) -> Any:
+        """Place an arbitrary state pytree: every leaf goes to the device
+        placement its declared VarSpec mandates (leaves are matched by
+        '/'-joined key path)."""
+        return jax.tree_util.tree_map_with_path(
+            lambda p, x: jax.device_put(x, self.sharding(path_name(p))),
+            tree)
+
     # -- accounting (Fig 3) -------------------------------------------------
 
     def total_bytes(self) -> int:
@@ -87,3 +107,35 @@ class KVStore:
 
     def partition_specs(self) -> Dict[str, P]:
         return {name: vs.spec for name, vs in self.specs.items()}
+
+
+# ---------------------------------------------------------------------------
+# Pytree adapters — declare a store from a live state template
+# ---------------------------------------------------------------------------
+
+def specs_from_tree(tree: Any, spec_tree: Any) -> Dict[str, VarSpec]:
+    """VarSpec per leaf of a state pytree (names are '/'-joined paths).
+
+    ``spec_tree`` is the matching PartitionSpec pytree (PartitionSpecs are
+    leaves), exactly what :class:`~repro.core.engine.StradsEngine` takes as
+    ``state_specs``."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    sflat = jax.tree_util.tree_flatten_with_path(
+        spec_tree, is_leaf=lambda x: isinstance(x, P))[0]
+    if len(flat) != len(sflat):
+        raise ValueError(f"state has {len(flat)} leaves but the spec tree "
+                         f"has {len(sflat)}")
+    out = {}
+    for (path, leaf), (spath, spec) in zip(flat, sflat):
+        name = path_name(path)
+        if name != path_name(spath):
+            raise ValueError(f"state/spec tree mismatch: leaf {name!r} "
+                             f"paired with spec {path_name(spath)!r}")
+        out[name] = VarSpec(tuple(leaf.shape),
+                            jax.numpy.asarray(leaf).dtype, spec)
+    return out
+
+
+def store_from_tree(mesh: Mesh, tree: Any, spec_tree: Any) -> KVStore:
+    """A KVStore whose variables mirror a live state pytree."""
+    return KVStore(mesh, specs_from_tree(tree, spec_tree))

@@ -106,6 +106,47 @@ class StradsAppBase:
     def pull(self, state, sched, z, local, data, phase):
         raise NotImplementedError
 
+    # -- SSP (bounded-staleness) hooks — used by repro.ps.ssp ---------------
+    # Under SSP the cross-worker aggregation of ``z`` is deferred: pushes
+    # buffer their partials and a *flush* commits up to s+1 rounds at once.
+    # The default hooks make any app SSP-runnable with fully deferred
+    # commits (at staleness 0 they reduce exactly to ``pull``); apps whose
+    # push mutates worker-local state (e.g. LDA's Gibbs tables) override
+    # ``ssp_commit_local`` so their own writes stay immediately visible —
+    # the SSP guarantee that a worker never reads its own updates stale.
+
+    def ssp_commit_local(self, state, sched, local, data, phase):
+        """Commit the worker-local part of a round immediately (called
+        every round, before any cross-worker aggregation exists).  Must
+        only modify worker-local (sharded) leaves.  Default: nothing —
+        the whole commit waits for the flush."""
+        return state
+
+    def ssp_mark_scheduled(self, view, candidates, phase):
+        """In-flight exclusion (the STRADS scheduler rule, extended to the
+        SSP window): after round k's proposal is drawn, transform the
+        *scheduling view* so later proposals in the same window avoid the
+        variables already in flight — their pending updates are invisible
+        until the flush, so rescheduling them would compound the same
+        stale read up to s times.  Only the window's later schedule
+        computations see the returned view; pushes and commits do not.
+        Default: no exclusion (apps with disjoint-by-construction
+        schedules, e.g. rotation or phase cycling, need none)."""
+        return view
+
+    def ssp_defer_local(self, local, phase):
+        """The subset of ``local`` the flush-time commit still needs; it
+        is buffered per round until the flush.  Override to shrink the
+        pending-update buffer when ``ssp_commit_local`` already consumed
+        most of ``local``.  Default: keep everything."""
+        return local
+
+    def ssp_commit_shared(self, state, sched, z, local, data, phase):
+        """Deferred commit at the flush, with the aggregated ``z`` and
+        whatever ``ssp_defer_local`` kept.  Default: the full ``pull``
+        (correct whenever ``ssp_commit_local`` is the no-op default)."""
+        return self.pull(state, sched, z, local, data, phase)
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)

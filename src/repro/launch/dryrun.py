@@ -9,13 +9,20 @@ shape) on the production meshes, record memory/cost/collective analysis.
         --shape train_4k --mesh single
     PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
 
-``--engine lasso`` instead lowers the pipelined multi-round STRADS
-executor (``StradsEngine.run_scanned``) on a worker mesh carved from the
-forced 512-device topology — proving that R rounds × U workers compile
-into ONE XLA program (scan + psum + donated state) at production scale:
+``--engine lasso|lda|mf`` instead lowers the multi-round STRADS executor
+(``StradsEngine.run_scanned``) on a worker mesh carved from the forced
+512-device topology — proving that R rounds × U workers compile into ONE
+XLA program (scan + psum + donated state) at production scale:
 
     PYTHONPATH=src python -m repro.launch.dryrun --engine lasso \
         --workers 16 --rounds 16 --pipeline-depth 1
+
+``--staleness s`` lowers the bounded-staleness SSP program
+(``StradsEngine.run_ssp`` — worker caches, lazy pushes, batched flush
+collectives) instead of the BSP scan:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --engine lda \
+        --workers 16 --rounds 16 --staleness 2
 
 Results land in ``benchmarks/results/dryrun/<arch>__<shape>__<mesh>[__tag]
 .json`` (existing files are skipped unless --force), which
@@ -131,33 +138,85 @@ def run_one(arch: str, shape_name: str, mesh_name: str, tag: str = "",
     return out
 
 
-def run_engine(workers: int, rounds: int, depth: int) -> dict:
-    """Lower + compile the scanned STRADS executor on a ``workers``-wide
-    data mesh (a slice of the forced-512 topology)."""
+def _build_engine(engine: str, workers: int, mesh):
+    """(eng, state, data, meta) for one of the three paper apps at a
+    dry-run-friendly scale."""
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    if engine == "lasso":
+        from ..apps import lasso
+        n, J = workers * 64, 1024
+        X, y, _ = lasso.synthetic_correlated(rng, n=n, J=J, k_true=16)
+        cfg = lasso.LassoConfig(num_features=J, lam=0.02, block_size=32,
+                                num_candidates=128, rho=0.3)
+        eng = lasso.make_engine(cfg, mesh)
+        data = eng.shard_data({"X": X, "y": y})
+        state = eng.init_state(jax.random.key(0), y=y)
+        return eng, state, data, {"n": n, "J": J}
+    if engine == "lda":
+        from ..apps import lda
+        cfg = lda.LDAConfig(vocab=workers * 64, num_topics=32,
+                            num_workers=workers, tokens_per_worker=256,
+                            docs_per_worker=16)
+        words, docs, z0 = lda.synthetic_corpus(rng, cfg, true_topics=8)
+        eng = lda.make_engine(cfg, mesh)
+        data = eng.shard_data({"words": words, "docs": docs})
+        state = eng.init_state(jax.random.key(0), words=words, docs=docs,
+                               z0=z0)
+        return eng, state, data, {"vocab": cfg.vocab,
+                                  "topics": cfg.num_topics}
+    if engine == "mf":
+        from ..apps import mf
+        N, M, K = workers * 64, 512, 16
+        A, mask = mf.synthetic_ratings(rng, N, M, true_rank=K,
+                                       density=0.2)
+        cfg = mf.MFConfig(num_rows=N, num_cols=M, rank=K, lam=0.05)
+        eng = mf.make_engine(cfg, mesh)
+        data = eng.shard_data({"A": A, "mask": mask})
+        state = eng.init_state(jax.random.key(0), A=A, mask=mask)
+        return eng, state, data, {"N": N, "M": M, "K": K}
+    raise ValueError(f"unknown engine {engine!r}")
+
+
+def engine_rounds(engine: str, workers: int, rounds: int,
+                  staleness) -> int:
+    """Rounds actually lowered: the SSP program needs a whole number of
+    lcm(staleness+1, phase_period) steps, so round up (the result names
+    the artifact, keeping the skip-cache key honest)."""
+    if staleness is None:
+        return rounds
+    import math
+    period = workers if engine == "lda" else {"lasso": 1, "mf": 2}[engine]
+    L = math.lcm(staleness + 1, period)
+    return -(-rounds // L) * L
+
+
+def run_engine(engine: str, workers: int, rounds: int, depth: int,
+               staleness=None) -> dict:
+    """Lower + compile the scanned (or, with ``staleness``, the SSP)
+    STRADS executor on a ``workers``-wide data mesh (a slice of the
+    forced-512 topology).  ``rounds`` must already be step-aligned
+    (see :func:`engine_rounds`)."""
     import numpy as np
     from jax.sharding import Mesh
 
-    from ..apps import lasso
-
     mesh = Mesh(np.array(jax.devices()[:workers]), ("data",))
-    n, J = workers * 64, 1024
-    rng = np.random.default_rng(0)
-    X, y, _ = lasso.synthetic_correlated(rng, n=n, J=J, k_true=16)
-    cfg = lasso.LassoConfig(num_features=J, lam=0.02, block_size=32,
-                            num_candidates=128, rho=0.3)
-    eng = lasso.make_engine(cfg, mesh)
-    data = eng.shard_data({"X": X, "y": y})
-    state = eng.app.init_state(jax.random.key(0), y=y)
-    state = jax.tree_util.tree_map(
-        lambda x, s: jax.device_put(
-            x, jax.sharding.NamedSharding(mesh, s)),
-        state, eng.app.state_specs())
+    eng, state, data, meta = _build_engine(engine, workers, mesh)
 
-    out = {"engine": "lasso", "workers": workers, "rounds": rounds,
-           "pipeline_depth": depth, "n": n, "J": J}
-    fn = eng.scanned_fn(rounds, pipeline_depth=depth)
+    out = {"engine": engine, "workers": workers, "rounds": rounds,
+           "pipeline_depth": depth, **meta}
     t0 = time.time()
-    lowered = fn.lower(state, data, jax.random.key(1))
+    if staleness is None:
+        fn = eng.scanned_fn(rounds, pipeline_depth=depth)
+        lowered = fn.lower(state, data, jax.random.key(1))
+    else:
+        from .. import ps
+        out["staleness"] = staleness
+        fn = eng.ssp_fn(rounds, staleness=staleness)
+        import jax.numpy as jnp
+        lowered = fn.lower(state, data, jax.random.key(1), jnp.int32(0),
+                           ps.init_clocks(workers))
     out["lower_s"] = round(time.time() - t0, 2)
     t0 = time.time()
     compiled = lowered.compile()
@@ -192,27 +251,38 @@ def main():
     ap.add_argument("--tag", default="", help="variant tag (e.g. 'opt')")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--keep-hlo", action="store_true")
-    ap.add_argument("--engine", choices=("lasso",),
+    ap.add_argument("--engine", choices=("lasso", "lda", "mf"),
                     help="lower the scanned STRADS executor instead of an "
                          "arch × shape spec")
     ap.add_argument("--workers", type=int, default=16)
     ap.add_argument("--rounds", type=int, default=16)
     ap.add_argument("--pipeline-depth", type=int, default=1,
                     choices=(0, 1))
+    ap.add_argument("--staleness", type=int, default=None,
+                    help="with --engine: lower the bounded-staleness SSP "
+                         "executor (repro.ps) instead of the BSP scan")
     args = ap.parse_args()
 
     os.makedirs(RESULTS_DIR, exist_ok=True)
 
     if args.engine:
         os.makedirs(ENGINE_RESULTS_DIR, exist_ok=True)
+        variant = (f"s{args.staleness}" if args.staleness is not None
+                   else f"d{args.pipeline_depth}")
+        rounds = engine_rounds(args.engine, args.workers, args.rounds,
+                               args.staleness)
+        if rounds != args.rounds:
+            print(f"[note] rounds {args.rounds} → {rounds} "
+                  f"(whole SSP steps)")
         name = (f"strads-{args.engine}__U{args.workers}"
-                f"__R{args.rounds}__d{args.pipeline_depth}")
+                f"__R{rounds}__{variant}")
         path = os.path.join(ENGINE_RESULTS_DIR, name + ".json")
         if os.path.exists(path) and not args.force:
             print(f"[skip-cached] {name}")
             return
         print(f"[dryrun] {name} ...", flush=True)
-        res = run_engine(args.workers, args.rounds, args.pipeline_depth)
+        res = run_engine(args.engine, args.workers, rounds,
+                         args.pipeline_depth, args.staleness)
         with open(path, "w") as f:
             json.dump(res, f, indent=1)
         print(f"  lower {res['lower_s']}s compile {res['compile_s']}s"

@@ -13,6 +13,15 @@ block-coordinate scheduled training (core/block_scheduler).
 program with donated state (the training-substrate twin of
 ``StradsEngine.run_scanned``): one dispatch and one host sync per K
 steps instead of per step.
+
+``--staleness s`` (with ``--strads``) serves the block schedule from an
+SSP-style stale cache: priorities are re-read and the schedule recomputed
+only every s+1 steps (the trainer twin of ``StradsEngine.run_ssp``).
+
+Checkpoints written via ``--ckpt-dir`` hold the *full* train state
+(params, optimizer moments, step, and in strads mode the scheduler
+priority/rng), so ``--resume`` continues bit-exactly: a resumed run
+matches an uninterrupted one (tested in tests/test_ckpt_resume.py).
 """
 from __future__ import annotations
 
@@ -25,7 +34,7 @@ import jax.numpy as jnp
 
 from ..configs import ARCHS, get_config
 from ..core.block_scheduler import BlockScheduleConfig
-from ..checkpoint import save_checkpoint
+from ..checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from ..data import SyntheticLMConfig, make_batch
 from ..optim import AdamWConfig, cosine_schedule, wsd_schedule
 from ..sharding.rules import activation_mesh
@@ -50,8 +59,14 @@ def main(argv=None):
                     help="steps per lax.scan chunk (1 = host loop)")
     ap.add_argument("--blocks-per-step", type=int, default=0,
                     help="U for --strads (default: half the blocks)")
+    ap.add_argument("--staleness", type=int, default=0,
+                    help="SSP-style stale block schedule for --strads: "
+                         "recompute the schedule every s+1 steps only")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the latest checkpoint in "
+                         "--ckpt-dir (bit-exact: full state is saved)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -86,9 +101,13 @@ def main(argv=None):
         sched = BlockScheduleConfig(
             num_blocks=nblocks, blocks_per_step=u,
             candidates_per_step=min(nblocks, 2 * u), min_distance=1)
-        state = init_strads_state(cfg, tc, sched, rng)
-        step_fn = make_strads_train_step(cfg, tc, sched)
-        print(f"STRADS block scheduling: {u}/{nblocks} blocks per step")
+        state = init_strads_state(cfg, tc, sched, rng,
+                                  staleness=args.staleness)
+        step_fn = make_strads_train_step(cfg, tc, sched,
+                                         staleness=args.staleness)
+        print(f"STRADS block scheduling: {u}/{nblocks} blocks per step"
+              + (f", schedule staleness {args.staleness}"
+                 if args.staleness else ""))
     else:
         state = init_train_state(cfg, tc, rng)
         step_fn = make_train_step(cfg, tc)
@@ -130,16 +149,24 @@ def main(argv=None):
         due = (any((j + 1) % args.ckpt_every == 0 for j in chunk)
                if chunk is not None else (i + 1) % args.ckpt_every == 0)
         if args.ckpt_dir and due:
-            p = save_checkpoint(args.ckpt_dir, i + 1,
-                                {"params": state["params"],
-                                 "step": state["step"]})
+            # full state (params + opt + step [+ scheduler]) so --resume
+            # continues the exact run, optimizer moments included
+            p = save_checkpoint(args.ckpt_dir, i + 1, state)
             print(f"checkpoint → {p}")
+
+    start0 = 0
+    if args.resume and args.ckpt_dir:
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            state = restore_checkpoint(args.ckpt_dir, last, state)
+            start0 = last
+            print(f"resumed from step {last} ({args.ckpt_dir})")
 
     history = []
     t0 = time.time()
     if args.scan_steps > 1:
         K = args.scan_steps
-        for start in range(0, args.steps, K):
+        for start in range(start0, args.steps, K):
             steps = range(start, min(start + K, args.steps))
             batches = [make_batch(dcfg, j, **dkw) for j in steps]
             stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
@@ -151,16 +178,17 @@ def main(argv=None):
                          history)
             maybe_ckpt(last, chunk=steps)
     else:
-        for i in range(args.steps):
+        for i in range(start0, args.steps):
             batch = make_batch(dcfg, i, **dkw)
             state, metrics = step_jit(state, batch)
             if i % args.log_every == 0 or i == args.steps - 1:
                 log_step(i, metrics, t0, history)
             maybe_ckpt(i)
-    print(json.dumps({"first_loss": history[0]["loss"],
-                      "last_loss": history[-1]["loss"],
-                      "steps": args.steps,
-                      "wall_s": history[-1]["wall_s"]}))
+    if history:
+        print(json.dumps({"first_loss": history[0]["loss"],
+                          "last_loss": history[-1]["loss"],
+                          "steps": args.steps,
+                          "wall_s": history[-1]["wall_s"]}))
     return history
 
 

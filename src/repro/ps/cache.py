@@ -1,0 +1,48 @@
+"""Worker-local stale caches for server-resident variables.
+
+A worker never talks to the parameter server directly: reads go through a
+:class:`StaleCache` — a snapshot of the server values stamped with the
+clock it was taken at.  The SSP consistency gate (Xing et al. 2016) is
+
+    clock - cache.clock <= s
+
+i.e. a cached read may be served while it is at most ``s`` commits old;
+once the bound would be violated the executor must flush its pending
+updates and refresh the cache (the only points where the psum/all-gather
+collectives run).  ``repro.ps.ssp`` evaluates the gate while unrolling the
+round loop, so the refresh points are compiled into the scanned program —
+the gate *is* the window structure, not a runtime branch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StaleCache:
+    """A worker's view of the server: values + the clock they were read at.
+
+    ``values`` is the flat {path: array} dict produced by
+    :meth:`~repro.ps.server.ParameterServer.snapshot`; ``clock`` is the
+    (device) round counter at snapshot time.
+    """
+    values: Dict[str, Any]
+    clock: jax.Array
+
+    def staleness(self, clock) -> jax.Array:
+        """How many commits behind the server this cache is."""
+        return jnp.asarray(clock, jnp.int32) - self.clock
+
+    def fresh_enough(self, clock, bound: int):
+        """The SSP gate: may a read at ``clock`` still be served?"""
+        return self.staleness(clock) <= bound
+
+    def refresh(self, values: Dict[str, Any], clock) -> "StaleCache":
+        """A fresh snapshot (after a flush made the server current)."""
+        return StaleCache(values=values,
+                          clock=jnp.asarray(clock, jnp.int32))

@@ -1,0 +1,90 @@
+"""The sharded parameter server: versioned shared variables + vector clocks.
+
+The 2014-STRADS model store was a distributed key-value parameter server;
+under SPMD its *values* are just the replicated leaves of the state pytree
+(see ``core/kvstore.py``).  This module adds what bounded staleness needs
+on top of that store:
+
+* a classification of the state into **server-resident** variables (the
+  replicated leaves — every worker sees one committed value, refreshed by
+  a collective) and **worker-resident** variables (the sharded leaves — a
+  worker always reads its own current copy), derived from the same
+  ``VarSpec`` machinery the engine uses for placement;
+* ``snapshot``/``merge`` — extract the server values into a worker cache
+  and serve reads through it (the SSP read path in ``repro.ps.cache``);
+* per-worker **vector clocks** (Xing et al. 2016 §SSP): worker p's clock
+  counts the rounds it has committed; a cached read is legal while
+  ``clock - min_clock <= s``.  Under SPMD the workers advance in lockstep
+  so the vector collapses to a shared scalar — we still carry the vector,
+  because it is the quantity the SSP invariant (and its property test) is
+  stated over, and an asynchronous multi-controller backend would
+  diverge it.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from ..core.kvstore import (KVStore, is_replicated, path_name,
+                            store_from_tree)
+
+
+class ParameterServer:
+    """Bookkeeping for the server-resident half of an app's state."""
+
+    def __init__(self, mesh: Mesh, store: KVStore):
+        self.mesh = mesh
+        self.store = store
+        self.shared_names = frozenset(
+            n for n, vs in store.specs.items() if is_replicated(vs.spec))
+
+    @classmethod
+    def from_state(cls, mesh: Mesh, state: Any,
+                   spec_tree: Any) -> "ParameterServer":
+        return cls(mesh, store_from_tree(mesh, state, spec_tree))
+
+    # -- read path -----------------------------------------------------------
+
+    def snapshot(self, state: Any) -> Dict[str, jax.Array]:
+        """The server-resident leaves, as a flat {path: value} cache dict
+        (the payload of a worker's :class:`~repro.ps.cache.StaleCache`)."""
+        return {path_name(p): leaf
+                for p, leaf in jax.tree_util.tree_flatten_with_path(state)[0]
+                if path_name(p) in self.shared_names}
+
+    def merge(self, state: Any, cache: Dict[str, jax.Array]) -> Any:
+        """Serve a read: server-resident leaves come from the (possibly
+        stale) cache, worker-resident leaves from the live state."""
+        return jax.tree_util.tree_map_with_path(
+            lambda p, x: cache.get(path_name(p), x), state)
+
+    # -- accounting ----------------------------------------------------------
+
+    def shared_nbytes(self) -> int:
+        """Bytes a cache refresh moves into every worker (the 'pull')."""
+        return sum(self.store.specs[n].nbytes() for n in self.shared_names)
+
+    def local_nbytes(self) -> int:
+        return self.store.total_bytes() - self.shared_nbytes()
+
+
+# ---------------------------------------------------------------------------
+# Vector clocks
+# ---------------------------------------------------------------------------
+
+def init_clocks(num_workers: int) -> jax.Array:
+    """All workers start at clock 0."""
+    return jnp.zeros((num_workers,), jnp.int32)
+
+
+def tick(clocks: jax.Array) -> jax.Array:
+    """Every worker commits a round (SPMD: lockstep advance)."""
+    return clocks + 1
+
+
+def min_clock(clocks: jax.Array) -> jax.Array:
+    """The slowest worker's clock — the staleness reference point."""
+    return jnp.min(clocks)

@@ -1,0 +1,408 @@
+"""The SSP executor: bounded-staleness push/pull on the scanned engine.
+
+Stale-Synchronous Parallel (Xing et al. 2016; LightLDA, Yuan et al. 2014)
+relaxes BSP by letting workers read shared parameters up to ``s`` clocks
+stale.  On the STRADS primitives that becomes:
+
+* **reads** of server-resident variables (the replicated state leaves —
+  see ``repro.ps.server``) are served from a worker-local
+  :class:`~repro.ps.cache.StaleCache` instead of the freshly committed
+  value;
+* **pushes** aggregate lazily: each round's partial results ``z`` go into
+  a pending-update buffer (no collective), and only when the staleness
+  gate ``clock - cache.clock <= s`` would be violated does a **flush**
+  run — one batched psum for every deferred round, then the deferred
+  commits (``ssp_commit_shared``, default ``pull``) replayed in round
+  order, then a cache refresh;
+* **worker-local** state stays exact: ``ssp_commit_local`` runs every
+  round so a worker always sees its *own* writes immediately (the SSP
+  read-my-writes guarantee) — only other workers' contributions arrive
+  late.
+
+Rounds therefore execute in windows of ``s + 1``: the first round of a
+window reads a fresh snapshot (staleness 0), the last reads one that is
+``s`` commits old.  Schedules for a whole window are computed up front
+from the same snapshot — the direct generalization of the engine's
+``pipeline_depth=1`` schedule prefetch (one-round-stale schedules) to
+``≤ s``-round-stale schedules, with the window's ``schedule_stats``
+reductions batched into a single collective.
+
+At ``staleness=0`` every window is one round: the gate forces a flush
+after every push, the batched psum degenerates to the BSP pull
+aggregation, and the executor is **bit-identical** to
+``StradsEngine.run_scanned(pipeline_depth=0)`` — the correctness anchor
+(``tests/test_ssp.py``).  At ``s >= 1`` the program issues ~2 collectives
+per window instead of ~2 per round; the price is staleness error in the
+deferred commits, which ``benchmarks/bench_ssp.py`` measures as
+objective-vs-round for ``s ∈ {0,1,2,4}``.
+
+Built on the same ``lax.scan`` skeleton as ``run_scanned``: one XLA
+program for all R rounds, donated state, no per-round host sync.  The
+scan carries ``(state, rng, round counter, vector clocks, telemetry)``;
+the carry is exposed as :class:`SSPCarry` so a run can be checkpointed
+and resumed exactly (``checkpoint/npz.py`` round-trips it, clocks
+included).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.compat import shard_map
+from ..core.engine import DATA_AXIS
+from . import telemetry as T
+from .cache import StaleCache
+from .server import ParameterServer, init_clocks, tick
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SSPCarry:
+    """Resumable executor carry: PRNG stream, next round, vector clocks."""
+    rng: jax.Array
+    t: jax.Array                 # int32: next round index
+    clocks: jax.Array            # (num_workers,) per-worker vector clock
+
+
+def rounds_per_step(engine, staleness: int) -> int:
+    """Rounds one scan step unrolls: windows of ``s+1`` must tile the
+    app's static-phase cycle, so it is lcm(s+1, phase_period)."""
+    return math.lcm(staleness + 1, engine.phase_period)
+
+
+# ---------------------------------------------------------------------------
+# Collective batching
+# ---------------------------------------------------------------------------
+
+def _batched_psum(trees: List[Any], axis_name: str) -> List[Any]:
+    """psum a list of pytrees in one collective per dtype: every leaf is
+    raveled and concatenated, reduced once, and split back.  Elementwise
+    sums are unchanged, so this is bit-identical to per-leaf psum — and a
+    window's deferred pushes cost one launch.  Single-leaf groups skip
+    the concat/split round-trip entirely."""
+    flats, defs = zip(*(jax.tree_util.tree_flatten(t) for t in trees))
+    leaves = [leaf for f in flats for leaf in f]
+    summed: List[Any] = [None] * len(leaves)
+    by_dtype: dict = {}
+    for i, leaf in enumerate(leaves):
+        by_dtype.setdefault(jnp.asarray(leaf).dtype, []).append(i)
+    for _, idxs in by_dtype.items():
+        if len(idxs) == 1:
+            i = idxs[0]
+            summed[i] = jax.lax.psum(leaves[i], axis_name)
+            continue
+        flat = jnp.concatenate([jnp.ravel(leaves[i]) for i in idxs])
+        red = jax.lax.psum(flat, axis_name)
+        off = 0
+        for i in idxs:
+            n = leaves[i].size
+            summed[i] = red[off:off + n].reshape(leaves[i].shape)
+            off += n
+    out, k = [], 0
+    for f, d in zip(flats, defs):
+        out.append(jax.tree_util.tree_unflatten(d, summed[k:k + len(f)]))
+        k += len(f)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Round pieces (shard_map regions)
+# ---------------------------------------------------------------------------
+
+def _window_schedules(eng, view, data, subs, ts, phases):
+    """propose → [batched schedule_stats psum] → schedule for a whole
+    window, all reading the same stale cache view (schedule staleness
+    ≤ s — the generalization of the depth-1 pipeline prefetch).  Between
+    proposals the view passes through ``ssp_mark_scheduled`` so apps can
+    exclude in-flight variables from the rest of the window; only later
+    *proposals* see the marks — stats and the schedule decisions read
+    the pristine stale view."""
+    app = eng.app
+    keys = [jax.random.split(sub) for sub in subs]
+    cands = []
+    marked = view
+    for i, ((r1, _), t, ph) in enumerate(zip(keys, ts, phases)):
+        c = app.propose(marked, r1, t, ph)
+        cands.append(c)
+        if i + 1 < len(subs):        # only later proposals see the mark
+            marked = app.ssp_mark_scheduled(marked, c, ph)
+    if eng._needs_stats:
+        def stats_fn(data, st, cands):
+            stats = [app.schedule_stats(data, st, c, ph)
+                     for c, ph in zip(cands, phases)]
+            return tuple(_batched_psum(stats, DATA_AXIS))
+        stats = shard_map(
+            stats_fn, mesh=eng.mesh,
+            in_specs=(eng.data_specs, eng._sspec(view), P()),
+            out_specs=P(),
+        )(data, view, tuple(cands))
+    else:
+        stats = [None] * len(subs)
+    return [app.schedule(view, c, s, r2, t, ph)
+            for c, s, (_, r2), t, ph in zip(cands, stats, keys, ts, phases)]
+
+
+def _fused_round(eng, view, data, sched, phase, nbytes_out: list):
+    """``staleness=0`` fast path: the window is a single round, so defer
+    nothing — push → local commit → pull aggregation → shared commit in
+    ONE shard_map region, structurally the BSP ``_apply`` round (with the
+    default hooks it is exactly push → psum → pull)."""
+    app = eng.app
+    sspec = eng._sspec(view)
+    num_workers = eng.mesh.shape[DATA_AXIS]
+
+    def f(data, st, sched):
+        z, local = app.push(data, st, sched, phase)
+        st = app.ssp_commit_local(st, sched, local, data, phase)
+        keep = app.ssp_defer_local(local, phase)
+        nbytes_out.append(_tree_nbytes(z) * num_workers)
+        Z = jax.tree.map(lambda a: jax.lax.psum(a, DATA_AXIS), z)
+        return app.ssp_commit_shared(st, sched, Z, keep, data, phase)
+
+    return shard_map(f, mesh=eng.mesh,
+                     in_specs=(eng.data_specs, sspec, P()),
+                     out_specs=sspec)(data, view, sched)
+
+
+def _push_round(eng, view, data, sched, phase):
+    """push (no aggregation) + the immediate worker-local commit.
+
+    Partials and deferred locals come back with a leading worker axis
+    (sharded over ``data``) — the pending-update buffer layout."""
+    app = eng.app
+    sspec = eng._sspec(view)
+
+    def f(data, st, sched):
+        z, local = app.push(data, st, sched, phase)
+        st = app.ssp_commit_local(st, sched, local, data, phase)
+        keep = app.ssp_defer_local(local, phase)
+        pend = jax.tree.map(lambda a: jnp.asarray(a)[None], (z, keep))
+        return pend, st
+
+    (z_pend, keep_pend), state = shard_map(
+        f, mesh=eng.mesh,
+        in_specs=(eng.data_specs, sspec, P()),
+        out_specs=(P(DATA_AXIS), sspec),
+    )(data, view, sched)
+    return z_pend, keep_pend, state
+
+
+def _flush_aggregate(eng, z_pends):
+    """The lazy push: one batched psum over every deferred partial."""
+    def f(zs):
+        own = [jax.tree.map(lambda a: a[0], z) for z in zs]
+        return tuple(_batched_psum(own, DATA_AXIS))
+
+    return shard_map(f, mesh=eng.mesh, in_specs=(P(DATA_AXIS),),
+                     out_specs=P())(tuple(z_pends))
+
+
+def _commit_round(eng, state, data, sched, z, keep_pend, phase):
+    """Replay one deferred commit with its aggregated partials."""
+    app = eng.app
+    sspec = eng._sspec(state)
+
+    def f(data, st, sched, z, keep):
+        local = jax.tree.map(lambda a: a[0], keep)
+        return app.ssp_commit_shared(st, sched, z, local, data, phase)
+
+    return shard_map(
+        f, mesh=eng.mesh,
+        in_specs=(eng.data_specs, sspec, P(), P(), P(DATA_AXIS)),
+        out_specs=sspec,
+    )(data, state, sched, z, keep_pend)
+
+
+# ---------------------------------------------------------------------------
+# The scanned SSP program
+# ---------------------------------------------------------------------------
+
+def _tree_nbytes(tree: Any) -> int:
+    return sum(leaf.size * jnp.asarray(leaf).dtype.itemsize
+               for leaf in jax.tree_util.tree_leaves(tree))
+
+
+def _build_ssp(eng, num_steps: int, staleness: int,
+               collect: Optional[Callable], donate: bool, info: dict):
+    W = staleness + 1
+    period = eng.phase_period
+    L = rounds_per_step(eng, staleness)
+
+    def scanned(state, data, rng, t0, clocks):
+        server = ParameterServer.from_state(eng.mesh, state,
+                                            eng._sspec(state))
+
+        def step(carry, _):
+            state, rng, t, clocks, telem = carry
+            ys: list = []
+            cache = StaleCache(values=server.snapshot(state),
+                               clock=jnp.asarray(t, jnp.int32))
+            for w0 in range(0, L, W):
+                phases = [(w0 + k) % period for k in range(W)]
+                ts = []
+                subs = []
+                for k in range(W):
+                    rng, sub = jax.random.split(rng)
+                    subs.append(sub)
+                    ts.append(t + (w0 + k))
+                # The SSP gate, unrolled: this window's last read is
+                # exactly at the bound (W - 1 == staleness clocks stale),
+                # so the flush below is forced before the next round.
+                assert W - 1 <= staleness
+
+                view = server.merge(state, cache.values)
+                scheds = _window_schedules(eng, view, data, subs, ts, phases)
+
+                if W == 1:
+                    # single-round window: nothing to defer — fused path
+                    zb: list = []
+                    state = _fused_round(eng, view, data, scheds[0],
+                                         phases[0], zb)
+                    telem = T.observe_read(telem, ts[0], cache.clock)
+                    clocks = tick(clocks)
+                    if not info.get("traced"):
+                        info["deferred_bytes_peak"] = max(
+                            info.get("deferred_bytes_peak", 0), sum(zb))
+                        info["push_bytes_per_step"] = (
+                            info.get("push_bytes_per_step", 0) + sum(zb))
+                    if collect is not None:
+                        ys.append(collect(state))
+                    cache = cache.refresh(server.snapshot(state),
+                                          ts[-1] + 1)
+                    continue
+
+                z_pends, keep_pends = [], []
+                for k in range(W):
+                    view = server.merge(state, cache.values)
+                    zp, kp, state = _push_round(eng, view, data, scheds[k],
+                                                phases[k])
+                    z_pends.append(zp)
+                    keep_pends.append(kp)
+                    telem = T.observe_read(telem, ts[k], cache.clock)
+                    clocks = tick(clocks)
+
+                # The staleness bound now forces a sync: flush the pending
+                # buffer (one batched collective), replay the deferred
+                # commits in round order, refresh the cache.
+                if not info.get("traced"):
+                    wb = sum(_tree_nbytes(z) for z in z_pends)
+                    info["deferred_bytes_peak"] = max(
+                        info.get("deferred_bytes_peak", 0), wb)
+                    info["push_bytes_per_step"] = (
+                        info.get("push_bytes_per_step", 0) + wb)
+                zs = _flush_aggregate(eng, z_pends)
+                for k in range(W):
+                    state = _commit_round(eng, state, data, scheds[k],
+                                          zs[k], keep_pends[k], phases[k])
+                    if collect is not None:
+                        ys.append(collect(state))
+                cache = cache.refresh(server.snapshot(state), ts[-1] + 1)
+
+            out = None
+            if collect is not None:
+                out = jax.tree.map(lambda *xs: jnp.stack(xs), *ys)
+            return (state, rng, t + L, clocks, telem), out
+
+        telem0 = T.device_init(staleness)
+        (state, rng, t, clocks, telem), ys = jax.lax.scan(
+            step, (state, rng, jnp.asarray(t0, jnp.int32), clocks, telem0),
+            None, length=num_steps)
+        if not info.get("traced"):
+            info["traced"] = True
+            info["num_steps"] = num_steps
+            info["shared_bytes"] = server.shared_nbytes()
+        if collect is not None:
+            ys = jax.tree.map(
+                lambda x: x.reshape((num_steps * L,) + x.shape[2:]), ys)
+        return state, SSPCarry(rng=rng, t=t, clocks=clocks), telem, ys
+
+    return jax.jit(scanned, donate_argnums=(0,) if donate else ())
+
+
+def _get_ssp_fn(eng, num_steps: int, staleness: int,
+                collect: Optional[Callable], donate: bool):
+    key = ("ssp", num_steps, staleness, collect, donate)
+    hit = eng._scan_cache.get(key)
+    if hit is None:
+        info: dict = {}
+        hit = (_build_ssp(eng, num_steps, staleness, collect, donate, info),
+               info)
+        eng._scan_cache[key] = hit
+    return hit
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def ssp_fn(eng, num_rounds: int, *, staleness: int = 0,
+           collect: Optional[Callable] = None, donate: bool = True):
+    """The jitted ``(state, data, rng, t0, clocks) → (state, carry,
+    telemetry, trace)`` SSP program, exposed for AOT
+    ``.lower().compile()`` (``launch/dryrun.py --engine ... --staleness``).
+    """
+    num_steps = _check_rounds(eng, num_rounds, staleness)
+    return _get_ssp_fn(eng, num_steps, staleness, collect, donate)[0]
+
+
+def _check_rounds(eng, num_rounds: int, staleness: int) -> int:
+    if staleness < 0:
+        raise ValueError(f"staleness must be >= 0, got {staleness}")
+    L = rounds_per_step(eng, staleness)
+    num_steps, tail = divmod(num_rounds, L)
+    if tail or num_steps == 0:
+        raise ValueError(
+            f"run_ssp needs num_rounds to be a positive multiple of "
+            f"lcm(staleness+1, phase_period) = {L}; got {num_rounds}")
+    return num_steps
+
+
+def run_ssp(eng, state, data, rng, num_rounds: int, *, staleness: int = 0,
+            collect: Optional[Callable] = None, donate: bool = True,
+            with_telemetry: bool = False, t0: int = 0,
+            clocks: Optional[jax.Array] = None,
+            return_carry: bool = False):
+    """Execute ``num_rounds`` rounds under bounded staleness ``s``.
+
+    ``staleness=0`` reproduces ``run_scanned(pipeline_depth=0)`` (and the
+    host loop) bit-for-bit — same PRNG stream, same op order.  At ``s>=1``
+    reads of server-resident state are up to ``s`` rounds stale and pushes
+    aggregate lazily (one batched collective per ``s+1``-round window).
+
+    ``collect(state)`` is evaluated after every committed round inside
+    the flush; the stacked trace has leading axis ``num_rounds``.
+
+    ``t0``/``clocks`` resume a previous run (pass the values from a saved
+    :class:`SSPCarry`; ``t0`` must be a multiple of the step length).
+    ``return_carry=True`` appends the final carry to the return value;
+    ``with_telemetry=True`` appends an
+    :class:`~repro.ps.telemetry.SSPTelemetry`.
+    """
+    num_steps = _check_rounds(eng, num_rounds, staleness)
+    L = rounds_per_step(eng, staleness)
+    if t0 % L:
+        raise ValueError(f"t0 must be a multiple of the step length {L} "
+                         f"(phase/window alignment); got {t0}")
+    num_workers = eng.mesh.shape[DATA_AXIS]
+    if clocks is None:
+        clocks = init_clocks(num_workers)
+    fn, info = _get_ssp_fn(eng, num_steps, staleness, collect, donate)
+    state, carry, telem, ys = fn(state, data, rng,
+                                 jnp.int32(t0), jnp.asarray(clocks))
+
+    ret = [state]
+    if collect is not None:
+        ret.append(ys)
+    if with_telemetry:
+        flushes = num_steps * (L // (staleness + 1))
+        ret.append(T.summarize(telem, info, staleness=staleness,
+                               rounds=num_rounds, flushes=flushes,
+                               clocks=carry.clocks))
+    if return_carry:
+        ret.append(carry)
+    return ret[0] if len(ret) == 1 else tuple(ret)

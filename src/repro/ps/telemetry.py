@@ -1,0 +1,75 @@
+"""SSP telemetry: per-round staleness histograms + push/pull byte accounting.
+
+Two halves:
+
+* a small **device-side** pytree carried through the scan (staleness
+  histogram, max observed read staleness) — this is what the staleness-
+  invariant property test asserts over, so the bound is checked against
+  what the compiled program actually did, not against the window algebra;
+* **host-side static** byte accounting, captured while the executor
+  traces (partial-update bytes deferred per window, aggregated per flush,
+  server bytes pulled into caches per refresh) — per-round shapes are
+  static, so these are exact without any device traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def device_init(staleness: int) -> Dict[str, jnp.ndarray]:
+    """Scan-carried telemetry: histogram over observed read staleness
+    (bins 0..s) and the running max."""
+    return {"hist": jnp.zeros((staleness + 1,), jnp.int32),
+            "max_staleness": jnp.int32(0)}
+
+
+def observe_read(telem: Dict[str, jnp.ndarray], clock,
+                 cache_clock) -> Dict[str, jnp.ndarray]:
+    """Record one round's read: how stale was the cache it was served
+    from?  (``clock`` and ``cache_clock`` are device scalars.)"""
+    st = jnp.asarray(clock, jnp.int32) - jnp.asarray(cache_clock, jnp.int32)
+    return {"hist": telem["hist"].at[st].add(1),
+            "max_staleness": jnp.maximum(telem["max_staleness"], st)}
+
+
+@dataclasses.dataclass
+class SSPTelemetry:
+    """One SSP run, summarized."""
+    staleness_bound: int
+    rounds: int
+    flushes: int
+    hist: np.ndarray          # rounds whose reads were k clocks stale
+    max_staleness: int        # device-observed; must be <= staleness_bound
+    clocks: np.ndarray        # final per-worker vector clock
+    bytes_pushed: int         # partial-update bytes aggregated at flushes
+    bytes_deferred_peak: int  # largest pending buffer between flushes
+    bytes_pulled: int         # server bytes refreshed into worker caches
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["hist"] = [int(v) for v in self.hist]
+        d["clocks"] = [int(v) for v in self.clocks]
+        return d
+
+
+def summarize(device: Dict[str, jnp.ndarray], info: dict, *,
+              staleness: int, rounds: int, flushes: int,
+              clocks) -> SSPTelemetry:
+    """Join the device-side carry with the trace-time static accounting
+    (``info`` is filled by the executor while tracing)."""
+    return SSPTelemetry(
+        staleness_bound=staleness,
+        rounds=rounds,
+        flushes=flushes,
+        hist=np.asarray(device["hist"]),
+        max_staleness=int(device["max_staleness"]),
+        clocks=np.asarray(clocks),
+        bytes_pushed=int(info.get("push_bytes_per_step", 0)
+                         * info.get("num_steps", 0)),
+        bytes_deferred_peak=int(info.get("deferred_bytes_peak", 0)),
+        bytes_pulled=int(info.get("shared_bytes", 0)) * flushes,
+    )

@@ -125,16 +125,31 @@ def layer_blocks(cfg, params) -> Tuple[Dict[str, int], int]:
     return mapping, num_layer_blocks + 1
 
 
-def make_strads_train_step(cfg, tc: TrainConfig, sched: BlockScheduleConfig):
+def make_strads_train_step(cfg, tc: TrainConfig, sched: BlockScheduleConfig,
+                           staleness: int = 0):
     """Block-coordinate variant.  State gains "priority" and "rng".
 
     For scanned stacks the per-layer mask is applied along the stacked
     leading dim (every layer-group leaf has shape (steps, ...)); for
-    unrolled stacks the block_of_param mapping is used."""
+    unrolled stacks the block_of_param mapping is used.
+
+    ``staleness > 0`` is the SSP-style stale-schedule read (repro.ps): a
+    fresh block schedule is adopted only every ``staleness + 1`` steps
+    and served from the cached copy in between, so the priorities a
+    schedule acts on are up to ``staleness`` steps old (state gains a
+    "mask" cache; scheduled blocks then see several consecutive updates,
+    the block-coordinate analogue of an SSP window).  ``staleness=0``
+    adopts a fresh schedule every step — the original behavior."""
+    refresh = staleness + 1
 
     def train_step(state, batch):
         rng, sub = jax.random.split(state["rng"])
-        mask = select_blocks(sched, state["priority"], sub)
+        fresh_mask = select_blocks(sched, state["priority"], sub)
+        if staleness:
+            mask = jnp.where(state["step"] % refresh == 0,
+                             fresh_mask, state["mask"])
+        else:
+            mask = fresh_mask
 
         (loss, metrics), grads = jax.value_and_grad(
             lambda p: loss_fn(cfg, p, batch), has_aux=True)(state["params"])
@@ -182,16 +197,22 @@ def make_strads_train_step(cfg, tc: TrainConfig, sched: BlockScheduleConfig):
                                    captured["norms"], mask)
         metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr,
                        blocks_active=jnp.sum(mask))
-        return ({"params": new_p, "opt": new_opt, "step": state["step"] + 1,
-                 "priority": priority, "rng": rng}, metrics)
+        out = {"params": new_p, "opt": new_opt, "step": state["step"] + 1,
+               "priority": priority, "rng": rng}
+        if staleness:
+            out["mask"] = mask
+        return (out, metrics)
 
     return train_step
 
 
 def init_strads_state(cfg, tc: TrainConfig, sched: BlockScheduleConfig,
-                      rng: jax.Array) -> Dict[str, Any]:
+                      rng: jax.Array, staleness: int = 0) -> Dict[str, Any]:
     r1, r2 = jax.random.split(rng)
     st = init_train_state(cfg, tc, r1)
     st["priority"] = init_priority(sched)
     st["rng"] = r2
+    if staleness:
+        # step 0 always recomputes (0 % refresh == 0): any init works
+        st["mask"] = jnp.zeros((sched.num_blocks,), jnp.float32)
     return st
