@@ -11,6 +11,11 @@ schedule with round t's push/pull (one-round-stale schedules, paper
 cross-U scaling is not meaningful here — the loop-vs-scan dispatch
 overhead ratio is.
 
+The sweep is expressed as :class:`repro.core.ExecutionPlan` values run
+through the one engine entry point (``StradsEngine.execute``); each
+worker-count record embeds the plan dicts under ``"plans"`` so the
+artifact states exactly what was measured.
+
 Writes ``benchmarks/results/BENCH_pipeline.json`` so later PRs have a
 perf trajectory to compare against.
 """
@@ -25,7 +30,7 @@ import json, time
 import numpy as np
 import jax, jax.numpy as jnp
 from repro.apps import lasso
-from repro.core import worker_mesh
+from repro.core import ExecutionPlan, worker_mesh
 
 U, R = {workers}, {rounds}
 rng = np.random.default_rng(0)
@@ -39,20 +44,19 @@ data = eng.shard_data({{"X": jnp.asarray(X), "y": jnp.asarray(y)}})
 def init():
     return eng.init_state(jax.random.key(0), y=y)
 
-out = {{}}
-st = eng.run(init(), data, jax.random.key(1), 2)          # compile warmup
-t0 = time.time()
-st = eng.run(st, data, jax.random.key(1), R)
-jax.block_until_ready(st)
-out["loop"] = R / (time.time() - t0)
-for name, depth in (("scan", 0), ("pipelined", 1)):
-    st = eng.run_scanned(init(), data, jax.random.key(1), R,
-                         pipeline_depth=depth)             # compile warmup
+# One plan per executor — the sweep is over ExecutionPlans, and the
+# BENCH json records exactly what ran.
+plans = {{name: ExecutionPlan(executor=name, rounds=R)
+         for name in ("loop", "scan", "pipelined")}}
+out = {{"plans": {{n: p.to_json() for n, p in plans.items()}}}}
+for name, plan in plans.items():
+    warm = 2 if name == "loop" else R       # loop compiles one round once
+    eng.execute(init(), data, jax.random.key(1),
+                ExecutionPlan(executor=name, rounds=warm))  # compile warmup
     st = init()
     t0 = time.time()
-    st = eng.run_scanned(st, data, jax.random.key(1), R,
-                         pipeline_depth=depth)
-    jax.block_until_ready(st)
+    rep = eng.execute(st, data, jax.random.key(1), plan)
+    jax.block_until_ready(rep.state)
     out[name] = R / (time.time() - t0)
 print("PAYLOAD:" + json.dumps(out))
 """

@@ -12,7 +12,10 @@ modest, so the expectation here is ssp(s≥1) ≥ scan, with the real win on
 multi-chip meshes.
 
 Also records the staleness telemetry (max observed read staleness — must
-equal s — plus flush count and push/pull byte accounting).
+equal s — plus flush count and push/pull byte accounting).  The sweep is
+a dict of :class:`repro.core.ExecutionPlan` values run through
+``StradsEngine.execute``; the BENCH json embeds every plan dict, so the
+cross-PR trajectory records exactly what was measured.
 
 Writes ``benchmarks/results/BENCH_ssp.json`` for the cross-PR perf
 trajectory.
@@ -28,7 +31,7 @@ import json, time
 import numpy as np
 import jax, jax.numpy as jnp
 from repro.apps import lasso
-from repro.core import worker_mesh
+from repro.core import ExecutionPlan, worker_mesh
 
 U, R = {workers}, {rounds}
 rng = np.random.default_rng(0)
@@ -41,36 +44,40 @@ data = eng.shard_data({{"X": jnp.asarray(X), "y": jnp.asarray(y)}})
 init = lambda: eng.init_state(jax.random.key(0), y=y)
 collect = eng.app.objective_collect()
 
-runners = {{"scan": lambda st: eng.run_scanned(st, data,
-                                              jax.random.key(1), R)}}
+# The sweep is a dict of ExecutionPlans through the one entry point.
+plans = {{"scan": ExecutionPlan(executor="scan", rounds=R)}}
 for s in (0, 1, 2, 4):
-    runners[f"s{{s}}"] = (lambda st, s=s: eng.run_ssp(
-        st, data, jax.random.key(1), R, staleness=s))
+    plans[f"s{{s}}"] = ExecutionPlan(executor="ssp", rounds=R, staleness=s)
 
-for run in runners.values():                 # compile warmup, all first
-    run(init())
+run = lambda st, plan: eng.execute(st, data, jax.random.key(1), plan).state
+
+for plan in plans.values():                  # compile warmup, all first
+    run(init(), plan)
 
 # Interleaved best-of-3: a slow minute on a shared box hits every
 # config, not whichever happened to be measured during it.
-best = {{name: 0.0 for name in runners}}
+best = {{name: 0.0 for name in plans}}
 for _ in range(3):
-    for name, run in runners.items():
+    for name, plan in plans.items():
         st = init()
         t0 = time.time()
-        jax.block_until_ready(run(st))
+        jax.block_until_ready(run(st, plan))
         best[name] = max(best[name], R / (time.time() - t0))
 
-out = {{"scan": best["scan"], "ssp": {{}}}}
+out = {{"scan": best["scan"], "ssp": {{}},
+       "plans": {{n: p.to_json() for n, p in plans.items()}}}}
 for s in (0, 1, 2, 4):
-    _, ys, telem = eng.run_ssp(init(), data, jax.random.key(1), R,
-                               staleness=s, collect=collect,
-                               with_telemetry=True)
-    obj = np.asarray(ys)
+    plan = ExecutionPlan(executor="ssp", rounds=R, staleness=s,
+                         collect_every=1, telemetry=True)
+    rep = eng.execute(init(), data, jax.random.key(1), plan,
+                      collect=collect)
+    obj = np.asarray(rep.trace)
     stride = max(1, R // 20)
     out["ssp"][s] = {{
         "rounds_per_sec": best[f"s{{s}}"],
         "objective": [float(v) for v in obj[::stride]] + [float(obj[-1])],
-        "telemetry": telem.to_json(),
+        "telemetry": rep.telemetry.to_json(),
+        "plan": plan.to_json(),
     }}
 print("PAYLOAD:" + json.dumps(out))
 """

@@ -1,40 +1,74 @@
-"""Shared executor dispatch for the app-level ``fit`` drivers.
+"""Thin plan adapter for the app-level ``fit`` drivers.
 
-Every app exposes ``fit(..., executor="loop"|"scan"|"pipelined"|"ssp")``;
-the non-loop paths all reduce to the same call into the engine's scanned
-executors (``run_scanned`` / ``run_ssp``) plus the same trace decimation,
-so they live here once.
+Every app exposes ``fit(..., plan=ExecutionPlan(...))``; the legacy
+``executor=``/``staleness=`` kwargs still work behind
+:func:`resolve_plan` (emitting a ``DeprecationWarning`` and producing a
+bit-identical run), and a bare ``trace_every=`` maps silently onto
+``collect_every`` (it stays the loop-path trace knob and does not warn
+on its own).  All executor-name/kwarg validation lives in
+:class:`repro.core.plan.ExecutionPlan` — the single source of truth the
+old ``scan_depth`` helper's drifted error message was folded into.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable, List, Optional, Tuple
 
-_EXEC_DEPTH = {"scan": 0, "pipelined": 1}
+from repro.core import ExecutionPlan
 
 
-def scan_depth(executor: str) -> int:
-    """Map an executor name to its pipeline depth (raising on typos)."""
-    depth = _EXEC_DEPTH.get(executor)
-    if depth is None:
-        raise ValueError(f"executor must be 'loop', 'scan', 'pipelined' "
-                         f"or 'ssp'; got {executor!r}")
-    return depth
+def resolve_plan(plan: Optional[ExecutionPlan], *,
+                 num_rounds: Optional[int] = None,
+                 executor: Optional[str] = None,
+                 staleness: Optional[int] = None,
+                 trace_every: Optional[int] = None) -> ExecutionPlan:
+    """One plan out of either surface: the declarative ``plan=`` or the
+    deprecated per-kwarg form (which warns and builds the same plan, so
+    both run bit-identically through ``StradsEngine.execute``)."""
+    if plan is not None:
+        if executor is not None or staleness is not None:
+            raise ValueError("pass either plan= or the legacy executor=/"
+                             "staleness= kwargs, not both")
+        if num_rounds is not None and num_rounds != plan.rounds:
+            raise ValueError(f"num_rounds={num_rounds} contradicts "
+                             f"plan.rounds={plan.rounds}; drop one")
+        if trace_every:
+            raise ValueError("trace cadence comes from plan.collect_every "
+                             "when a plan is passed")
+        if plan.telemetry or plan.checkpoint_every:
+            raise ValueError(
+                "fit() has no telemetry/checkpoint surface — it would "
+                "silently drop plan.telemetry / plan.checkpoint_every; "
+                "drive StradsEngine.execute(..., ckpt_dir=...) directly "
+                "for those plan fields")
+        return plan
+    if executor is not None or staleness is not None:
+        warnings.warn(
+            "fit(executor=..., staleness=...) is deprecated; pass "
+            "plan=ExecutionPlan(executor=..., staleness=..., rounds=...) "
+            "instead", DeprecationWarning, stacklevel=3)
+    if num_rounds is None:
+        raise ValueError("fit needs num_rounds (or a plan= carrying "
+                         "rounds)")
+    return ExecutionPlan(executor=executor if executor is not None
+                         else "loop",
+                         rounds=num_rounds,
+                         staleness=staleness or 0,
+                         collect_every=trace_every or 0)
 
 
 def run_executor(eng, state, data, rng, num_rounds: int, executor: str,
                  collect: Optional[Callable[[Any], Any]] = None,
                  staleness: int = 0):
-    """Dispatch a non-loop executor.  ``staleness`` only applies to
-    ``executor="ssp"`` (the bounded-staleness path in ``repro.ps``)."""
-    if executor == "ssp":
-        return eng.run_ssp(state, data, rng, num_rounds,
-                           staleness=staleness, collect=collect)
-    if staleness:
-        raise ValueError(f"staleness={staleness} requires executor='ssp'; "
-                         f"got executor={executor!r}")
-    return eng.run_scanned(state, data, rng, num_rounds,
-                           pipeline_depth=scan_depth(executor),
-                           collect=collect)
+    """Deprecated: build an :class:`ExecutionPlan` and call
+    ``StradsEngine.execute`` instead."""
+    warnings.warn("run_executor is deprecated; use StradsEngine.execute "
+                  "with an ExecutionPlan", DeprecationWarning,
+                  stacklevel=2)
+    plan = ExecutionPlan(executor=executor, rounds=num_rounds,
+                         staleness=staleness)
+    rep = eng.execute(state, data, rng, plan, collect=collect)
+    return rep.state if collect is None else (rep.state, rep.trace)
 
 
 def trace_points(num_rounds: int, trace_every: int) -> List[int]:

@@ -115,14 +115,15 @@ class StradsLasso(StradsAppBase):
         idx, mask = self.dyn.finalize(candidates, stats)
         return {"idx": idx, "mask": mask}
 
-    def ssp_mark_scheduled(self, view, candidates, phase):
-        # In-flight exclusion for the SSP window: coordinates already
-        # proposed this window drop to the η priority floor, so later
-        # stale-read rounds pick fresh coordinates instead of compounding
-        # the same deferred update (the divergence mode of stale CD).
-        if self.cfg.scheduler != "strads":
-            return view
-        return {**view, "delta": view["delta"].at[candidates].set(0.0)}
+    def var_roles(self):
+        # ``delta`` is the dynamic-priority table: declaring the role (v2
+        # protocol) makes the SSP window derive the in-flight exclusion —
+        # coordinates already proposed this window drop to the η priority
+        # floor, so later stale-read rounds pick fresh coordinates instead
+        # of compounding the same deferred update (the divergence mode of
+        # stale CD).
+        return {"delta": "priority"} if self.cfg.scheduler == "strads" \
+            else {}
 
     # -- push / pull ----------------------------------------------------------
 
@@ -213,41 +214,46 @@ def make_engine(cfg: LassoConfig, mesh) -> StradsEngine:
 
 
 def fit(cfg: LassoConfig, X: np.ndarray, y: np.ndarray, mesh,
-        num_rounds: int, rng: Optional[jax.Array] = None,
-        trace_every: int = 0, executor: str = "loop", staleness: int = 0):
+        num_rounds: Optional[int] = None, rng: Optional[jax.Array] = None,
+        trace_every: Optional[int] = None, executor: Optional[str] = None,
+        staleness: Optional[int] = None, plan=None):
     """Run STRADS Lasso; returns (state, trace of objective values).
 
-    ``executor`` selects the engine path: ``"loop"`` (host loop, one jit
-    per round), ``"scan"`` (all rounds in one ``lax.scan`` program,
-    bit-identical to the loop), ``"pipelined"`` (scan + one-round-stale
-    schedule prefetch — the paper's pipelined scheduler), or ``"ssp"``
-    (bounded staleness ``staleness``; at 0 bit-identical to ``"scan"``).
+    ``plan`` (an :class:`~repro.core.ExecutionPlan`) declares how to run:
+    executor (``"loop"`` host loop / ``"scan"`` one ``lax.scan`` program,
+    bit-identical to the loop / ``"pipelined"`` one-round-stale schedule
+    prefetch / ``"ssp"`` bounded staleness, at s=0 bit-identical to
+    ``"scan"``), rounds, and the ``collect_every`` trace cadence.  The
+    legacy ``executor=``/``staleness=``/``trace_every=`` kwargs still
+    work (deprecated, bit-identical).
     """
+    plan = _exec.resolve_plan(plan, num_rounds=num_rounds,
+                              executor=executor, staleness=staleness,
+                              trace_every=trace_every)
     rng = rng if rng is not None else jax.random.key(0)
     eng = make_engine(cfg, mesh)
     data = eng.shard_data({"X": jnp.asarray(X), "y": jnp.asarray(y)})
     state = eng.init_state(rng, y=y)
+    every = plan.collect_every
 
-    if executor != "loop":
-        collect = eng.app.objective_collect() if trace_every else None
-        out = _exec.run_executor(eng, state, data, rng, num_rounds,
-                                 executor, collect, staleness=staleness)
+    if plan.executor != "loop":
+        collect = eng.app.objective_collect() if every else None
+        rep = eng.execute(state, data, rng, plan, collect=collect)
         if collect is None:
-            return out, []
-        state, ys = out
-        return state, _exec.decimate(np.asarray(ys), num_rounds,
-                                     trace_every)
+            return rep.state, []
+        return rep.state, _exec.decimate(np.asarray(rep.trace),
+                                         plan.rounds, every)
 
     obj = eng.app.objective_fn(mesh)
     trace = []
 
     def cb(t, s, out):
-        if trace_every and (t % trace_every == 0 or t == num_rounds - 1):
+        if every and (t % every == 0 or t == plan.rounds - 1):
             trace.append((t, float(obj(s))))
         return False
 
-    state = eng.run(state, data, rng, num_rounds, callback=cb)
-    return state, trace
+    rep = eng.execute(state, data, rng, plan, callback=cb)
+    return rep.state, trace
 
 
 def reference_cd(X: np.ndarray, y: np.ndarray, lam: float,

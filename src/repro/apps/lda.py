@@ -169,26 +169,13 @@ class StradsLDA(StradsAppBase):
         return {"z": local["z"], "D": local["D"], "B": local["B"],
                 "s": s_new, "s_err": s_err}
 
-    # -- SSP hooks (repro.ps): tables are worker-local, so they commit
-    # every round (a worker's own Gibbs moves must never be re-sampled
-    # from a stale table); only the synced column sums ``s`` defer — the
+    # SSP behavior is fully derived from the placement above (v2 write
+    # contract, repro.core.primitives): ``local``'s z/D/B name the
+    # worker-resident state leaves, so they commit through every round (a
+    # worker's own Gibbs moves are never re-sampled from a stale table);
+    # only ``s_tilde`` defers to the flush, where ``pull`` replays — the
     # LightLDA-style staleness-tolerant server, where s̃ is exactly the
     # stale quantity the paper's Fig-5 error bound is about.
-
-    def ssp_commit_local(self, state, sched, local, data, phase):
-        return {**state, "z": local["z"], "D": local["D"],
-                "B": local["B"]}
-
-    def ssp_defer_local(self, local, phase):
-        return {"s_tilde": local["s_tilde"]}
-
-    def ssp_commit_shared(self, state, sched, z, local, data, phase):
-        cfg = self.cfg
-        s_new = z["s"]
-        err_p = jnp.sum(jnp.abs(local["s_tilde"] - s_new))
-        M = cfg.num_workers * cfg.tokens_per_worker
-        s_err = jax.lax.psum(err_p, "data") / (cfg.num_workers * M)
-        return {**state, "s": s_new, "s_err": s_err}
 
     # -- diagnostics ------------------------------------------------------------
 
@@ -340,51 +327,54 @@ def _global_loglik(cfg: LDAConfig, state):
                                      + cfg.padded_vocab * cfg.gamma))
 
 
-def fit(cfg: LDAConfig, words, docs, z0, mesh, num_rounds: int,
-        baseline: bool = False, trace_every: int = 0,
-        executor: str = "loop", staleness: int = 0):
-    """``executor``: "loop" | "scan" | "pipelined" | "ssp" (see
-    lasso.fit).  For "pipelined"/"ssp", num_rounds must tile the rotation
-    length U (and the SSP window)."""
+def fit(cfg: LDAConfig, words, docs, z0, mesh, num_rounds=None,
+        baseline: bool = False, trace_every=None,
+        executor=None, staleness=None, plan=None):
+    """``plan``: an :class:`~repro.core.ExecutionPlan` (see lasso.fit;
+    legacy ``executor=``/``staleness=`` kwargs deprecated).  For
+    "pipelined"/"ssp", the rounds must tile the rotation length U (and
+    the SSP window)."""
+    plan = _exec.resolve_plan(plan, num_rounds=num_rounds,
+                              executor=executor, staleness=staleness,
+                              trace_every=trace_every)
     eng = make_engine(cfg, mesh, baseline=baseline)
     data = eng.shard_data({"words": jnp.asarray(words),
                            "docs": jnp.asarray(docs)})
     state = eng.init_state(jax.random.key(0), words=words, docs=docs,
                            z0=z0)
+    every = plan.collect_every
 
-    if executor != "loop":
+    if plan.executor != "loop":
         collect = None
-        if trace_every:
+        if every:
             def collect(s):
                 out = {"ll": _global_loglik(cfg, s)}
                 if "s_err" in s:
                     out["s_err"] = s["s_err"]
                 return out
-        out = _exec.run_executor(eng, state, data,
-                                 jax.random.key(0), num_rounds,
-                                 executor, collect, staleness=staleness)
+        rep = eng.execute(state, data, jax.random.key(0), plan,
+                          collect=collect)
         if collect is None:
-            return out, [], []
-        state, ys = out
-        trace = _exec.decimate(np.asarray(ys["ll"]), num_rounds,
-                               trace_every)
-        s_errs = (_exec.decimate(np.asarray(ys["s_err"]), num_rounds,
-                                 trace_every) if "s_err" in ys else [])
-        return state, trace, s_errs
+            return rep.state, [], []
+        ys = rep.trace
+        trace = _exec.decimate(np.asarray(ys["ll"]), plan.rounds, every)
+        s_errs = (_exec.decimate(np.asarray(ys["s_err"]), plan.rounds,
+                                 every) if "s_err" in ys else [])
+        return rep.state, trace, s_errs
 
     llfn = StradsLDA(cfg).loglik_fn(mesh) if not baseline else \
         _baseline_loglik(cfg, mesh)
     trace, s_errs = [], []
 
     def cb(t, s, out):
-        if trace_every and (t % trace_every == 0 or t == num_rounds - 1):
+        if every and (t % every == 0 or t == plan.rounds - 1):
             trace.append((t, float(llfn(s))))
             if "s_err" in s:
                 s_errs.append((t, float(s["s_err"])))
         return False
 
-    state = eng.run(state, data, jax.random.key(0), num_rounds, callback=cb)
-    return state, trace, s_errs
+    rep = eng.execute(state, data, jax.random.key(0), plan, callback=cb)
+    return rep.state, trace, s_errs
 
 
 def _baseline_loglik(cfg: LDAConfig, mesh):

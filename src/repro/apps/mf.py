@@ -219,33 +219,36 @@ def make_engine(cfg: MFConfig, mesh) -> StradsEngine:
 
 
 def fit(cfg: MFConfig, A: np.ndarray, mask: np.ndarray, mesh,
-        num_rounds: int, rng: Optional[jax.Array] = None,
-        trace_every: int = 0, executor: str = "loop", staleness: int = 0):
-    """``executor``: "loop" | "scan" | "pipelined" | "ssp" (see
-    lasso.fit).  For "pipelined"/"ssp", num_rounds must divide into H/W
-    phase cycles (and SSP windows)."""
+        num_rounds: Optional[int] = None, rng: Optional[jax.Array] = None,
+        trace_every=None, executor=None, staleness=None, plan=None):
+    """``plan``: an :class:`~repro.core.ExecutionPlan` (see lasso.fit;
+    legacy ``executor=``/``staleness=`` kwargs deprecated).  For
+    "pipelined"/"ssp", the rounds must divide into H/W phase cycles (and
+    SSP windows)."""
+    plan = _exec.resolve_plan(plan, num_rounds=num_rounds,
+                              executor=executor, staleness=staleness,
+                              trace_every=trace_every)
     rng = rng if rng is not None else jax.random.key(0)
     eng = make_engine(cfg, mesh)
     data = eng.shard_data({"A": jnp.asarray(A), "mask": jnp.asarray(mask)})
     state = eng.init_state(rng, A=jnp.asarray(A), mask=jnp.asarray(mask))
+    every = plan.collect_every
 
-    if executor != "loop":
-        collect = eng.app.objective_collect() if trace_every else None
-        out = _exec.run_executor(eng, state, data, rng, num_rounds,
-                                 executor, collect, staleness=staleness)
+    if plan.executor != "loop":
+        collect = eng.app.objective_collect() if every else None
+        rep = eng.execute(state, data, rng, plan, collect=collect)
         if collect is None:
-            return out, []
-        state, ys = out
-        return state, _exec.decimate(np.asarray(ys), num_rounds,
-                                     trace_every)
+            return rep.state, []
+        return rep.state, _exec.decimate(np.asarray(rep.trace),
+                                         plan.rounds, every)
 
     obj = eng.app.objective_fn(mesh)
     trace = []
 
     def cb(t, s, out):
-        if trace_every and (t % trace_every == 0 or t == num_rounds - 1):
+        if every and (t % every == 0 or t == plan.rounds - 1):
             trace.append((t, float(obj(s))))
         return False
 
-    state = eng.run(state, data, rng, num_rounds, callback=cb)
-    return state, trace
+    rep = eng.execute(state, data, rng, plan, callback=cb)
+    return rep.state, trace

@@ -4,16 +4,20 @@ from .schedulers import (DynamicPriorityScheduler, RandomScheduler,
                          RotationScheduler, RoundRobinScheduler,
                          dependency_filter, priority_weights,
                          sample_candidates)
-from .engine import StradsEngine, single_device_mesh, worker_mesh, DATA_AXIS
-from .kvstore import (KVStore, VarSpec, is_replicated, specs_from_tree,
-                      store_from_tree)
+from .engine import (EngineCarry, StradsEngine, single_device_mesh,
+                     worker_mesh, DATA_AXIS)
+from .kvstore import (KVStore, VarSpec, VarTable, is_replicated,
+                      specs_from_tree, store_from_tree)
+from .plan import EXECUTORS, ExecutionPlan, ExecutionReport
 from . import block_scheduler
 
 __all__ = [
     "RoundResult", "StradsApp", "StradsAppBase", "tree_psum",
     "DynamicPriorityScheduler", "RandomScheduler", "RotationScheduler",
     "RoundRobinScheduler", "dependency_filter", "priority_weights",
-    "sample_candidates", "StradsEngine", "single_device_mesh",
-    "worker_mesh", "DATA_AXIS", "KVStore", "VarSpec", "is_replicated",
-    "specs_from_tree", "store_from_tree", "block_scheduler",
+    "sample_candidates", "EngineCarry", "StradsEngine",
+    "single_device_mesh", "worker_mesh", "DATA_AXIS", "KVStore",
+    "VarSpec", "VarTable", "is_replicated", "specs_from_tree",
+    "store_from_tree", "EXECUTORS", "ExecutionPlan", "ExecutionReport",
+    "block_scheduler",
 ]

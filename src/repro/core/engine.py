@@ -9,7 +9,13 @@ with ``push``/``schedule_stats`` running under ``shard_map`` over the
 ``data`` mesh axis and schedule decisions replicated.  ``sync`` is
 automatic: SPMD program order is the BSP barrier (DESIGN.md §3).
 
-Three execution paths share one traced round body:
+The one public entry point is :meth:`StradsEngine.execute`, driven by a
+declarative :class:`~repro.core.plan.ExecutionPlan` (executor choice,
+rounds, staleness, unrolling, checkpoint cadence — validated at plan
+construction) and returning a uniform
+:class:`~repro.core.plan.ExecutionReport` (state, trace, telemetry,
+resumable carry).  Under it, four execution paths share one traced round
+body:
 
 * :meth:`StradsEngine.run` — the host loop: one jitted round per
   dispatch, a host↔device sync every round, arbitrary Python callbacks
@@ -49,6 +55,7 @@ executor).
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Any, Callable, Optional
 
@@ -58,6 +65,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .compat import make_mesh, shard_map
 from .kvstore import KVStore, store_from_tree
+from .plan import ExecutionPlan, ExecutionReport
 from .primitives import RoundResult, StradsApp, StradsAppBase, tree_psum
 
 DATA_AXIS = "data"
@@ -65,6 +73,18 @@ DATA_AXIS = "data"
 
 def _replicate_spec(tree: Any) -> Any:
     return jax.tree.map(lambda _: P(), tree)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EngineCarry:
+    """Resumable carry of the loop/scanned executors: PRNG stream, next
+    round index, and (pipelined only) the in-flight prefetched schedule.
+    The SSP twin (with vector clocks) is :class:`repro.ps.ssp.SSPCarry`;
+    both round-trip through ``checkpoint/npz``."""
+    rng: jax.Array
+    t: jax.Array                  # int32: next round index
+    sched: Any = None             # depth-1 prefetched schedule (else None)
 
 
 class StradsEngine:
@@ -157,13 +177,21 @@ class StradsEngine:
         residual seed ``y``)."""
         return self.place_state(self.app.init_state(rng, **app_kwargs))
 
+    def app_roles(self) -> dict:
+        """The app's declarative VarSpec role map (``var_roles()``; see
+        :class:`~repro.core.kvstore.VarSpec` — e.g. ``"priority"`` leaves
+        the SSP window scheduler masks for in-flight exclusion)."""
+        fn = getattr(self.app, "var_roles", None)
+        return dict(fn()) if callable(fn) else {}
+
     def place_state(self, state):
         """Place a state pytree via :class:`~repro.core.kvstore.KVStore`
         — the single source of variable placement and byte accounting
         (``self.kvstore`` afterwards answers Fig-3-style questions like
         ``bytes_per_device()``, and ``repro.ps`` derives the server-/
         worker-resident split from the same VarSpecs)."""
-        self.kvstore = store_from_tree(self.mesh, state, self._sspec(state))
+        self.kvstore = store_from_tree(self.mesh, state, self._sspec(state),
+                                       roles=self.app_roles())
         return self.kvstore.place_tree(state)
 
     def shard_data(self, data):
@@ -181,21 +209,24 @@ class StradsEngine:
         """Drive ``num_rounds`` BSP rounds (host loop; each round jitted).
 
         ``callback(t, state, result)`` runs between rounds (metrics, early
-        stop by returning True)."""
-        for t in range(num_rounds):
-            rng, sub = jax.random.split(rng)
-            out = self.run_round(state, data, sub, t)
-            state = out.state
-            if callback is not None and callback(t, state, out):
-                break
-        return state
+        stop by returning True).  Zero (or negative) rounds are a no-op —
+        the zero-round escape hatch ``run_scanned`` points callers at.
+        One implementation with the plan path: this is exactly
+        ``execute(plan(executor="loop"))``."""
+        if num_rounds < 1:
+            return state
+        plan = ExecutionPlan(executor="loop", rounds=num_rounds)
+        return self._execute_span(state, data, rng, plan, num_rounds, 0,
+                                  None, None, callback).state
 
     # -- execution: scanned / pipelined --------------------------------------
 
     def run_scanned(self, state, data, rng, num_rounds: int, *,
                     pipeline_depth: int = 0,
                     collect: Optional[Callable[[Any], Any]] = None,
-                    donate: bool = True):
+                    donate: bool = True, unroll: int = 1,
+                    t0: int = 0, sched0: Any = None,
+                    return_carry: bool = False):
         """Execute ``num_rounds`` rounds as one XLA program.
 
         ``pipeline_depth=0`` reproduces :meth:`run` bit-for-bit (same PRNG
@@ -215,8 +246,19 @@ class StradsEngine:
         caller's ``state`` is consumed); pass ``donate=False`` when the
         input state must stay alive (e.g. A/B comparisons in tests).
 
-        Returns ``state`` when ``collect is None``, else
-        ``(state, trace)``.
+        ``unroll`` widens a scan step to ``unroll`` phase cycles
+        (``ExecutionPlan.phase_unroll``): the same round sequence chunked
+        ``unroll × phase_period`` rounds per step — bit-identical, fewer
+        scan iterations.
+
+        ``t0``/``sched0`` resume a previous run (pass the values from an
+        :class:`EngineCarry`; ``t0`` must be a multiple of the phase
+        period, ``sched0`` is only meaningful at depth 1 where it is the
+        prefetched in-flight schedule).  ``return_carry=True`` appends the
+        final carry to the return value.
+
+        Returns ``state`` (plus ``trace`` when collecting, plus ``carry``
+        when requested).
         """
         if pipeline_depth not in (0, 1):
             raise ValueError(f"pipeline_depth must be 0 or 1, got "
@@ -224,25 +266,39 @@ class StradsEngine:
         if num_rounds < 1:
             raise ValueError("run_scanned needs num_rounds >= 1 (use the "
                              "host loop `run` for zero-round calls)")
+        if unroll < 1:
+            raise ValueError(f"unroll must be >= 1, got {unroll}")
         period = self.phase_period
-        num_steps, tail = divmod(num_rounds, period)
+        if t0 % period:
+            raise ValueError(f"t0 must be a multiple of the phase period "
+                             f"({period}) so phases stay static; got {t0}")
+        if sched0 is not None and pipeline_depth != 1:
+            raise ValueError("sched0 only resumes the pipelined executor "
+                             "(pipeline_depth=1)")
+        L = period * unroll
+        num_steps, tail = divmod(num_rounds, L)
         if tail and pipeline_depth == 1:
             raise ValueError(
                 f"pipeline_depth=1 needs num_rounds divisible by the app's "
-                f"phase_period ({period}); got {num_rounds}")
+                f"phase_period ({period}) × unroll ({unroll}); got "
+                f"{num_rounds}")
 
         traces = []
+        sched_c = sched0
         if num_steps:
-            fn = self._get_scan_fn(num_steps, pipeline_depth,
-                                   collect, donate)
-            state, rng, ys = fn(state, data, rng)
+            fn = self._get_scan_fn(num_steps, pipeline_depth, collect,
+                                   donate, unroll, sched0 is not None)
+            args = (state, data, rng, jnp.int32(t0))
+            if sched0 is not None:
+                args += (sched0,)
+            state, rng, sched_c, ys = fn(*args)
             if collect is not None:
                 traces.append(ys)
 
-        # Remainder rounds (num_rounds % period) fall back to the host
-        # loop with fresh schedules — only reachable at depth 0.
+        # Remainder rounds (num_rounds % (period × unroll)) fall back to
+        # the host loop with fresh schedules — only reachable at depth 0.
         for k in range(tail):
-            t = num_steps * period + k
+            t = t0 + num_steps * L + k
             rng, sub = jax.random.split(rng)
             out = self.run_round(state, data, sub, t)
             state = out.state
@@ -250,25 +306,32 @@ class StradsEngine:
                 traces.append(jax.tree.map(
                     lambda x: jnp.asarray(x)[None], collect(state)))
 
-        if collect is None:
-            return state
-        trace = (jax.tree.map(lambda *xs: jnp.concatenate(xs), *traces)
-                 if len(traces) > 1 else traces[0])
-        return state, trace
+        ret = [state]
+        if collect is not None:
+            ret.append(jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                                    *traces)
+                       if len(traces) > 1 else traces[0])
+        if return_carry:
+            ret.append(EngineCarry(rng=rng, t=jnp.int32(t0 + num_rounds),
+                                   sched=sched_c))
+        return ret[0] if len(ret) == 1 else tuple(ret)
 
     def scanned_fn(self, num_rounds: int, *, pipeline_depth: int = 0,
                    collect: Optional[Callable] = None,
-                   donate: bool = True):
-        """The jitted ``(state, data, rng) → (state, rng, trace)`` multi-
-        round program, exposed for AOT ``.lower().compile()`` (the
-        production-mesh dry-run in ``launch/dryrun.py``).  ``num_rounds``
-        must be a multiple of ``phase_period``."""
-        num_steps, tail = divmod(num_rounds, self.phase_period)
+                   donate: bool = True, unroll: int = 1):
+        """The jitted ``(state, data, rng, t0) → (state, rng, sched,
+        trace)`` multi-round program, exposed for AOT
+        ``.lower().compile()`` (the production-mesh dry-run in
+        ``launch/dryrun.py``).  ``num_rounds`` must be a multiple of
+        ``phase_period × unroll``."""
+        num_steps, tail = divmod(num_rounds, self.phase_period * unroll)
         if tail or num_steps == 0:
             raise ValueError(
                 f"num_rounds must be a positive multiple of phase_period "
-                f"({self.phase_period}); got {num_rounds}")
-        return self._get_scan_fn(num_steps, pipeline_depth, collect, donate)
+                f"× unroll ({self.phase_period * unroll}); got "
+                f"{num_rounds}")
+        return self._get_scan_fn(num_steps, pipeline_depth, collect,
+                                 donate, unroll, False)
 
     # -- execution: SSP (bounded staleness — repro.ps) -----------------------
 
@@ -292,18 +355,217 @@ class StradsEngine:
         return ssp_fn(self, num_rounds, staleness=staleness,
                       collect=collect, donate=donate)
 
+    # -- execution: the unified entry point ----------------------------------
+
+    def execute(self, state, data, rng, plan: ExecutionPlan, *,
+                collect: Optional[Callable[[Any], Any]] = None,
+                callback=None, carry=None,
+                ckpt_dir: Optional[str] = None) -> ExecutionReport:
+        """Run an :class:`~repro.core.plan.ExecutionPlan` — the one entry
+        point that subsumes :meth:`run`, :meth:`run_scanned` and
+        :meth:`run_ssp` and returns a uniform
+        :class:`~repro.core.plan.ExecutionReport`.
+
+        ``collect(state) -> pytree`` is evaluated after every executed
+        round (the report's ``trace`` stacks the results).  ``callback(t,
+        state, round_result)`` is the host-loop hook and therefore
+        requires ``executor="loop"`` (return True to stop early).
+
+        ``carry`` resumes a previous report's run of the *same* plan:
+        rounds ``carry.t .. plan.rounds`` execute with the carried PRNG
+        stream/clocks/prefetched schedule, so an interrupted run matches
+        an uninterrupted one bit-for-bit (``rng`` is taken from the carry
+        and the argument is ignored).
+
+        ``ckpt_dir`` + ``plan.checkpoint_every`` chunk the run and save a
+        ``{"state", "carry"}`` checkpoint via :mod:`repro.checkpoint`
+        every ``checkpoint_every`` rounds (the cadence must tile the
+        executor's step length; each chunk reuses one compiled program).
+        """
+        if not isinstance(plan, ExecutionPlan):
+            raise TypeError(f"execute() wants an ExecutionPlan; got "
+                            f"{type(plan).__name__} (legacy executor= "
+                            f"kwargs live behind the app-level fit shims)")
+        num_workers = self.mesh.shape[DATA_AXIS]
+        if plan.workers is not None and plan.workers != num_workers:
+            raise ValueError(
+                f"plan.workers={plan.workers} but the engine mesh has "
+                f"{num_workers} '{DATA_AXIS}' shards")
+        if callback is not None and plan.executor != "loop":
+            raise ValueError("callback is a host-loop hook; it requires "
+                             f"executor='loop' (got {plan.executor!r})")
+        t_done = 0
+        if carry is not None:
+            if plan.executor == "ssp" and not hasattr(carry, "clocks"):
+                raise ValueError("resuming an ssp plan needs the SSPCarry "
+                                 "a previous ssp report returned")
+            if plan.executor in ("scan", "pipelined") \
+                    and not hasattr(carry, "sched"):
+                raise ValueError("resuming a scanned plan needs the "
+                                 "EngineCarry a previous scan/pipelined "
+                                 "report returned")
+            if plan.executor == "pipelined" and carry.sched is None:
+                raise ValueError("resuming a pipelined plan needs the "
+                                 "carried in-flight schedule (carry.sched "
+                                 "is None — was this carry produced by a "
+                                 "different executor?)")
+            t_done = int(carry.t)
+            if not 0 <= t_done < plan.rounds:
+                raise ValueError(f"carry.t={t_done} leaves no rounds of "
+                                 f"the plan's {plan.rounds} to run")
+            rng = carry.rng
+
+        if ckpt_dir and not plan.checkpoint_every:
+            raise ValueError("ckpt_dir was passed but plan.checkpoint_"
+                             "every=0 — no checkpoint would ever be "
+                             "written; set a cadence in the plan")
+        if plan.checkpoint_every and not ckpt_dir:
+            raise ValueError("plan.checkpoint_every="
+                             f"{plan.checkpoint_every} but no ckpt_dir "
+                             "was passed — the run would silently never "
+                             "checkpoint")
+        chunk = plan.checkpoint_every if ckpt_dir else 0
+        if not chunk:
+            return self._execute_span(state, data, rng, plan,
+                                      plan.rounds - t_done, t_done, carry,
+                                      collect, callback)
+        if plan.telemetry:
+            raise ValueError("telemetry summaries are per-program; combine "
+                             "plan.telemetry with checkpoint chunking by "
+                             "resuming spans manually")
+        step_len = self._step_length(plan)
+        if chunk % step_len:
+            raise ValueError(
+                f"plan.checkpoint_every={chunk} must be a multiple of the "
+                f"{plan.executor!r} executor's step length {step_len} "
+                f"(phase/window alignment), so every chunk resumes on a "
+                f"step boundary")
+        if plan.executor in ("pipelined", "ssp") and plan.rounds % step_len:
+            # fail before any chunk runs — the same plan without ckpt_dir
+            # is rejected upfront by the executor itself
+            raise ValueError(
+                f"plan.rounds={plan.rounds} must be a multiple of the "
+                f"{plan.executor!r} executor's step length {step_len}; "
+                f"the final checkpoint chunk would be unrunnable")
+        from ..checkpoint import save_checkpoint
+        stops: list = []                        # callback early-stop marker
+        cb = callback
+        if callback is not None:
+            def cb(t, s, out, _orig=callback):
+                r = _orig(t, s, out)
+                if r:
+                    stops.append(t)
+                return r
+        traces = []
+        t = t_done
+        while t < plan.rounds:
+            n = min(chunk, plan.rounds - t)
+            rep = self._execute_span(state, data, rng, plan, n, t, carry,
+                                     collect, cb)
+            state, carry = rep.state, rep.carry
+            rng = carry.rng
+            if rep.trace is not None:
+                traces.append(rep.trace)
+            t = int(carry.t)
+            save_checkpoint(ckpt_dir, t, {"state": state, "carry": carry})
+            if stops:                           # honored across chunks
+                break
+        trace = (jax.tree.map(lambda *xs: jnp.concatenate(xs), *traces)
+                 if traces else None)
+        return ExecutionReport(state=state, trace=trace, telemetry=None,
+                               carry=carry, plan=plan)
+
+    def _step_length(self, plan: ExecutionPlan) -> int:
+        """Rounds one compiled step of the plan's executor covers — the
+        alignment unit for checkpoint chunking and resume points."""
+        if plan.executor == "ssp":
+            from ..ps.ssp import rounds_per_step
+            return rounds_per_step(self, plan.staleness)
+        if plan.executor in ("scan", "pipelined"):
+            # chunks smaller than a full scan step would silently degrade
+            # to per-round host-loop tails (scan tolerates a tail, but
+            # 'each chunk reuses one compiled program' would be a lie)
+            return self.phase_period * plan.phase_unroll
+        return 1                                # loop: any round
+
+    def _execute_span(self, state, data, rng, plan: ExecutionPlan,
+                      rounds: int, t0: int, prev_carry, collect,
+                      callback) -> ExecutionReport:
+        """One contiguous span of a plan (the whole plan, or one
+        checkpoint chunk), dispatched to the executor it names."""
+        if plan.executor == "loop":
+            cfn = None
+            if collect is not None:
+                # cached so checkpoint-chunked loop runs compile it once
+                key = ("loop_collect", collect)
+                cfn = self._scan_cache.get(key)
+                if cfn is None:
+                    cfn = jax.jit(collect)
+                    self._scan_cache[key] = cfn
+            ys: list = []
+            executed = 0
+            for k in range(rounds):
+                t = t0 + k
+                rng, sub = jax.random.split(rng)
+                out = self.run_round(state, data, sub, t)
+                state = out.state
+                executed = k + 1
+                if cfn is not None:
+                    ys.append(cfn(state))
+                if callback is not None and callback(t, state, out):
+                    break
+            trace = (jax.tree.map(lambda *xs: jnp.stack(xs), *ys)
+                     if ys else None)
+            carry = EngineCarry(rng=rng, t=jnp.int32(t0 + executed))
+            return ExecutionReport(state=state, trace=trace,
+                                   carry=carry, plan=plan)
+
+        if plan.executor in ("scan", "pipelined"):
+            sched0 = getattr(prev_carry, "sched", None)
+            out = self.run_scanned(
+                state, data, rng, rounds, pipeline_depth=plan.depth,
+                collect=collect, donate=plan.donate,
+                unroll=plan.phase_unroll, t0=t0, sched0=sched0,
+                return_carry=True)
+            if collect is None:
+                state, carry = out
+                trace = None
+            else:
+                state, trace, carry = out
+            return ExecutionReport(state=state, trace=trace,
+                                   carry=carry, plan=plan)
+
+        # executor == "ssp" (plan validation admits nothing else)
+        clocks = getattr(prev_carry, "clocks", None)
+        out = self.run_ssp(
+            state, data, rng, rounds, staleness=plan.staleness,
+            collect=collect, donate=plan.donate,
+            with_telemetry=plan.telemetry, t0=t0, clocks=clocks,
+            return_carry=True)
+        parts = list(out if isinstance(out, tuple) else (out,))
+        state = parts.pop(0)
+        trace = parts.pop(0) if collect is not None else None
+        telem = parts.pop(0) if plan.telemetry else None
+        carry = parts.pop(0)
+        return ExecutionReport(state=state, trace=trace, telemetry=telem,
+                               carry=carry, plan=plan)
+
     def _get_scan_fn(self, num_steps: int, depth: int,
-                     collect: Optional[Callable], donate: bool):
-        key = (num_steps, depth, collect, donate)
+                     collect: Optional[Callable], donate: bool,
+                     unroll: int = 1, with_sched0: bool = False):
+        key = (num_steps, depth, collect, donate, unroll, with_sched0)
         fn = self._scan_cache.get(key)
         if fn is None:
-            fn = self._build_scan(num_steps, depth, collect, donate)
+            fn = self._build_scan(num_steps, depth, collect, donate,
+                                  unroll, with_sched0)
             self._scan_cache[key] = fn
         return fn
 
     def _build_scan(self, num_steps: int, depth: int,
-                    collect: Optional[Callable], donate: bool):
+                    collect: Optional[Callable], donate: bool,
+                    unroll: int, with_sched0: bool):
         period = self.phase_period
+        L = period * unroll           # rounds per scan step
 
         def one_round(state, data, rng, t, phase, ys):
             # Depth-0 inner round: fresh schedule, then update — the exact
@@ -314,54 +576,56 @@ class StradsEngine:
                 ys.append(collect(state))
             return state
 
-        def scanned(state, data, rng):
+        def scanned(state, data, rng, t0, *sched0):
             if depth == 0:
                 def step(carry, _):
-                    state, rng, t0 = carry
+                    state, rng, tc = carry
                     ys: list = []
-                    for i in range(period):
+                    for i in range(L):
                         rng, sub = jax.random.split(rng)
-                        state = one_round(state, data, sub, t0 + i, i, ys)
-                    return ((state, rng, t0 + period),
+                        state = one_round(state, data, sub, tc + i,
+                                          i % period, ys)
+                    return ((state, rng, tc + L),
                             _stack_rounds(ys) if collect else None)
 
                 (state, rng, _), ys = jax.lax.scan(
-                    step, (state, rng, jnp.int32(0)), None,
-                    length=num_steps)
+                    step, (state, rng, t0), None, length=num_steps)
+                sched = None
             else:
                 # Pipelined: carry the next round's schedule.  At the top
                 # of step t we compute sched_{t+1} from the *pre-update*
                 # state — it is independent of round t's push/pull, so the
                 # two overlap; the executed schedule is one round stale.
-                rng, sub = jax.random.split(rng)
-                sched = self._make_schedule(state, data, sub,
-                                            jnp.int32(0), 0)
+                if with_sched0:
+                    sched = sched0[0]       # resumed in-flight schedule
+                else:
+                    rng, sub = jax.random.split(rng)
+                    sched = self._make_schedule(state, data, sub, t0, 0)
 
                 def step(carry, _):
-                    state, rng, t0, sched = carry
+                    state, rng, tc, sched = carry
                     ys: list = []
-                    for i in range(period):
-                        t = t0 + i
+                    for i in range(L):
+                        t = tc + i
                         rng, sub = jax.random.split(rng)
                         sched_next = self._make_schedule(
                             state, data, sub, t + 1, (i + 1) % period)
-                        state = self._apply(state, data, sched, i)
+                        state = self._apply(state, data, sched, i % period)
                         sched = sched_next
                         if collect is not None:
                             ys.append(collect(state))
-                    return ((state, rng, t0 + period, sched),
+                    return ((state, rng, tc + L, sched),
                             _stack_rounds(ys) if collect else None)
 
-                (state, rng, _, _), ys = jax.lax.scan(
-                    step, (state, rng, jnp.int32(0), sched), None,
-                    length=num_steps)
+                (state, rng, _, sched), ys = jax.lax.scan(
+                    step, (state, rng, t0, sched), None, length=num_steps)
 
             if collect is not None:
-                # (num_steps, period, ...) → (num_rounds, ...)
+                # (num_steps, L, ...) → (num_rounds, ...)
                 ys = jax.tree.map(
-                    lambda x: x.reshape((num_steps * period,)
-                                        + x.shape[2:]), ys)
-            return state, rng, ys
+                    lambda x: x.reshape((num_steps * L,) + x.shape[2:]),
+                    ys)
+            return state, rng, sched, ys
 
         return jax.jit(scanned, donate_argnums=(0,) if donate else ())
 

@@ -11,7 +11,7 @@ the KV store: named variables, their partition specs, byte accounting
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Mapping
+from typing import Any, Dict, Mapping, Optional
 
 import jax
 import numpy as np
@@ -32,10 +32,24 @@ def is_replicated(spec: P) -> bool:
 
 @dataclasses.dataclass
 class VarSpec:
-    """Declared model variable: shape/dtype + how it shards."""
+    """Declared model variable: shape/dtype + how it shards + its role.
+
+    ``role`` is a declarative tag the runtime derives behavior from
+    (instead of per-app hook overrides — the v2 primitive protocol):
+
+    * ``"model"`` (default) — an ordinary model variable; placement alone
+      decides how executors treat it (replicated ⇒ server-resident,
+      sharded ⇒ worker-resident).
+    * ``"priority"`` — a scheduling-priority table indexed by variable id
+      (e.g. Lasso's Δβ history).  The SSP window scheduler excludes
+      in-flight candidates by zeroing their entries in every
+      ``"priority"`` leaf of the *scheduling view* (the STRADS in-flight
+      exclusion rule, generalized to ≤ s-stale windows).
+    """
     shape: tuple
     dtype: Any
     spec: P = P()          # replicated by default (data-parallel style)
+    role: str = "model"    # "model" | "priority"
 
     def nbytes(self) -> int:
         return int(np.prod(self.shape)) * np.dtype(self.dtype).itemsize
@@ -113,12 +127,16 @@ class KVStore:
 # Pytree adapters — declare a store from a live state template
 # ---------------------------------------------------------------------------
 
-def specs_from_tree(tree: Any, spec_tree: Any) -> Dict[str, VarSpec]:
+def specs_from_tree(tree: Any, spec_tree: Any,
+                    roles: Optional[Mapping[str, str]] = None
+                    ) -> Dict[str, VarSpec]:
     """VarSpec per leaf of a state pytree (names are '/'-joined paths).
 
     ``spec_tree`` is the matching PartitionSpec pytree (PartitionSpecs are
     leaves), exactly what :class:`~repro.core.engine.StradsEngine` takes as
-    ``state_specs``."""
+    ``state_specs``.  ``roles`` maps leaf paths to VarSpec roles (apps
+    declare them via ``var_roles()``; unknown paths raise)."""
+    roles = dict(roles or {})
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     sflat = jax.tree_util.tree_flatten_with_path(
         spec_tree, is_leaf=lambda x: isinstance(x, P))[0]
@@ -132,10 +150,124 @@ def specs_from_tree(tree: Any, spec_tree: Any) -> Dict[str, VarSpec]:
             raise ValueError(f"state/spec tree mismatch: leaf {name!r} "
                              f"paired with spec {path_name(spath)!r}")
         out[name] = VarSpec(tuple(leaf.shape),
-                            jax.numpy.asarray(leaf).dtype, spec)
+                            jax.numpy.asarray(leaf).dtype, spec,
+                            role=roles.pop(name, "model"))
+    if roles:
+        raise ValueError(f"var_roles names unknown state leaves: "
+                         f"{sorted(roles)}")
     return out
 
 
-def store_from_tree(mesh: Mesh, tree: Any, spec_tree: Any) -> KVStore:
+def store_from_tree(mesh: Mesh, tree: Any, spec_tree: Any,
+                    roles: Optional[Mapping[str, str]] = None) -> KVStore:
     """A KVStore whose variables mirror a live state pytree."""
-    return KVStore(mesh, specs_from_tree(tree, spec_tree))
+    return KVStore(mesh, specs_from_tree(tree, spec_tree, roles=roles))
+
+
+# ---------------------------------------------------------------------------
+# VarTable — the v2 push/pull write contract, derived from placement
+# ---------------------------------------------------------------------------
+
+class VarTable:
+    """Placement-aware view of the state for the v2 primitive protocol.
+
+    The protocol (documented in :mod:`repro.core.primitives`): ``push``
+    returns ``(z, local)``; any ``local`` leaf whose '/'-joined key path
+    names a **worker-resident** state leaf (non-replicated VarSpec) *is*
+    the committed new value of that leaf — the commit-through set.
+    Executors that defer cross-worker aggregation (SSP) commit those
+    leaves immediately every round (the read-my-writes guarantee) and
+    buffer only the remaining ``local`` leaves until the flush, where the
+    app's own ``pull`` is replayed with ``local`` reconstructed
+    (commit-through entries read back from the live state, deferred
+    entries from the buffer).
+
+    This class derives all of that — plus the in-flight exclusion over
+    ``role="priority"`` leaves — from the :class:`VarSpec` declarations,
+    replacing the four per-app ``ssp_*`` hook overrides of the v1
+    protocol.
+    """
+
+    def __init__(self, store: KVStore):
+        self.store = store
+        self.worker_resident = frozenset(
+            n for n, vs in store.specs.items()
+            if not is_replicated(vs.spec))
+        self.priority_names = frozenset(
+            n for n, vs in store.specs.items() if vs.role == "priority")
+        # phase -> (local treedef, leaf paths, commit-through name set),
+        # captured at defer time so flush-time rebuilds are structural.
+        self._local_forms: Dict[int, tuple] = {}
+
+    # -- classification ------------------------------------------------------
+
+    def _local_form(self, local: Any, phase: int):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(local)
+        names = [path_name(p) for p, _ in flat]
+        commit = frozenset(n for n in names if n in self.worker_resident)
+        form = (treedef, names, commit)
+        prev = self._local_forms.setdefault(phase, form)
+        if prev[1] != names:
+            raise ValueError(
+                f"push returned a different `local` structure for phase "
+                f"{phase}: {prev[1]} vs {names}")
+        return form
+
+    def commit_names(self, local: Any, phase: int):
+        """The commit-through subset of a ``local`` pytree's leaf paths."""
+        return self._local_form(local, phase)[2]
+
+    # -- the derived commit/defer/rebuild triple ----------------------------
+
+    def commit_local(self, state: Any, local: Any, phase: int) -> Any:
+        """Write the commit-through leaves into the state (runs every
+        round, inside the worker's shard_map region)."""
+        _, names, commit = self._local_form(local, phase)
+        if not commit:
+            return state
+        vals = dict(zip(names, jax.tree_util.tree_leaves(local)))
+        return jax.tree_util.tree_map_with_path(
+            lambda p, x: vals[path_name(p)]
+            if path_name(p) in commit else x, state)
+
+    def defer_local(self, local: Any, phase: int) -> Dict[str, Any]:
+        """The flat ``{path: leaf}`` dict of non-commit-through leaves —
+        the only part of ``local`` the flush still needs to buffer."""
+        _, names, commit = self._local_form(local, phase)
+        return {n: leaf for n, leaf in
+                zip(names, jax.tree_util.tree_leaves(local))
+                if n not in commit}
+
+    def rebuild_local(self, state: Any, deferred: Dict[str, Any],
+                      phase: int) -> Any:
+        """Reconstruct the round's ``local`` pytree at flush time:
+        commit-through entries read back from the live state (their
+        committed values), deferred entries from the buffer."""
+        if phase not in self._local_forms:
+            raise ValueError(f"no local structure recorded for phase "
+                             f"{phase} (defer_local not called)")
+        treedef, names, commit = self._local_forms[phase]
+        svals = {path_name(p): leaf for p, leaf in
+                 jax.tree_util.tree_flatten_with_path(state)[0]}
+        leaves = [svals[n] if n in commit else deferred[n] for n in names]
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    # -- in-flight exclusion (role="priority") -------------------------------
+
+    def mark_scheduled(self, view: Any, candidates: Any) -> Any:
+        """Exclude in-flight candidates from later schedule proposals in
+        the same SSP window: zero their entries in every
+        ``role="priority"`` leaf of the scheduling view (pending updates
+        are invisible until the flush, so rescheduling them would
+        compound the same stale read).  ``candidates`` must be an integer
+        index array when any priority leaf is declared."""
+        if not self.priority_names or candidates is None:
+            return view
+        idx = jax.numpy.asarray(candidates)
+        if not jax.numpy.issubdtype(idx.dtype, jax.numpy.integer):
+            raise TypeError(
+                f"role='priority' in-flight exclusion needs integer "
+                f"candidate indices; got dtype {idx.dtype}")
+        return jax.tree_util.tree_map_with_path(
+            lambda p, x: x.at[idx].set(jax.numpy.zeros((), x.dtype))
+            if path_name(p) in self.priority_names else x, view)

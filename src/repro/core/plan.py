@@ -1,0 +1,191 @@
+"""The declarative execution surface: :class:`ExecutionPlan`.
+
+The paper's pitch is a *small, fixed* primitive set (``schedule`` /
+``push`` / ``pull`` / ``sync``) that applications program against once
+while the runtime freely swaps partitioning and update scheduling.  After
+the executor zoo grew (host loop, scanned, pipelined, SSP) the call
+surface no longer matched that pitch: every entry point had its own
+kwargs, and validation ("staleness needs ssp", "pipeline_depth needs
+num_rounds divisible by the phase period") was scattered across call
+sites.
+
+An :class:`ExecutionPlan` is the single declarative answer:
+
+* **frozen + hashable** — a plan is a value, usable as a jit/cache key;
+* **validated at construction** — every invalid executor/kwarg
+  combination raises here, at plan-build time, never at trace time, and
+  the error text lives in exactly one place;
+* **JSON-round-trippable** — ``to_json``/``from_json`` are exact
+  (defaults included), so plans live in checked-in files
+  (``examples/plans/``), benchmark records (``BENCH_*.json``) and CLI
+  flags (``launch/train.py --plan``, ``launch/dryrun.py --plan``).
+
+One engine entry point consumes it — ``StradsEngine.execute(state, data,
+rng, plan)`` — and returns a uniform :class:`ExecutionReport` (final
+state, per-round trace, SSP telemetry, resumable carry) regardless of
+which executor ran.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Optional
+
+EXECUTORS = ("loop", "scan", "pipelined", "ssp")
+
+# The one place the executor-name error is worded (apps/_exec.py used to
+# carry a drifted copy that claimed 'loop' was acceptable but raised on
+# it — see ISSUE 3).
+_EXECUTOR_MSG = ("executor must be 'loop', 'scan', 'pipelined' or 'ssp'; "
+                 "got {!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Everything the engine needs to know about *how* to run R rounds.
+
+    Fields
+    ------
+    executor:        ``"loop"`` (host loop, per-round dispatch),
+                     ``"scan"`` (one ``lax.scan`` XLA program, BSP),
+                     ``"pipelined"`` (scan + one-round-stale schedule
+                     prefetch), ``"ssp"`` (bounded staleness, ``repro.ps``).
+    rounds:          total BSP/SSP rounds the plan executes.
+    staleness:       SSP bound ``s`` (reads ≤ s rounds stale); > 0 only
+                     valid with ``executor="ssp"``.
+    pipeline_depth:  explicit schedule-prefetch depth.  ``None`` derives
+                     it from the executor (scan→0, pipelined→1); a
+                     nonzero value requires ``executor="pipelined"``.
+    phase_unroll:    rounds unrolled per scan step, as a multiple of the
+                     app's ``phase_period`` (1 = one phase cycle per scan
+                     step — the default and the bit-identical baseline).
+                     Only meaningful for the scanned executors.
+    telemetry:       return staleness telemetry (SSP only).
+    checkpoint_every: checkpoint cadence in rounds for
+                     ``StradsEngine.execute(..., ckpt_dir=...)`` (0 = no
+                     checkpointing); must tile the executor's step length.
+    collect_every:   trace cadence in rounds for the app-level ``fit``
+                     adapters (0 = no trace).  ``execute`` itself collects
+                     per round whenever a collect fn is passed; this field
+                     records the decimation cadence consumers apply.
+    donate:          donate the input state buffers to the XLA program.
+    workers:         expected ``data``-mesh width (placement override).
+                     ``None`` = whatever mesh the engine was built with;
+                     a value is validated against the engine's mesh and
+                     used by drivers (``dryrun --plan``) to *build* the
+                     mesh.
+    """
+
+    executor: str = "scan"
+    rounds: int = 1
+    staleness: int = 0
+    pipeline_depth: Optional[int] = None
+    phase_unroll: int = 1
+    telemetry: bool = False
+    checkpoint_every: int = 0
+    collect_every: int = 0
+    donate: bool = True
+    workers: Optional[int] = None
+
+    def __post_init__(self):
+        if self.executor not in EXECUTORS:
+            raise ValueError(_EXECUTOR_MSG.format(self.executor))
+        if not isinstance(self.rounds, int) or self.rounds < 1:
+            raise ValueError(f"rounds must be a positive int; got "
+                             f"{self.rounds!r}")
+        if not isinstance(self.staleness, int) or self.staleness < 0:
+            raise ValueError(f"staleness must be an int >= 0; got "
+                             f"{self.staleness!r}")
+        if self.staleness > 0 and self.executor != "ssp":
+            raise ValueError(
+                f"staleness={self.staleness} requires executor='ssp'; got "
+                f"executor={self.executor!r}")
+        if self.pipeline_depth is not None:
+            if self.pipeline_depth not in (0, 1):
+                raise ValueError(f"pipeline_depth must be 0 or 1, got "
+                                 f"{self.pipeline_depth}")
+            if self.pipeline_depth > 0 and self.executor != "pipelined":
+                raise ValueError(
+                    f"pipeline_depth={self.pipeline_depth} requires "
+                    f"executor='pipelined'; got {self.executor!r}")
+            if self.pipeline_depth == 0 and self.executor == "pipelined":
+                raise ValueError("executor='pipelined' means "
+                                 "pipeline_depth=1; leave it None or pass 1")
+        if not isinstance(self.phase_unroll, int) or self.phase_unroll < 1:
+            raise ValueError(f"phase_unroll must be a positive int; got "
+                             f"{self.phase_unroll!r}")
+        if self.phase_unroll > 1 and self.executor not in ("scan",
+                                                           "pipelined"):
+            raise ValueError(
+                f"phase_unroll={self.phase_unroll} only applies to the "
+                f"scanned executors; got executor={self.executor!r}")
+        if self.telemetry and self.executor != "ssp":
+            raise ValueError("telemetry=True requires executor='ssp' "
+                             f"(got {self.executor!r})")
+        for field in ("checkpoint_every", "collect_every"):
+            v = getattr(self, field)
+            if not isinstance(v, int) or v < 0:
+                raise ValueError(f"{field} must be an int >= 0; got {v!r}")
+        if not isinstance(self.donate, bool):
+            raise ValueError(f"donate must be a bool; got {self.donate!r}")
+        if self.workers is not None and (not isinstance(self.workers, int)
+                                         or self.workers < 1):
+            raise ValueError(f"workers must be None or a positive int; "
+                             f"got {self.workers!r}")
+
+    # -- derived views -------------------------------------------------------
+
+    @property
+    def depth(self) -> int:
+        """The schedule-prefetch depth this plan's executor runs at."""
+        if self.pipeline_depth is not None:
+            return self.pipeline_depth
+        return 1 if self.executor == "pipelined" else 0
+
+    # -- serialization -------------------------------------------------------
+
+    def to_json(self) -> dict:
+        """A plain JSON-safe dict (every field, defaults included) —
+        ``from_json(to_json(p)) == p`` exactly."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, obj) -> "ExecutionPlan":
+        """Rebuild from ``to_json`` output, a JSON string, or a partial
+        dict (missing fields take their defaults; unknown keys raise)."""
+        if isinstance(obj, (str, bytes)):
+            obj = json.loads(obj)
+        if not isinstance(obj, dict):
+            raise TypeError(f"ExecutionPlan.from_json wants a dict or JSON "
+                            f"string; got {type(obj).__name__}")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(obj) - known
+        if unknown:
+            raise ValueError(f"unknown ExecutionPlan field(s): "
+                             f"{sorted(unknown)}")
+        return cls(**obj)
+
+
+@dataclasses.dataclass
+class ExecutionReport:
+    """Uniform result of ``StradsEngine.execute`` — every executor fills
+    the same four slots (unused ones stay ``None``).
+
+    state:      final model state pytree.
+    trace:      stacked per-round ``collect`` outputs (leading axis =
+                rounds executed this call), or ``None`` without a collect
+                fn.
+    telemetry:  :class:`repro.ps.telemetry.SSPTelemetry` when the plan
+                asked for it (SSP only).
+    carry:      resumable executor carry — :class:`repro.ps.ssp.SSPCarry`
+                for SSP, :class:`repro.core.engine.EngineCarry` for the
+                loop/scanned executors.  Round-trips through
+                ``checkpoint/npz``; pass it back to ``execute`` to
+                continue the same plan bit-exactly.
+    plan:       the plan that produced this report.
+    """
+    state: Any
+    trace: Any = None
+    telemetry: Any = None
+    carry: Any = None
+    plan: Optional[ExecutionPlan] = None

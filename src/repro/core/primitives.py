@@ -35,6 +35,40 @@ schedules whose communication pattern changes per round (LDA's rotation
 Apps declare the cycle length as ``phase_period`` (``static_phase(t)`` must
 equal ``t % phase_period``): the scanned executor unrolls one full phase
 cycle per ``lax.scan`` step so every phase stays static inside the trace.
+
+The v2 write contract (VarTable-mediated push/pull)
+---------------------------------------------------
+
+Apps implement exactly the primitives above, **once**, and get every
+executor — including bounded staleness — without SSP-specific hooks.  The
+executors derive deferred-commit behavior from the app's *placement
+declarations* (``state_specs()`` → :class:`~repro.core.kvstore.VarSpec`,
+mediated by :class:`~repro.core.kvstore.VarTable`):
+
+* a ``local`` leaf whose '/'-joined key path names a **worker-resident**
+  state leaf (non-replicated VarSpec) *is* the committed new value of
+  that leaf.  ``pull`` must treat such leaves as write-through: it writes
+  them back verbatim (``{"z": local["z"], ...}``) and never assumes the
+  pre-push state value survives.  Under BSP this is invisible; under SSP
+  the executor commits those leaves **every round** (a worker always
+  reads its own writes fresh — the SSP read-my-writes guarantee) and
+  buffers only the *remaining* ``local`` leaves until the flush, where
+  ``pull`` is replayed per deferred round with ``local`` reconstructed
+  (commit-through entries read back from the live state, the rest from
+  the buffer) and ``z`` freshly aggregated in ONE batched collective.
+* server-resident writes (replicated VarSpecs) always flow through
+  ``pull``; under SSP they commit at the flush, up to ``s`` rounds late.
+* apps with a dynamic scheduler declare the priority table via
+  ``var_roles() -> {leaf_path: "priority"}``; the SSP window scheduler
+  then excludes in-flight candidates by zeroing those entries in later
+  proposals' scheduling views (the STRADS in-flight exclusion rule —
+  no per-app override needed).
+
+The v1 protocol's four ``ssp_commit_local`` / ``ssp_defer_local`` /
+``ssp_commit_shared`` / ``ssp_mark_scheduled`` hook overrides are
+deprecated: :mod:`repro.ps.ssp` still honors them (with a
+``DeprecationWarning``) when an app defines any, but the built-in apps
+rely purely on the derived behavior.
 """
 from __future__ import annotations
 
@@ -84,12 +118,25 @@ class StradsAppBase:
     extra shard_map pass entirely).  Apps with phase-dependent rounds set
     ``phase_period`` to the cycle length and keep ``static_phase(t) ==
     t % phase_period``.
+
+    SSP behavior is **derived, not overridden** (the v2 write contract —
+    see the module docstring): commit-through and deferral follow from the
+    placement declared in ``state_specs()``; the only extra declaration an
+    app can make is ``var_roles()``, marking scheduling-priority leaves
+    for the SSP in-flight exclusion.
     """
 
     phase_period: int = 1
 
     def static_phase(self, t: int) -> int:
         return 0
+
+    def var_roles(self) -> dict:
+        """Leaf-path → :class:`~repro.core.kvstore.VarSpec` role
+        declarations beyond placement (currently only ``"priority"``:
+        scheduling-priority tables the SSP window scheduler masks for
+        in-flight exclusion).  Default: none."""
+        return {}
 
     def propose(self, state, rng, t, phase):
         return None
@@ -105,47 +152,6 @@ class StradsAppBase:
 
     def pull(self, state, sched, z, local, data, phase):
         raise NotImplementedError
-
-    # -- SSP (bounded-staleness) hooks — used by repro.ps.ssp ---------------
-    # Under SSP the cross-worker aggregation of ``z`` is deferred: pushes
-    # buffer their partials and a *flush* commits up to s+1 rounds at once.
-    # The default hooks make any app SSP-runnable with fully deferred
-    # commits (at staleness 0 they reduce exactly to ``pull``); apps whose
-    # push mutates worker-local state (e.g. LDA's Gibbs tables) override
-    # ``ssp_commit_local`` so their own writes stay immediately visible —
-    # the SSP guarantee that a worker never reads its own updates stale.
-
-    def ssp_commit_local(self, state, sched, local, data, phase):
-        """Commit the worker-local part of a round immediately (called
-        every round, before any cross-worker aggregation exists).  Must
-        only modify worker-local (sharded) leaves.  Default: nothing —
-        the whole commit waits for the flush."""
-        return state
-
-    def ssp_mark_scheduled(self, view, candidates, phase):
-        """In-flight exclusion (the STRADS scheduler rule, extended to the
-        SSP window): after round k's proposal is drawn, transform the
-        *scheduling view* so later proposals in the same window avoid the
-        variables already in flight — their pending updates are invisible
-        until the flush, so rescheduling them would compound the same
-        stale read up to s times.  Only the window's later schedule
-        computations see the returned view; pushes and commits do not.
-        Default: no exclusion (apps with disjoint-by-construction
-        schedules, e.g. rotation or phase cycling, need none)."""
-        return view
-
-    def ssp_defer_local(self, local, phase):
-        """The subset of ``local`` the flush-time commit still needs; it
-        is buffered per round until the flush.  Override to shrink the
-        pending-update buffer when ``ssp_commit_local`` already consumed
-        most of ``local``.  Default: keep everything."""
-        return local
-
-    def ssp_commit_shared(self, state, sched, z, local, data, phase):
-        """Deferred commit at the flush, with the aggregated ``z`` and
-        whatever ``ssp_defer_local`` kept.  Default: the full ``pull``
-        (correct whenever ``ssp_commit_local`` is the no-op default)."""
-        return self.pull(state, sched, z, local, data, phase)
 
 
 @jax.tree_util.register_dataclass

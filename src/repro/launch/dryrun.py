@@ -24,6 +24,14 @@ collectives) instead of the BSP scan:
     PYTHONPATH=src python -m repro.launch.dryrun --engine lda \
         --workers 16 --rounds 16 --staleness 2
 
+``--plan plan.json`` (with ``--engine``) AOT-lowers a declarative
+:class:`repro.core.ExecutionPlan` instead of the per-flag form — the
+plan's executor/rounds/staleness/workers drive the lowering and the plan
+dict is recorded in the result JSON:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --engine lasso \
+        --plan examples/plans/ssp_s2.json
+
 Results land in ``benchmarks/results/dryrun/<arch>__<shape>__<mesh>[__tag]
 .json`` (existing files are skipped unless --force), which
 ``benchmarks/roofline.py`` renders into EXPERIMENTS.md §Dry-run/§Roofline.
@@ -180,20 +188,20 @@ def _build_engine(engine: str, workers: int, mesh):
 
 
 def engine_rounds(engine: str, workers: int, rounds: int,
-                  staleness) -> int:
+                  staleness, unroll: int = 1) -> int:
     """Rounds actually lowered: the SSP program needs a whole number of
-    lcm(staleness+1, phase_period) steps, so round up (the result names
-    the artifact, keeping the skip-cache key honest)."""
-    if staleness is None:
-        return rounds
+    lcm(staleness+1, phase_period) steps, the scanned program a whole
+    number of phase_period × unroll steps — round up either way (the
+    result names the artifact, keeping the skip-cache key honest)."""
     import math
     period = workers if engine == "lda" else {"lasso": 1, "mf": 2}[engine]
-    L = math.lcm(staleness + 1, period)
+    L = (period * unroll if staleness is None
+         else math.lcm(staleness + 1, period))
     return -(-rounds // L) * L
 
 
 def run_engine(engine: str, workers: int, rounds: int, depth: int,
-               staleness=None) -> dict:
+               staleness=None, unroll: int = 1) -> dict:
     """Lower + compile the scanned (or, with ``staleness``, the SSP)
     STRADS executor on a ``workers``-wide data mesh (a slice of the
     forced-512 topology).  ``rounds`` must already be step-aligned
@@ -206,15 +214,17 @@ def run_engine(engine: str, workers: int, rounds: int, depth: int,
 
     out = {"engine": engine, "workers": workers, "rounds": rounds,
            "pipeline_depth": depth, **meta}
+    if unroll != 1:
+        out["phase_unroll"] = unroll
+    import jax.numpy as jnp
     t0 = time.time()
     if staleness is None:
-        fn = eng.scanned_fn(rounds, pipeline_depth=depth)
-        lowered = fn.lower(state, data, jax.random.key(1))
+        fn = eng.scanned_fn(rounds, pipeline_depth=depth, unroll=unroll)
+        lowered = fn.lower(state, data, jax.random.key(1), jnp.int32(0))
     else:
         from .. import ps
         out["staleness"] = staleness
         fn = eng.ssp_fn(rounds, staleness=staleness)
-        import jax.numpy as jnp
         lowered = fn.lower(state, data, jax.random.key(1), jnp.int32(0),
                            ps.init_clocks(workers))
     out["lower_s"] = round(time.time() - t0, 2)
@@ -261,28 +271,55 @@ def main():
     ap.add_argument("--staleness", type=int, default=None,
                     help="with --engine: lower the bounded-staleness SSP "
                          "executor (repro.ps) instead of the BSP scan")
+    ap.add_argument("--plan", default="",
+                    help="with --engine: an ExecutionPlan JSON file; its "
+                         "executor/rounds/staleness/workers drive the "
+                         "lowering (overrides the per-flag form)")
     args = ap.parse_args()
+    if args.plan and not args.engine:
+        ap.error("--plan requires --engine (plans drive the STRADS "
+                 "executor lowering, not the arch × shape specs)")
 
     os.makedirs(RESULTS_DIR, exist_ok=True)
 
     if args.engine:
         os.makedirs(ENGINE_RESULTS_DIR, exist_ok=True)
-        variant = (f"s{args.staleness}" if args.staleness is not None
-                   else f"d{args.pipeline_depth}")
-        rounds = engine_rounds(args.engine, args.workers, args.rounds,
-                               args.staleness)
-        if rounds != args.rounds:
-            print(f"[note] rounds {args.rounds} → {rounds} "
-                  f"(whole SSP steps)")
-        name = (f"strads-{args.engine}__U{args.workers}"
+        plan = None
+        workers, rounds_req = args.workers, args.rounds
+        depth, staleness, unroll = args.pipeline_depth, args.staleness, 1
+        if args.plan:
+            from ..core import ExecutionPlan
+            with open(args.plan) as f:
+                plan = ExecutionPlan.from_json(f.read())
+            if plan.executor == "loop":
+                raise SystemExit(
+                    "a 'loop' plan is a per-round host loop — it has no "
+                    "single-program lowering; use scan/pipelined/ssp")
+            workers = plan.workers or args.workers
+            rounds_req, depth = plan.rounds, plan.depth
+            staleness = plan.staleness if plan.executor == "ssp" else None
+            unroll = plan.phase_unroll
+        variant = (f"s{staleness}" if staleness is not None
+                   else f"d{depth}")
+        rounds = engine_rounds(args.engine, workers, rounds_req, staleness,
+                               unroll)
+        if rounds != rounds_req:
+            print(f"[note] rounds {rounds_req} → {rounds} "
+                  f"(whole executor steps)")
+        name = (f"strads-{args.engine}__U{workers}"
                 f"__R{rounds}__{variant}")
         path = os.path.join(ENGINE_RESULTS_DIR, name + ".json")
         if os.path.exists(path) and not args.force:
             print(f"[skip-cached] {name}")
             return
         print(f"[dryrun] {name} ...", flush=True)
-        res = run_engine(args.engine, args.workers, rounds,
-                         args.pipeline_depth, args.staleness)
+        res = run_engine(args.engine, workers, rounds, depth, staleness,
+                         unroll=unroll)
+        if plan is not None:
+            # record what actually ran: engine_rounds may have aligned
+            # the round count to whole SSP steps
+            import dataclasses
+            res["plan"] = dataclasses.replace(plan, rounds=rounds).to_json()
         with open(path, "w") as f:
             json.dump(res, f, indent=1)
         print(f"  lower {res['lower_s']}s compile {res['compile_s']}s"

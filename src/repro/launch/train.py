@@ -18,6 +18,11 @@ steps instead of per step.
 SSP-style stale cache: priorities are re-read and the schedule recomputed
 only every s+1 steps (the trainer twin of ``StradsEngine.run_ssp``).
 
+``--plan plan.json`` drives the same knobs declaratively from an
+:class:`repro.core.ExecutionPlan` (rounds → steps, ``phase_unroll`` →
+scan chunk, ``staleness``, ``checkpoint_every``), so one checked-in plan
+file reproduces a run shape exactly — including across ``--resume``.
+
 Checkpoints written via ``--ckpt-dir`` hold the *full* train state
 (params, optimizer moments, step, and in strads mode the scheduler
 priority/rng), so ``--resume`` continues bit-exactly: a resumed run
@@ -69,7 +74,35 @@ def main(argv=None):
                          "--ckpt-dir (bit-exact: full state is saved)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan", default="",
+                    help="ExecutionPlan JSON driving the run shape: "
+                         "rounds→steps, phase_unroll→scan-steps (scanned "
+                         "executors), staleness→--staleness (implies "
+                         "--strads), checkpoint_every→--ckpt-every; "
+                         "overrides those flags")
     args = ap.parse_args(argv)
+
+    if args.plan:
+        from ..core import ExecutionPlan
+        with open(args.plan) as f:
+            plan = ExecutionPlan.from_json(f.read())
+        unsupported = [name for name, v in
+                       (("telemetry", plan.telemetry),
+                        ("collect_every", plan.collect_every),
+                        ("workers", plan.workers)) if v]
+        if unsupported:
+            ap.error(f"--plan fields the trainer has no surface for "
+                     f"(they would be silently dropped): {unsupported}")
+        args.steps = plan.rounds
+        args.scan_steps = (plan.phase_unroll
+                           if plan.executor in ("scan", "pipelined")
+                           else 1)
+        args.staleness = plan.staleness
+        if plan.staleness:
+            args.strads = True           # stale schedules are strads-only
+        if plan.checkpoint_every:
+            args.ckpt_every = plan.checkpoint_every
+        print(f"plan: {plan.to_json()}")
 
     cfg = get_config(args.arch)
     if args.preset == "reduced":

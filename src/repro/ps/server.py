@@ -42,9 +42,13 @@ class ParameterServer:
             n for n, vs in store.specs.items() if is_replicated(vs.spec))
 
     @classmethod
-    def from_state(cls, mesh: Mesh, state: Any,
-                   spec_tree: Any) -> "ParameterServer":
-        return cls(mesh, store_from_tree(mesh, state, spec_tree))
+    def from_state(cls, mesh: Mesh, state: Any, spec_tree: Any,
+                   roles=None) -> "ParameterServer":
+        """``roles`` forwards the app's declarative VarSpec role map
+        (``var_roles()``) so the SSP machinery can derive the in-flight
+        exclusion from ``role="priority"`` leaves."""
+        return cls(mesh, store_from_tree(mesh, state, spec_tree,
+                                         roles=roles))
 
     # -- read path -----------------------------------------------------------
 

@@ -14,10 +14,22 @@ stale.  On the STRADS primitives that becomes:
   run — one batched psum for every deferred round, then the deferred
   commits (``ssp_commit_shared``, default ``pull``) replayed in round
   order, then a cache refresh;
-* **worker-local** state stays exact: ``ssp_commit_local`` runs every
-  round so a worker always sees its *own* writes immediately (the SSP
+* **worker-local** state stays exact: commit-through runs every round so
+  a worker always sees its *own* writes immediately (the SSP
   read-my-writes guarantee) — only other workers' contributions arrive
   late.
+
+Which writes commit through, which defer, and which schedule-priority
+entries are masked for in-flight exclusion is **derived from the app's
+placement declarations** (the v2 primitive protocol — see
+:mod:`repro.core.primitives` and :class:`repro.core.kvstore.VarTable`):
+a ``local`` leaf whose key path names a worker-resident (sharded) state
+leaf is its committed value and commits every round; the remaining
+``local`` leaves are buffered until the flush, where the app's own
+``pull`` replays per deferred round with ``local`` reconstructed;
+``role="priority"`` VarSpecs get the in-flight exclusion.  Apps that
+still define the deprecated v1 ``ssp_*`` hook overrides are honored with
+a ``DeprecationWarning``.
 
 Rounds therefore execute in windows of ``s + 1``: the first round of a
 window reads a fresh snapshot (staleness 0), the last reads one that is
@@ -47,6 +59,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Any, Callable, List, Optional
 
 import jax
@@ -55,6 +68,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..core.compat import shard_map
 from ..core.engine import DATA_AXIS
+from ..core.kvstore import VarTable
 from . import telemetry as T
 from .cache import StaleCache
 from .server import ParameterServer, init_clocks, tick
@@ -111,17 +125,87 @@ def _batched_psum(trees: List[Any], axis_name: str) -> List[Any]:
 
 
 # ---------------------------------------------------------------------------
+# Commit/defer/exclusion — derived from placement (v2) or legacy hooks
+# ---------------------------------------------------------------------------
+
+_LEGACY_HOOKS = ("ssp_commit_local", "ssp_defer_local",
+                 "ssp_commit_shared", "ssp_mark_scheduled")
+
+
+class _DerivedHooks:
+    """The v2 contract: everything follows from the VarSpec placement
+    (commit-through of worker-resident ``local`` writes, deferral of the
+    rest, flush-time replay of the app's own ``pull``, in-flight
+    exclusion over ``role="priority"`` leaves)."""
+
+    def __init__(self, app, table: VarTable):
+        self.app = app
+        self.table = table
+
+    def commit_local(self, state, sched, local, data, phase):
+        return self.table.commit_local(state, local, phase)
+
+    def defer_local(self, local, phase):
+        return self.table.defer_local(local, phase)
+
+    def commit_shared(self, state, sched, z, keep, data, phase):
+        local = self.table.rebuild_local(state, keep, phase)
+        return self.app.pull(state, sched, z, local, data, phase)
+
+    def mark_scheduled(self, view, candidates, phase):
+        return self.table.mark_scheduled(view, candidates)
+
+
+class _LegacyHooks:
+    """v1 per-app ``ssp_*`` hook overrides (deprecated), with the old
+    StradsAppBase defaults filled in for whichever hooks are missing."""
+
+    def __init__(self, app):
+        self.app = app
+
+    def commit_local(self, state, sched, local, data, phase):
+        fn = getattr(self.app, "ssp_commit_local", None)
+        return fn(state, sched, local, data, phase) if fn else state
+
+    def defer_local(self, local, phase):
+        fn = getattr(self.app, "ssp_defer_local", None)
+        return fn(local, phase) if fn else local
+
+    def commit_shared(self, state, sched, z, keep, data, phase):
+        fn = getattr(self.app, "ssp_commit_shared", None)
+        if fn:
+            return fn(state, sched, z, keep, data, phase)
+        return self.app.pull(state, sched, z, keep, data, phase)
+
+    def mark_scheduled(self, view, candidates, phase):
+        fn = getattr(self.app, "ssp_mark_scheduled", None)
+        return fn(view, candidates, phase) if fn else view
+
+
+def _make_hooks(app, table: VarTable):
+    legacy = [n for n in _LEGACY_HOOKS if callable(getattr(app, n, None))]
+    if legacy:
+        warnings.warn(
+            f"{type(app).__name__} defines v1 SSP hook(s) {legacy}; they "
+            f"are deprecated — the v2 protocol derives commit/defer/"
+            f"exclusion from VarSpec placement (see repro.core.primitives)",
+            DeprecationWarning, stacklevel=3)
+        return _LegacyHooks(app)
+    return _DerivedHooks(app, table)
+
+
+# ---------------------------------------------------------------------------
 # Round pieces (shard_map regions)
 # ---------------------------------------------------------------------------
 
-def _window_schedules(eng, view, data, subs, ts, phases):
+def _window_schedules(eng, hooks, view, data, subs, ts, phases):
     """propose → [batched schedule_stats psum] → schedule for a whole
     window, all reading the same stale cache view (schedule staleness
     ≤ s — the generalization of the depth-1 pipeline prefetch).  Between
-    proposals the view passes through ``ssp_mark_scheduled`` so apps can
-    exclude in-flight variables from the rest of the window; only later
-    *proposals* see the marks — stats and the schedule decisions read
-    the pristine stale view."""
+    proposals the view passes through the derived in-flight exclusion
+    (``role="priority"`` VarSpecs) so later proposals in the window avoid
+    variables already in flight; only later *proposals* see the marks —
+    stats and the schedule decisions read the pristine stale view."""
     app = eng.app
     keys = [jax.random.split(sub) for sub in subs]
     cands = []
@@ -130,7 +214,7 @@ def _window_schedules(eng, view, data, subs, ts, phases):
         c = app.propose(marked, r1, t, ph)
         cands.append(c)
         if i + 1 < len(subs):        # only later proposals see the mark
-            marked = app.ssp_mark_scheduled(marked, c, ph)
+            marked = hooks.mark_scheduled(marked, c, ph)
     if eng._needs_stats:
         def stats_fn(data, st, cands):
             stats = [app.schedule_stats(data, st, c, ph)
@@ -147,30 +231,31 @@ def _window_schedules(eng, view, data, subs, ts, phases):
             for c, s, (_, r2), t, ph in zip(cands, stats, keys, ts, phases)]
 
 
-def _fused_round(eng, view, data, sched, phase, nbytes_out: list):
+def _fused_round(eng, hooks, view, data, sched, phase, nbytes_out: list):
     """``staleness=0`` fast path: the window is a single round, so defer
-    nothing — push → local commit → pull aggregation → shared commit in
-    ONE shard_map region, structurally the BSP ``_apply`` round (with the
-    default hooks it is exactly push → psum → pull)."""
+    nothing — push → commit-through → pull aggregation → shared commit in
+    ONE shard_map region, structurally the BSP ``_apply`` round (without
+    commit-through writes it is exactly push → psum → pull)."""
     app = eng.app
     sspec = eng._sspec(view)
     num_workers = eng.mesh.shape[DATA_AXIS]
 
     def f(data, st, sched):
         z, local = app.push(data, st, sched, phase)
-        st = app.ssp_commit_local(st, sched, local, data, phase)
-        keep = app.ssp_defer_local(local, phase)
+        st = hooks.commit_local(st, sched, local, data, phase)
+        keep = hooks.defer_local(local, phase)
         nbytes_out.append(_tree_nbytes(z) * num_workers)
         Z = jax.tree.map(lambda a: jax.lax.psum(a, DATA_AXIS), z)
-        return app.ssp_commit_shared(st, sched, Z, keep, data, phase)
+        return hooks.commit_shared(st, sched, Z, keep, data, phase)
 
     return shard_map(f, mesh=eng.mesh,
                      in_specs=(eng.data_specs, sspec, P()),
                      out_specs=sspec)(data, view, sched)
 
 
-def _push_round(eng, view, data, sched, phase):
-    """push (no aggregation) + the immediate worker-local commit.
+def _push_round(eng, hooks, view, data, sched, phase):
+    """push (no aggregation) + the immediate commit-through of
+    worker-resident ``local`` writes.
 
     Partials and deferred locals come back with a leading worker axis
     (sharded over ``data``) — the pending-update buffer layout."""
@@ -179,8 +264,8 @@ def _push_round(eng, view, data, sched, phase):
 
     def f(data, st, sched):
         z, local = app.push(data, st, sched, phase)
-        st = app.ssp_commit_local(st, sched, local, data, phase)
-        keep = app.ssp_defer_local(local, phase)
+        st = hooks.commit_local(st, sched, local, data, phase)
+        keep = hooks.defer_local(local, phase)
         pend = jax.tree.map(lambda a: jnp.asarray(a)[None], (z, keep))
         return pend, st
 
@@ -202,14 +287,15 @@ def _flush_aggregate(eng, z_pends):
                      out_specs=P())(tuple(z_pends))
 
 
-def _commit_round(eng, state, data, sched, z, keep_pend, phase):
-    """Replay one deferred commit with its aggregated partials."""
-    app = eng.app
+def _commit_round(eng, hooks, state, data, sched, z, keep_pend, phase):
+    """Replay one deferred commit with its aggregated partials (the app's
+    own ``pull`` under the v2 protocol, with ``local`` reconstructed from
+    the live state + the deferred buffer)."""
     sspec = eng._sspec(state)
 
     def f(data, st, sched, z, keep):
         local = jax.tree.map(lambda a: a[0], keep)
-        return app.ssp_commit_shared(st, sched, z, local, data, phase)
+        return hooks.commit_shared(st, sched, z, local, data, phase)
 
     return shard_map(
         f, mesh=eng.mesh,
@@ -235,7 +321,9 @@ def _build_ssp(eng, num_steps: int, staleness: int,
 
     def scanned(state, data, rng, t0, clocks):
         server = ParameterServer.from_state(eng.mesh, state,
-                                            eng._sspec(state))
+                                            eng._sspec(state),
+                                            roles=eng.app_roles())
+        hooks = _make_hooks(eng.app, VarTable(server.store))
 
         def step(carry, _):
             state, rng, t, clocks, telem = carry
@@ -256,12 +344,13 @@ def _build_ssp(eng, num_steps: int, staleness: int,
                 assert W - 1 <= staleness
 
                 view = server.merge(state, cache.values)
-                scheds = _window_schedules(eng, view, data, subs, ts, phases)
+                scheds = _window_schedules(eng, hooks, view, data, subs,
+                                           ts, phases)
 
                 if W == 1:
                     # single-round window: nothing to defer — fused path
                     zb: list = []
-                    state = _fused_round(eng, view, data, scheds[0],
+                    state = _fused_round(eng, hooks, view, data, scheds[0],
                                          phases[0], zb)
                     telem = T.observe_read(telem, ts[0], cache.clock)
                     clocks = tick(clocks)
@@ -279,8 +368,8 @@ def _build_ssp(eng, num_steps: int, staleness: int,
                 z_pends, keep_pends = [], []
                 for k in range(W):
                     view = server.merge(state, cache.values)
-                    zp, kp, state = _push_round(eng, view, data, scheds[k],
-                                                phases[k])
+                    zp, kp, state = _push_round(eng, hooks, view, data,
+                                                scheds[k], phases[k])
                     z_pends.append(zp)
                     keep_pends.append(kp)
                     telem = T.observe_read(telem, ts[k], cache.clock)
@@ -297,8 +386,9 @@ def _build_ssp(eng, num_steps: int, staleness: int,
                         info.get("push_bytes_per_step", 0) + wb)
                 zs = _flush_aggregate(eng, z_pends)
                 for k in range(W):
-                    state = _commit_round(eng, state, data, scheds[k],
-                                          zs[k], keep_pends[k], phases[k])
+                    state = _commit_round(eng, hooks, state, data,
+                                          scheds[k], zs[k], keep_pends[k],
+                                          phases[k])
                     if collect is not None:
                         ys.append(collect(state))
                 cache = cache.refresh(server.snapshot(state), ts[-1] + 1)

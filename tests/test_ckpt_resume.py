@@ -2,8 +2,12 @@
 SSP clocks)`` round-trip through ``checkpoint/npz`` — a resumed run must
 match an uninterrupted one bit-for-bit (PRNG keys are serialized as key
 data and re-wrapped, so the random stream continues exactly).  Also the
-trainer-level ``launch/train.py --resume`` path.
+plan path (``StradsEngine.execute`` chunked by ``plan.checkpoint_every``,
+``ExecutionReport.carry`` round-trips) and the trainer-level
+``launch/train.py --resume --plan`` path.
 """
+import json
+
 import numpy as np
 import pytest
 
@@ -13,7 +17,7 @@ import jax.numpy as jnp
 from repro.apps import lasso
 from repro.checkpoint import (latest_step, restore_checkpoint,
                               save_checkpoint)
-from repro.core import single_device_mesh
+from repro.core import ExecutionPlan, single_device_mesh
 
 
 def _bit_identical(a_state, b_state):
@@ -69,6 +73,175 @@ def test_scanned_state_roundtrips_through_npz(tmp_path, rng):
     _bit_identical(st, back)
 
 
+def test_execute_plan_checkpoint_chunks_match_uninterrupted(tmp_path,
+                                                            rng):
+    """The plan path: ``execute(plan(checkpoint_every=4), ckpt_dir=...)``
+    chunks an 8-round SSP run into two compiled spans with a full
+    ``{"state", "carry"}`` checkpoint between them — and matches the
+    unchunked run bit-for-bit; restoring the mid checkpoint and resuming
+    via ``execute(..., carry=...)`` does too."""
+    eng, data, y = _setup(rng)
+
+    full = eng.execute(eng.init_state(jax.random.key(0), y=y), data,
+                       jax.random.key(1),
+                       ExecutionPlan(executor="ssp", rounds=8,
+                                     staleness=1)).state
+
+    plan = ExecutionPlan(executor="ssp", rounds=8, staleness=1,
+                         checkpoint_every=4)
+    rep = eng.execute(eng.init_state(jax.random.key(0), y=y), data,
+                      jax.random.key(1), plan, ckpt_dir=str(tmp_path))
+    _bit_identical(full, rep.state)
+    assert latest_step(str(tmp_path)) == 8
+    assert int(rep.carry.t) == 8
+
+    # ExecutionReport.carry round-trips through checkpoint/npz: restore
+    # the mid-run checkpoint and continue the same plan.
+    template = {"state": jax.tree.map(jnp.copy, rep.state),
+                "carry": rep.carry}
+    restored = restore_checkpoint(str(tmp_path), 4, template)
+    assert int(restored["carry"].t) == 4
+    resumed = eng.execute(restored["state"], data, jax.random.key(99),
+                          plan, carry=restored["carry"],
+                          ckpt_dir=str(tmp_path / "resumed"))
+    _bit_identical(full, resumed.state)
+
+
+def test_execute_pipelined_carry_resumes_inflight_schedule(tmp_path, rng):
+    """Chunking the pipelined executor must carry the prefetched
+    in-flight schedule across the chunk boundary (EngineCarry.sched) —
+    without it, the resumed schedule would be fresh instead of one round
+    stale and the runs would diverge."""
+    eng, data, y = _setup(rng)
+
+    plan_full = ExecutionPlan(executor="pipelined", rounds=8)
+    full = eng.execute(eng.init_state(jax.random.key(0), y=y), data,
+                       jax.random.key(1), plan_full).state
+
+    plan = ExecutionPlan(executor="pipelined", rounds=8,
+                         checkpoint_every=4)
+    rep = eng.execute(eng.init_state(jax.random.key(0), y=y), data,
+                      jax.random.key(1), plan, ckpt_dir=str(tmp_path))
+    _bit_identical(full, rep.state)
+    assert rep.carry.sched is not None          # the in-flight schedule
+
+    template = {"state": jax.tree.map(jnp.copy, rep.state),
+                "carry": rep.carry}
+    restored = restore_checkpoint(str(tmp_path), 4, template)
+    resumed = eng.execute(restored["state"], data, jax.random.key(99),
+                          plan, carry=restored["carry"],
+                          ckpt_dir=str(tmp_path / "resumed"))
+    _bit_identical(full, resumed.state)
+
+
+def test_execute_chunked_honors_callback_early_stop(tmp_path, rng):
+    """A callback stop inside a checkpoint chunk must end the whole run
+    (no skipped rounds, no further chunks) and checkpoint at the round
+    actually reached."""
+    eng, data, y = _setup(rng)
+    plan = ExecutionPlan(executor="loop", rounds=6, checkpoint_every=2)
+    seen = []
+
+    def cb(t, s, out):
+        seen.append(t)
+        return t == 2                           # stop mid-chunk 2
+
+    rep = eng.execute(eng.init_state(jax.random.key(0), y=y), data,
+                      jax.random.key(1), plan, callback=cb,
+                      ckpt_dir=str(tmp_path))
+    assert seen == [0, 1, 2]
+    assert int(rep.carry.t) == 3
+    assert latest_step(str(tmp_path)) == 3
+
+    # ... including when the stop lands exactly on a chunk boundary
+    seen2 = []
+    d2 = tmp_path / "boundary"
+    rep2 = eng.execute(eng.init_state(jax.random.key(0), y=y), data,
+                       jax.random.key(1), plan,
+                       callback=lambda t, s, o: (seen2.append(t),
+                                                 t == 1)[1],
+                       ckpt_dir=str(d2))
+    assert seen2 == [0, 1]
+    assert int(rep2.carry.t) == 2
+    assert latest_step(str(d2)) == 2
+
+
+def test_execute_chunked_rejects_unrunnable_final_chunk(tmp_path, rng):
+    """pipelined/ssp plans whose rounds don't tile the step length must
+    fail before any chunk runs (without ckpt_dir the executor itself
+    rejects them upfront — chunking must not defer that to the last
+    chunk, after checkpoints were already written)."""
+    eng, data, y = _setup(rng)
+    state = eng.init_state(jax.random.key(0), y=y)
+    plan = ExecutionPlan(executor="ssp", rounds=7, staleness=1,
+                         checkpoint_every=2)    # 7 % 2 != 0
+    with pytest.raises(ValueError, match="plan.rounds"):
+        eng.execute(state, data, jax.random.key(1), plan,
+                    ckpt_dir=str(tmp_path))
+    assert latest_step(str(tmp_path)) is None
+
+
+def test_execute_rejects_foreign_carry_types(tmp_path, rng):
+    """Resuming a plan with a carry from a different executor must error,
+    not silently diverge from the uninterrupted run."""
+    eng, data, y = _setup(rng)
+
+    ssp_rep = eng.execute(eng.init_state(jax.random.key(0), y=y), data,
+                          jax.random.key(1),
+                          ExecutionPlan(executor="ssp", rounds=4,
+                                        staleness=1))
+    scan_rep = eng.execute(eng.init_state(jax.random.key(0), y=y), data,
+                           jax.random.key(1),
+                           ExecutionPlan(executor="scan", rounds=4))
+    state = eng.init_state(jax.random.key(0), y=y)
+    # SSPCarry into a pipelined plan: no .sched
+    with pytest.raises(ValueError, match="EngineCarry"):
+        eng.execute(state, data, None,
+                    ExecutionPlan(executor="pipelined", rounds=8),
+                    carry=ssp_rep.carry)
+    # depth-0 EngineCarry into a pipelined plan: sched is None
+    with pytest.raises(ValueError, match="in-flight schedule"):
+        eng.execute(state, data, None,
+                    ExecutionPlan(executor="pipelined", rounds=8),
+                    carry=scan_rep.carry)
+    # EngineCarry into an ssp plan: no .clocks
+    with pytest.raises(ValueError, match="SSPCarry"):
+        eng.execute(state, data, None,
+                    ExecutionPlan(executor="ssp", rounds=8, staleness=1),
+                    carry=scan_rep.carry)
+
+
+def test_execute_rejects_ckpt_dir_without_cadence(tmp_path, rng):
+    """ckpt_dir with checkpoint_every=0 would be a silent no-op — reject
+    it so a crash mid-run can't lose progress the caller believed was
+    being checkpointed."""
+    eng, data, y = _setup(rng)
+    state = eng.init_state(jax.random.key(0), y=y)
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        eng.execute(state, data, jax.random.key(1),
+                    ExecutionPlan(executor="scan", rounds=4),
+                    ckpt_dir=str(tmp_path))
+    # ... and the converse: a checkpointing cadence without anywhere to
+    # write would silently never checkpoint
+    with pytest.raises(ValueError, match="ckpt_dir"):
+        eng.execute(state, data, jax.random.key(1),
+                    ExecutionPlan(executor="scan", rounds=4,
+                                  checkpoint_every=2))
+
+
+def test_execute_rejects_misaligned_checkpoint_cadence(tmp_path, rng):
+    """checkpoint_every must tile the executor step length — rejected
+    upfront, before any chunk runs or checkpoint is written."""
+    eng, data, y = _setup(rng)
+    state = eng.init_state(jax.random.key(0), y=y)
+    plan = ExecutionPlan(executor="ssp", rounds=8, staleness=1,
+                         checkpoint_every=3)    # SSP window is 2
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        eng.execute(state, data, jax.random.key(1), plan,
+                    ckpt_dir=str(tmp_path))
+    assert latest_step(str(tmp_path)) is None
+
+
 def test_ssp_resume_rejects_misaligned_t0(rng):
     eng, data, y = _setup(rng)
     st = eng.init_state(jax.random.key(0), y=y)
@@ -78,9 +251,11 @@ def test_ssp_resume_rejects_misaligned_t0(rng):
 
 @pytest.mark.slow
 def test_train_resume_matches_uninterrupted(tmp_path):
-    """launch/train.py --resume: full-state checkpoints make the resumed
-    run reproduce the uninterrupted loss exactly (deterministic synthetic
-    batches are indexed by global step)."""
+    """launch/train.py --resume --plan: full-state checkpoints make the
+    resumed run reproduce the uninterrupted loss exactly (deterministic
+    synthetic batches are indexed by global step); the interrupted +
+    resumed legs are driven by a checked-in-style ExecutionPlan JSON
+    (rounds → steps, checkpoint_every → ckpt cadence)."""
     from repro.launch import train
 
     common = ["--arch", "xlstm-125m", "--preset", "reduced",
@@ -88,13 +263,19 @@ def test_train_resume_matches_uninterrupted(tmp_path):
               "--log-every", "1", "--seed", "7"]
     full = train.main(common)
 
+    plan = ExecutionPlan(executor="loop", rounds=4, checkpoint_every=2)
+    plan_path = str(tmp_path / "plan.json")
+    with open(plan_path, "w") as f:
+        json.dump(plan.to_json(), f)
+
     d = str(tmp_path / "ck")
-    train.main(common + ["--ckpt-dir", d, "--ckpt-every", "2"])
+    train.main(common + ["--plan", plan_path, "--ckpt-dir", d])
     assert latest_step(d) == 4
     # wipe the final checkpoint so --resume restarts mid-run (step 2)
     import os
     os.remove(os.path.join(d, "step_00000004.npz"))
-    resumed = train.main(common + ["--ckpt-dir", d, "--resume"])
+    resumed = train.main(common + ["--plan", plan_path, "--ckpt-dir", d,
+                                   "--resume"])
 
     assert resumed[-1]["step"] == full[-1]["step"] == 3
     assert resumed[-1]["loss"] == pytest.approx(full[-1]["loss"],

@@ -17,7 +17,7 @@ import numpy as np
 import pytest
 
 from repro.apps import lasso, lda, mf
-from repro.core import single_device_mesh
+from repro.core import ExecutionPlan, single_device_mesh
 
 
 @pytest.fixture(scope="module")
@@ -40,7 +40,8 @@ def test_lasso_scan_matches_host_loop(mesh, rng):
     cfg = lasso.LassoConfig(num_features=30, lam=0.02, block_size=4,
                             num_candidates=12, rho=0.3)
     s_loop, _ = lasso.fit(cfg, X, y, mesh, num_rounds=20)
-    s_scan, _ = lasso.fit(cfg, X, y, mesh, num_rounds=20, executor="scan")
+    s_scan, _ = lasso.fit(cfg, X, y, mesh,
+                          plan=ExecutionPlan(executor="scan", rounds=20))
     _bit_identical(s_loop, s_scan)
 
 
@@ -49,8 +50,9 @@ def test_lasso_scan_trace_matches_host_trace(mesh, rng):
     cfg = lasso.LassoConfig(num_features=30, lam=0.02, block_size=4,
                             num_candidates=12, rho=0.3)
     _, tr_loop = lasso.fit(cfg, X, y, mesh, num_rounds=10, trace_every=2)
-    _, tr_scan = lasso.fit(cfg, X, y, mesh, num_rounds=10, trace_every=2,
-                           executor="scan")
+    _, tr_scan = lasso.fit(cfg, X, y, mesh,
+                           plan=ExecutionPlan(executor="scan", rounds=10,
+                                              collect_every=2))
     assert [t for t, _ in tr_loop] == [t for t, _ in tr_scan]
     for (_, a), (_, b) in zip(tr_loop, tr_scan):
         assert a == pytest.approx(b, rel=1e-6)
@@ -62,7 +64,8 @@ def test_mf_scan_matches_host_loop_including_tail(mesh, rng):
     A, mask = mf.synthetic_ratings(rng, 40, 30, true_rank=4, density=0.5)
     cfg = mf.MFConfig(num_rows=40, num_cols=30, rank=4, lam=0.05)
     s_loop, _ = mf.fit(cfg, A, mask, mesh, num_rounds=9)
-    s_scan, _ = mf.fit(cfg, A, mask, mesh, num_rounds=9, executor="scan")
+    s_scan, _ = mf.fit(cfg, A, mask, mesh,
+                       plan=ExecutionPlan(executor="scan", rounds=9))
     _bit_identical(s_loop, s_scan)
 
 
@@ -71,8 +74,8 @@ def test_lda_scan_matches_host_loop(mesh, rng):
                         tokens_per_worker=200, docs_per_worker=5)
     words, docs, z0 = lda.synthetic_corpus(rng, cfg, true_topics=4)
     s_loop, _, _ = lda.fit(cfg, words, docs, z0, mesh, num_rounds=6)
-    s_scan, _, _ = lda.fit(cfg, words, docs, z0, mesh, num_rounds=6,
-                           executor="scan")
+    s_scan, _, _ = lda.fit(cfg, words, docs, z0, mesh,
+                           plan=ExecutionPlan(executor="scan", rounds=6))
     _bit_identical(s_loop, s_scan)
 
 
@@ -90,8 +93,9 @@ def test_pipelined_lasso_objective_monotone_on_correlated_design(mesh):
                                          k_true=8)
     cfg = lasso.LassoConfig(num_features=80, lam=0.02, block_size=8,
                             num_candidates=32, rho=0.3, eta=1e-3)
-    _, tr = lasso.fit(cfg, X, y, mesh, num_rounds=40, trace_every=1,
-                      executor="pipelined")
+    _, tr = lasso.fit(cfg, X, y, mesh,
+                      plan=ExecutionPlan(executor="pipelined", rounds=40,
+                                         collect_every=1))
     vals = [v for _, v in tr]
     assert len(vals) == 40
     for a, b in zip(vals, vals[1:]):
@@ -106,8 +110,10 @@ def test_pipelined_lasso_matches_depth0_rng_stream(mesh, rng):
     X, y, _ = lasso.synthetic_correlated(rng, n=40, J=20, k_true=3)
     cfg = lasso.LassoConfig(num_features=20, lam=0.02, block_size=4,
                             num_candidates=8, rho=0.3)
-    s0, _ = lasso.fit(cfg, X, y, mesh, num_rounds=1, executor="scan")
-    s1, _ = lasso.fit(cfg, X, y, mesh, num_rounds=1, executor="pipelined")
+    s0, _ = lasso.fit(cfg, X, y, mesh,
+                      plan=ExecutionPlan(executor="scan", rounds=1))
+    s1, _ = lasso.fit(cfg, X, y, mesh,
+                      plan=ExecutionPlan(executor="pipelined", rounds=1))
     _bit_identical(s0, s1)
 
 
@@ -117,8 +123,9 @@ def test_pipelined_lda_conserves_counts(mesh, rng):
     cfg = lda.LDAConfig(vocab=30, num_topics=4, num_workers=1,
                         tokens_per_worker=200, docs_per_worker=5)
     words, docs, z0 = lda.synthetic_corpus(rng, cfg, true_topics=4)
-    state, tr, _ = lda.fit(cfg, words, docs, z0, mesh, num_rounds=8,
-                           trace_every=4, executor="pipelined")
+    state, tr, _ = lda.fit(cfg, words, docs, z0, mesh,
+                           plan=ExecutionPlan(executor="pipelined",
+                                              rounds=8, collect_every=4))
     n_tok = int((words >= 0).sum())
     assert float(jnp.sum(state["B"])) == n_tok
     assert float(jnp.sum(state["D"])) == n_tok
@@ -129,8 +136,9 @@ def test_pipelined_lda_conserves_counts(mesh, rng):
 def test_pipelined_mf_objective_decreases(mesh, rng):
     A, mask = mf.synthetic_ratings(rng, 40, 30, true_rank=4, density=0.5)
     cfg = mf.MFConfig(num_rows=40, num_cols=30, rank=4, lam=0.05)
-    _, tr = mf.fit(cfg, A, mask, mesh, num_rounds=20, trace_every=1,
-                   executor="pipelined")
+    _, tr = mf.fit(cfg, A, mask, mesh,
+                   plan=ExecutionPlan(executor="pipelined", rounds=20,
+                                      collect_every=1))
     vals = [v for _, v in tr]
     assert vals[-1] < vals[0] * 0.6
 
@@ -143,7 +151,8 @@ def test_pipelined_rejects_non_divisible_rounds(mesh, rng):
     A, mask = mf.synthetic_ratings(rng, 20, 15, true_rank=3, density=0.5)
     cfg = mf.MFConfig(num_rows=20, num_cols=15, rank=3, lam=0.05)
     with pytest.raises(ValueError, match="divisible"):
-        mf.fit(cfg, A, mask, mesh, num_rounds=7, executor="pipelined")
+        mf.fit(cfg, A, mask, mesh,
+               plan=ExecutionPlan(executor="pipelined", rounds=7))
 
 
 def test_run_scanned_without_collect_returns_state_only(mesh, rng):
@@ -180,5 +189,6 @@ def test_scanned_fn_is_aot_lowerable(mesh, rng):
     data = eng.shard_data({"X": jnp.asarray(X), "y": jnp.asarray(y)})
     state = eng.app.init_state(jax.random.key(0), y=y)
     fn = eng.scanned_fn(4, pipeline_depth=1)
-    compiled = fn.lower(state, data, jax.random.key(1)).compile()
+    compiled = fn.lower(state, data, jax.random.key(1),
+                        jnp.int32(0)).compile()
     assert compiled.cost_analysis() is not None

@@ -1,0 +1,307 @@
+"""The unified ExecutionPlan surface (ISSUE 3 acceptance).
+
+Contract under test:
+  * plans are frozen, hashable values; invalid executor/kwarg
+    combinations raise at construction, never at trace time, with the
+    executor-name message living in exactly one place;
+  * ``to_json → from_json`` round-trips exactly, defaults included, and
+    the checked-in ``examples/plans/*.json`` files parse;
+  * ``StradsEngine.execute(plan)`` drives all four executors and is
+    bit-identical to the legacy entry points (``run`` / ``run_scanned`` /
+    ``run_ssp``) on Lasso — the per-app equivalence lives in
+    tests/test_engine_scan.py and tests/test_ssp.py;
+  * the deprecated ``fit(executor=..., staleness=...)`` shim warns and
+    produces bit-identical results to ``fit(plan=...)``;
+  * the derived v2 SSP behavior replaced the per-app ``ssp_*`` hook
+    overrides (they are gone from the apps), while legacy hooks on a
+    user app still run behind a DeprecationWarning.
+"""
+import glob
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import lasso, lda, mf
+from repro.core import (ExecutionPlan, ExecutionReport, StradsEngine,
+                        single_device_mesh)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return single_device_mesh()
+
+
+def _bit_identical(a_state, b_state):
+    assert set(a_state) == set(b_state)
+    for k in a_state:
+        a, b = np.asarray(a_state[k]), np.asarray(b_state[k])
+        assert (a == b).all(), (k, np.max(np.abs(a - b)))
+
+
+def _lasso_setup(rng, n=40, J=20):
+    X, y, _ = lasso.synthetic_correlated(rng, n=n, J=J, k_true=3)
+    cfg = lasso.LassoConfig(num_features=J, lam=0.02, block_size=4,
+                            num_candidates=8, rho=0.3)
+    return cfg, X, y
+
+
+# ---------------------------------------------------------------------------
+# construction-time validation (the single source of truth)
+# ---------------------------------------------------------------------------
+
+def test_plan_is_hashable_value():
+    a = ExecutionPlan(executor="ssp", rounds=8, staleness=2)
+    b = ExecutionPlan(executor="ssp", rounds=8, staleness=2)
+    assert a == b and hash(a) == hash(b)
+    assert len({a, b}) == 1
+
+
+def test_plan_rejects_unknown_executor_with_canonical_message():
+    with pytest.raises(ValueError, match="executor must be 'loop', "
+                                         "'scan', 'pipelined' or 'ssp'"):
+        ExecutionPlan(executor="warp", rounds=4)
+    # 'loop' really is acceptable (the drifted apps/_exec.scan_depth
+    # message claimed so but raised — ISSUE 3 satellite)
+    assert ExecutionPlan(executor="loop", rounds=4).depth == 0
+
+
+@pytest.mark.parametrize("kw", [
+    dict(executor="scan", staleness=1),         # staleness needs ssp
+    dict(executor="scan", pipeline_depth=1),    # depth>0 needs pipelined
+    dict(executor="pipelined", pipeline_depth=0),
+    dict(executor="scan", rounds=0),
+    dict(executor="scan", rounds=1, staleness=-1),
+    dict(executor="loop", rounds=4, phase_unroll=2),
+    dict(executor="ssp", rounds=4, phase_unroll=2),
+    dict(executor="scan", rounds=4, telemetry=True),
+    dict(executor="scan", rounds=4, workers=0),
+    dict(executor="scan", rounds=4, collect_every=-1),
+])
+def test_invalid_combinations_raise_at_construction(kw):
+    with pytest.raises(ValueError):
+        ExecutionPlan(**kw)
+
+
+def test_plan_depth_derivation():
+    assert ExecutionPlan(executor="scan", rounds=2).depth == 0
+    assert ExecutionPlan(executor="pipelined", rounds=2).depth == 1
+    assert ExecutionPlan(executor="pipelined", rounds=2,
+                         pipeline_depth=1).depth == 1
+
+
+# ---------------------------------------------------------------------------
+# JSON round-trip
+# ---------------------------------------------------------------------------
+
+def test_plan_json_roundtrip_exact_including_defaults():
+    plans = [
+        ExecutionPlan(),
+        ExecutionPlan(executor="loop", rounds=3, collect_every=2),
+        ExecutionPlan(executor="pipelined", rounds=8, phase_unroll=2,
+                      donate=False),
+        ExecutionPlan(executor="ssp", rounds=12, staleness=2,
+                      telemetry=True, checkpoint_every=6, workers=4),
+    ]
+    for p in plans:
+        d = p.to_json()
+        assert ExecutionPlan.from_json(d) == p
+        # and through an actual JSON string
+        assert ExecutionPlan.from_json(json.dumps(d)) == p
+
+
+def test_plan_from_json_partial_and_unknown_keys():
+    p = ExecutionPlan.from_json({"executor": "ssp", "rounds": 4,
+                                 "staleness": 1})
+    assert p == ExecutionPlan(executor="ssp", rounds=4, staleness=1)
+    with pytest.raises(ValueError, match="unknown ExecutionPlan field"):
+        ExecutionPlan.from_json({"executor": "scan", "depth": 1})
+    # invalid combinations raise through from_json too (construction-time)
+    with pytest.raises(ValueError, match="requires executor='ssp'"):
+        ExecutionPlan.from_json({"executor": "scan", "rounds": 4,
+                                 "staleness": 2})
+
+
+def test_checked_in_example_plans_parse():
+    paths = sorted(glob.glob(os.path.join(ROOT, "examples", "plans",
+                                          "*.json")))
+    assert len(paths) >= 2, "examples/plans/ must ship example plans"
+    names = {os.path.basename(p) for p in paths}
+    assert "ssp_s2.json" in names          # the CI dry-run smoke plan
+    for path in paths:
+        with open(path) as f:
+            raw = json.load(f)
+        plan = ExecutionPlan.from_json(raw)
+        assert plan.to_json() == raw       # files are exact to_json dumps
+
+
+# ---------------------------------------------------------------------------
+# execute(plan) == the legacy entry points, all four executors
+# ---------------------------------------------------------------------------
+
+def test_execute_matches_legacy_entry_points_all_executors(mesh, rng):
+    cfg, X, y = _lasso_setup(rng)
+    eng = lasso.make_engine(cfg, mesh)
+    data = eng.shard_data({"X": jnp.asarray(X), "y": jnp.asarray(y)})
+
+    def init():
+        return eng.init_state(jax.random.key(0), y=y)
+
+    legacy = {
+        "loop": lambda: eng.run(init(), data, jax.random.key(1), 8),
+        "scan": lambda: eng.run_scanned(init(), data, jax.random.key(1),
+                                        8, pipeline_depth=0),
+        "pipelined": lambda: eng.run_scanned(init(), data,
+                                             jax.random.key(1), 8,
+                                             pipeline_depth=1),
+        "ssp": lambda: eng.run_ssp(init(), data, jax.random.key(1), 8,
+                                   staleness=1),
+    }
+    for name, run in legacy.items():
+        plan = ExecutionPlan(executor=name, rounds=8,
+                             staleness=1 if name == "ssp" else 0)
+        rep = eng.execute(init(), data, jax.random.key(1), plan)
+        assert isinstance(rep, ExecutionReport)
+        assert rep.plan is plan and rep.carry is not None
+        assert int(rep.carry.t) == 8
+        _bit_identical(run(), rep.state)
+
+
+def test_execute_validates_workers_and_callback(mesh, rng):
+    cfg, X, y = _lasso_setup(rng)
+    eng = lasso.make_engine(cfg, mesh)
+    data = eng.shard_data({"X": jnp.asarray(X), "y": jnp.asarray(y)})
+    state = eng.init_state(jax.random.key(0), y=y)
+    with pytest.raises(ValueError, match="plan.workers"):
+        eng.execute(state, data, jax.random.key(1),
+                    ExecutionPlan(executor="scan", rounds=2, workers=7))
+    with pytest.raises(ValueError, match="callback"):
+        eng.execute(state, data, jax.random.key(1),
+                    ExecutionPlan(executor="scan", rounds=2),
+                    callback=lambda t, s, o: False)
+
+
+def test_execute_phase_unroll_is_bit_identical(mesh, rng):
+    cfg, X, y = _lasso_setup(rng)
+    eng = lasso.make_engine(cfg, mesh)
+    data = eng.shard_data({"X": jnp.asarray(X), "y": jnp.asarray(y)})
+
+    def run(unroll):
+        plan = ExecutionPlan(executor="scan", rounds=8,
+                             phase_unroll=unroll, donate=False)
+        return eng.execute(eng.init_state(jax.random.key(0), y=y), data,
+                           jax.random.key(1), plan).state
+
+    _bit_identical(run(1), run(4))
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_fit_legacy_kwargs_warn_and_match_plan(mesh, rng):
+    cfg, X, y = _lasso_setup(rng)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        s_legacy, _ = lasso.fit(cfg, X, y, mesh, num_rounds=9,
+                                executor="ssp", staleness=2)
+    s_plan, _ = lasso.fit(cfg, X, y, mesh,
+                          plan=ExecutionPlan(executor="ssp", rounds=9,
+                                             staleness=2))
+    _bit_identical(s_legacy, s_plan)
+
+
+def test_fit_default_path_does_not_warn(mesh, rng):
+    import warnings as W
+    cfg, X, y = _lasso_setup(rng)
+    with W.catch_warnings():
+        W.simplefilter("error", DeprecationWarning)
+        lasso.fit(cfg, X, y, mesh, num_rounds=2)
+
+
+def test_fit_rejects_plan_plus_legacy_kwargs(mesh, rng):
+    cfg, X, y = _lasso_setup(rng)
+    plan = ExecutionPlan(executor="scan", rounds=4)
+    with pytest.raises(ValueError, match="not both"):
+        lasso.fit(cfg, X, y, mesh, executor="scan", plan=plan)
+    with pytest.raises(ValueError, match="contradicts"):
+        lasso.fit(cfg, X, y, mesh, num_rounds=5, plan=plan)
+
+
+def test_fit_rejects_plan_fields_it_cannot_honor(mesh, rng):
+    """fit() has no telemetry/checkpoint surface — silently dropping
+    those plan fields would lie to the caller, so they are rejected."""
+    cfg, X, y = _lasso_setup(rng)
+    with pytest.raises(ValueError, match="telemetry"):
+        lasso.fit(cfg, X, y, mesh,
+                  plan=ExecutionPlan(executor="ssp", rounds=4,
+                                     staleness=1, telemetry=True))
+    with pytest.raises(ValueError, match="checkpoint"):
+        lasso.fit(cfg, X, y, mesh,
+                  plan=ExecutionPlan(executor="scan", rounds=4,
+                                     checkpoint_every=2))
+
+
+def test_run_zero_rounds_is_a_noop(mesh, rng):
+    """run_scanned's num_rounds>=1 error directs callers to the host
+    loop for zero-round calls — keep that escape hatch working."""
+    cfg, X, y = _lasso_setup(rng)
+    eng = lasso.make_engine(cfg, mesh)
+    data = eng.shard_data({"X": jnp.asarray(X), "y": jnp.asarray(y)})
+    state = eng.init_state(jax.random.key(0), y=y)
+    out = eng.run(state, data, jax.random.key(1), 0)
+    _bit_identical(out, state)
+
+
+# ---------------------------------------------------------------------------
+# v2 protocol: hooks are gone from the apps, legacy hooks still honored
+# ---------------------------------------------------------------------------
+
+def test_apps_define_no_v1_ssp_hooks():
+    for app_cls in (lasso.StradsLasso, lda.StradsLDA, mf.StradsMF):
+        for hook in ("ssp_commit_local", "ssp_defer_local",
+                     "ssp_commit_shared", "ssp_mark_scheduled"):
+            assert not hasattr(app_cls, hook), (app_cls.__name__, hook)
+
+
+def test_lasso_declares_priority_role_only_for_strads(rng):
+    cfg, X, y = _lasso_setup(rng)
+    assert lasso.StradsLasso(cfg).var_roles() == {"delta": "priority"}
+    rr = lasso.LassoConfig(num_features=20, scheduler="rr")
+    assert lasso.StradsLasso(rr).var_roles() == {}
+
+
+def test_legacy_ssp_hooks_still_run_with_deprecation_warning(mesh, rng):
+    """A user app carrying v1 hook overrides keeps working (the shim in
+    repro.ps.ssp), warns, and — when the hooks replicate the old
+    defaults — matches the derived path bit-for-bit.  Uses the "rr"
+    scheduler so neither path applies in-flight exclusion (the strads
+    priority masking has no legacy counterpart in this minimal app)."""
+    X, y, _ = lasso.synthetic_correlated(rng, n=40, J=20, k_true=3)
+    cfg = lasso.LassoConfig(num_features=20, lam=0.02, block_size=4,
+                            scheduler="rr")
+
+    class LegacyLasso(lasso.StradsLasso):
+        def ssp_commit_shared(self, state, sched, z, local, data, phase):
+            return self.pull(state, sched, z, local, data, phase)
+
+    eng_legacy = StradsEngine(LegacyLasso(cfg), mesh,
+                              data_specs=LegacyLasso(cfg).data_specs(),
+                              state_specs=LegacyLasso(cfg).state_specs())
+    data = eng_legacy.shard_data({"X": jnp.asarray(X),
+                                  "y": jnp.asarray(y)})
+    st0 = eng_legacy.init_state(jax.random.key(0), y=y)
+    with pytest.warns(DeprecationWarning, match="v1 SSP hook"):
+        s_legacy = eng_legacy.run_ssp(st0, data, jax.random.key(1), 8,
+                                      staleness=1)
+
+    eng = lasso.make_engine(cfg, mesh)
+    s_derived = eng.run_ssp(eng.init_state(jax.random.key(0), y=y),
+                            eng.shard_data({"X": jnp.asarray(X),
+                                            "y": jnp.asarray(y)}),
+                            jax.random.key(1), 8, staleness=1)
+    _bit_identical(s_legacy, s_derived)

@@ -20,7 +20,7 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.apps import lasso, lda, mf
-from repro.core import single_device_mesh
+from repro.core import ExecutionPlan, single_device_mesh
 from repro.ps import ParameterServer, StaleCache, init_clocks
 
 
@@ -49,18 +49,22 @@ def _lasso_problem(rng, n=60, J=30):
 
 def test_lasso_ssp0_bit_identical_to_scan(mesh, rng):
     cfg, X, y = _lasso_problem(rng)
-    s_scan, _ = lasso.fit(cfg, X, y, mesh, num_rounds=20, executor="scan")
-    s_ssp, _ = lasso.fit(cfg, X, y, mesh, num_rounds=20, executor="ssp",
-                         staleness=0)
+    s_scan, _ = lasso.fit(cfg, X, y, mesh,
+                          plan=ExecutionPlan(executor="scan", rounds=20))
+    s_ssp, _ = lasso.fit(cfg, X, y, mesh,
+                         plan=ExecutionPlan(executor="ssp", rounds=20,
+                                            staleness=0))
     _bit_identical(s_scan, s_ssp)
 
 
 def test_lasso_ssp0_trace_matches_scan_trace(mesh, rng):
     cfg, X, y = _lasso_problem(rng)
-    _, tr_scan = lasso.fit(cfg, X, y, mesh, num_rounds=10, trace_every=2,
-                           executor="scan")
-    _, tr_ssp = lasso.fit(cfg, X, y, mesh, num_rounds=10, trace_every=2,
-                          executor="ssp", staleness=0)
+    _, tr_scan = lasso.fit(cfg, X, y, mesh,
+                           plan=ExecutionPlan(executor="scan", rounds=10,
+                                              collect_every=2))
+    _, tr_ssp = lasso.fit(cfg, X, y, mesh,
+                          plan=ExecutionPlan(executor="ssp", rounds=10,
+                                             staleness=0, collect_every=2))
     assert tr_scan == tr_ssp
 
 
@@ -68,19 +72,22 @@ def test_lda_ssp0_bit_identical_to_scan(mesh, rng):
     cfg = lda.LDAConfig(vocab=30, num_topics=4, num_workers=1,
                         tokens_per_worker=200, docs_per_worker=5)
     words, docs, z0 = lda.synthetic_corpus(rng, cfg, true_topics=4)
-    s_scan, _, _ = lda.fit(cfg, words, docs, z0, mesh, num_rounds=6,
-                           executor="scan")
-    s_ssp, _, _ = lda.fit(cfg, words, docs, z0, mesh, num_rounds=6,
-                          executor="ssp", staleness=0)
+    s_scan, _, _ = lda.fit(cfg, words, docs, z0, mesh,
+                           plan=ExecutionPlan(executor="scan", rounds=6))
+    s_ssp, _, _ = lda.fit(cfg, words, docs, z0, mesh,
+                          plan=ExecutionPlan(executor="ssp", rounds=6,
+                                             staleness=0))
     _bit_identical(s_scan, s_ssp)
 
 
 def test_mf_ssp0_bit_identical_to_scan(mesh, rng):
     A, mask = mf.synthetic_ratings(rng, 40, 30, true_rank=4, density=0.5)
     cfg = mf.MFConfig(num_rows=40, num_cols=30, rank=4, lam=0.05)
-    s_scan, _ = mf.fit(cfg, A, mask, mesh, num_rounds=8, executor="scan")
-    s_ssp, _ = mf.fit(cfg, A, mask, mesh, num_rounds=8, executor="ssp",
-                      staleness=0)
+    s_scan, _ = mf.fit(cfg, A, mask, mesh,
+                       plan=ExecutionPlan(executor="scan", rounds=8))
+    s_ssp, _ = mf.fit(cfg, A, mask, mesh,
+                      plan=ExecutionPlan(executor="ssp", rounds=8,
+                                         staleness=0))
     _bit_identical(s_scan, s_ssp)
 
 
@@ -90,9 +97,11 @@ def test_mf_ssp1_window_equals_full_cycle_is_exact(mesh, rng):
     SSP introduces *zero* staleness error — bit-identical to BSP."""
     A, mask = mf.synthetic_ratings(rng, 40, 30, true_rank=4, density=0.5)
     cfg = mf.MFConfig(num_rows=40, num_cols=30, rank=4, lam=0.05)
-    s_scan, _ = mf.fit(cfg, A, mask, mesh, num_rounds=8, executor="scan")
-    s_ssp, _ = mf.fit(cfg, A, mask, mesh, num_rounds=8, executor="ssp",
-                      staleness=1)
+    s_scan, _ = mf.fit(cfg, A, mask, mesh,
+                       plan=ExecutionPlan(executor="scan", rounds=8))
+    s_ssp, _ = mf.fit(cfg, A, mask, mesh,
+                      plan=ExecutionPlan(executor="ssp", rounds=8,
+                                         staleness=1))
     _bit_identical(s_scan, s_ssp)
 
 
@@ -118,8 +127,10 @@ def test_read_staleness_never_exceeds_bound(staleness, steps, scheduler):
     data = eng.shard_data({"X": jnp.asarray(X), "y": jnp.asarray(y)})
     state = eng.init_state(jax.random.key(0), y=y)
     R = (staleness + 1) * steps
-    _, telem = eng.run_ssp(state, data, jax.random.key(1), R,
-                           staleness=staleness, with_telemetry=True)
+    # invoked through the unified plan surface (ISSUE 3 acceptance)
+    plan = ExecutionPlan(executor="ssp", rounds=R, staleness=staleness,
+                         telemetry=True)
+    telem = eng.execute(state, data, jax.random.key(1), plan).telemetry
     assert telem.max_staleness <= staleness
     assert telem.hist.sum() == R == telem.rounds
     # each window serves exactly one read at every staleness 0..s
@@ -131,8 +142,9 @@ def test_read_staleness_never_exceeds_bound(staleness, steps, scheduler):
 def test_ssp_rejects_non_divisible_rounds(mesh, rng):
     cfg, X, y = _lasso_problem(rng)
     with pytest.raises(ValueError, match="multiple"):
-        lasso.fit(cfg, X, y, mesh, num_rounds=5, executor="ssp",
-                  staleness=1)
+        lasso.fit(cfg, X, y, mesh,
+                  plan=ExecutionPlan(executor="ssp", rounds=5,
+                                     staleness=1))
 
 
 # ---------------------------------------------------------------------------
@@ -145,8 +157,9 @@ def test_lasso_converges_under_staleness(mesh):
                                          k_true=8)
     cfg = lasso.LassoConfig(num_features=80, lam=0.02, block_size=8,
                             num_candidates=32, rho=0.3, eta=1e-3)
-    _, tr = lasso.fit(cfg, X, y, mesh, num_rounds=42, trace_every=1,
-                      executor="ssp", staleness=2)
+    _, tr = lasso.fit(cfg, X, y, mesh,
+                      plan=ExecutionPlan(executor="ssp", rounds=42,
+                                         staleness=2, collect_every=1))
     vals = [v for _, v in tr]
     assert len(vals) == 42
     assert vals[-1] < vals[0] * 0.7             # real progress under s=2
@@ -158,8 +171,9 @@ def test_lda_ssp_conserves_counts_and_sync(mesh, rng):
     cfg = lda.LDAConfig(vocab=30, num_topics=4, num_workers=1,
                         tokens_per_worker=200, docs_per_worker=5)
     words, docs, z0 = lda.synthetic_corpus(rng, cfg, true_topics=4)
-    state, tr, _ = lda.fit(cfg, words, docs, z0, mesh, num_rounds=8,
-                           trace_every=4, executor="ssp", staleness=1)
+    state, tr, _ = lda.fit(cfg, words, docs, z0, mesh,
+                           plan=ExecutionPlan(executor="ssp", rounds=8,
+                                              staleness=1, collect_every=4))
     n_tok = int((words >= 0).sum())
     assert float(jnp.sum(state["B"])) == n_tok
     assert float(jnp.sum(state["D"])) == n_tok
