@@ -13,7 +13,7 @@ import sys
 import traceback
 
 from . import (bench_lasso, bench_lda, bench_memory, bench_mf,
-               bench_pipeline, bench_scaling, bench_ssp)
+               bench_pipeline, bench_scaling, bench_sched, bench_ssp)
 
 BENCHES = {
     "lasso": bench_lasso,       # Fig 8/9 right
@@ -23,6 +23,7 @@ BENCHES = {
     "scaling": bench_scaling,   # Fig 10
     "pipeline": bench_pipeline,  # loop vs scan vs pipelined executor
     "ssp": bench_ssp,           # bounded staleness vs BSP (repro.ps)
+    "sched": bench_sched,       # scheduler-policy ρ × U′ sweep (repro.sched)
 }
 
 

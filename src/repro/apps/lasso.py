@@ -9,17 +9,23 @@ dot products  z_{j,p} = (x_j^p)ᵀ r^p  over worker p's row shard (paper
 eq. 6, rearranged through the residual — algebraically identical, O(n·U)
 per round instead of O(n·J)).
 
-schedule (STRADS, dynamic):
+schedule (STRADS, dynamic — ``SchedulerSpec(kind="dynamic_priority")``):
   1. propose U′ candidates with prob c_j ∝ |β_j^(t−1) − β_j^(t−2)| + η  (f₁)
   2. schedule_stats: candidate Gram block G = Σ_p (X_C^p)ᵀ X_C^p  (psum)
   3. greedy ρ-filter: keep ≤ U candidates with pairwise |x_jᵀx_k| < ρ (f₂)
 
-schedule (Lasso-RR baseline): U uniform-random coordinates, no filter —
-imitating Shotgun [Bradley et al. 2011], which diverges on correlated
-designs when U is large.
+schedule (Lasso-RR baseline — ``kind="random"``): U uniform-random
+coordinates, no filter — imitating Shotgun [Bradley et al. 2011], which
+diverges on correlated designs when U is large.
 
 push:  z_{j,p} = (x_j^p)ᵀ r^p                                  (f₃)
 pull:  β_j ← S(Σ_p z_{j,p} + β_j, λ);  r^p ← r^p − X_B^p Δβ_B  (f₄ + sync)
+
+The policy is injected (v2 scheduler-injection contract): the app only
+declares its default ``SchedulerSpec`` (from ``cfg.scheduler``) and
+consumes whatever the plan resolves — swapping ρ/U′/kind is a plan edit,
+not an app change.  The Δβ priority history is the engine-owned scheduler
+carry (``EngineCarry.sched_carry``), no longer a state leaf.
 """
 from __future__ import annotations
 
@@ -31,10 +37,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import (DynamicPriorityScheduler, StradsAppBase,
-                        StradsEngine)
+from repro.core import StradsAppBase, StradsEngine
 from repro.core.compat import shard_map
 from repro.kernels import ops
+from repro.sched import SchedulerSpec
 
 from . import _exec
 
@@ -57,20 +63,44 @@ class LassoConfig:
 
 
 class StradsLasso(StradsAppBase):
-    """The paper's Lasso on STRADS primitives; scheduler selectable so the
-    Lasso-RR baseline is literally the same app with the filter removed
-    (exactly how the paper built its baseline)."""
+    """The paper's Lasso on STRADS primitives; the scheduler arrives by
+    injection, so the Lasso-RR baseline is literally the same app with a
+    ``kind="random"`` spec (exactly how the paper built its baseline)."""
+
+    supported_scheduler_kinds = ("dynamic_priority", "random",
+                                 "round_robin")
 
     def __init__(self, cfg: LassoConfig):
         self.cfg = cfg
-        self.needs_schedule_stats = cfg.scheduler == "strads"
-        self.dyn = DynamicPriorityScheduler(
-            num_vars=cfg.num_features,
-            num_candidates=(cfg.num_candidates if cfg.scheduler == "strads"
-                            else cfg.block_size),
-            block_size=cfg.block_size, rho=cfg.rho, eta=cfg.eta)
 
-    # -- state: β (replicated), Δβ history (replicated), r (row-sharded) ----
+    # -- scheduler injection -------------------------------------------------
+
+    def default_scheduler_spec(self) -> SchedulerSpec:
+        cfg = self.cfg
+        if cfg.scheduler == "strads":
+            return SchedulerSpec(kind="dynamic_priority",
+                                 block_size=cfg.block_size,
+                                 num_candidates=cfg.num_candidates,
+                                 rho=cfg.rho, eta=cfg.eta)
+        if cfg.scheduler == "rr":
+            return SchedulerSpec(kind="random", block_size=cfg.block_size)
+        if cfg.scheduler == "cyclic":
+            return SchedulerSpec(kind="round_robin",
+                                 block_size=cfg.block_size)
+        raise ValueError(f"LassoConfig.scheduler must be 'strads', 'rr' "
+                         f"or 'cyclic'; got {cfg.scheduler!r}")
+
+    def num_schedulable(self) -> int:
+        return self.cfg.num_features
+
+    @property
+    def needs_schedule_stats(self) -> bool:
+        # the Gram ρ-filter is the only policy needing the stats psum
+        return self.scheduler is not None and self.scheduler.needs_stats
+
+    # -- state: β (replicated), r (row-sharded) ------------------------------
+    # (the Δβ priority history is the injected scheduler's carry, owned by
+    # the engine — see EngineCarry.sched_carry)
 
     def init_state(self, rng, y=None):
         J = self.cfg.num_features
@@ -79,28 +109,19 @@ class StradsLasso(StradsAppBase):
                              "residual r = y at β = 0)")
         return {
             "beta": jnp.zeros((J,), jnp.float32),
-            "delta": self.dyn.init_carry(),         # scheduler scan carry
             "r": jnp.asarray(y, jnp.float32),       # r = y − Xβ, β=0
         }
 
     def state_specs(self):
-        return {"beta": P(), "delta": P(), "r": P("data")}
+        return {"beta": P(), "r": P("data")}
 
     def data_specs(self):
         return {"X": P("data"), "y": P("data")}
 
     # -- schedule ------------------------------------------------------------
 
-    def propose(self, state, rng, t, phase):
-        cfg = self.cfg
-        if cfg.scheduler == "strads":
-            return self.dyn.propose(state["delta"], rng)
-        if cfg.scheduler == "rr":
-            return jax.random.choice(rng, cfg.num_features,
-                                     shape=(cfg.block_size,), replace=False)
-        # cyclic round-robin
-        start = (t * cfg.block_size) % cfg.num_features
-        return (start + jnp.arange(cfg.block_size)) % cfg.num_features
+    def propose(self, state, carry, rng, t, phase):
+        return self.scheduler.propose(carry, rng, t, phase)
 
     def schedule_stats(self, data, state, candidates, phase):
         # Candidate Gram block over this worker's rows: (X_C^p)ᵀ X_C^p —
@@ -108,22 +129,18 @@ class StradsLasso(StradsAppBase):
         Xc = jnp.take(data["X"], candidates, axis=1)
         return ops.gram_block(Xc, backend=self.cfg.kernel_backend)
 
-    def schedule(self, state, candidates, stats, rng, t, phase):
-        if self.cfg.scheduler != "strads":
-            mask = jnp.ones((self.cfg.block_size,), bool)
-            return {"idx": candidates, "mask": mask}
-        idx, mask = self.dyn.finalize(candidates, stats)
+    def schedule(self, state, carry, candidates, stats, rng, t, phase):
+        idx, mask = self.scheduler.finalize(candidates, stats)
         return {"idx": idx, "mask": mask}
 
-    def var_roles(self):
-        # ``delta`` is the dynamic-priority table: declaring the role (v2
-        # protocol) makes the SSP window derive the in-flight exclusion —
-        # coordinates already proposed this window drop to the η priority
-        # floor, so later stale-read rounds pick fresh coordinates instead
-        # of compounding the same deferred update (the divergence mode of
-        # stale CD).
-        return {"delta": "priority"} if self.cfg.scheduler == "strads" \
-            else {}
+    def sched_update(self, carry, before, after, sched, phase):
+        # Feed the committed Δβ of the scheduled block back into the
+        # policy (f₁'s priority signal); stateless policies ignore it.
+        if carry is None:
+            return carry
+        idx, mask = sched["idx"], sched["mask"]
+        dx = jnp.take(after["beta"], idx) - jnp.take(before["beta"], idx)
+        return self.scheduler.update_carry(carry, idx, mask, dx)
 
     # -- push / pull ----------------------------------------------------------
 
@@ -147,13 +164,12 @@ class StradsLasso(StradsAppBase):
         # applies (mask already ensures kept indices are distinct).
         beta = state["beta"].at[idx].set(
             jnp.where(mask, beta_new, jnp.take(state["beta"], idx)))
-        delta = self.dyn.update_carry(state["delta"], idx, mask, d)
 
         # residual maintenance on this worker's rows (the automatic sync of
         # the shared quantity r):  r ← r − X_B Δβ
         Xb = jnp.take(data["X"], idx, axis=1)
         r = state["r"] - Xb @ (d * mask)
-        return {"beta": beta, "delta": delta, "r": r}
+        return {"beta": beta, "r": r}
 
     # -- objective -------------------------------------------------------------
 
@@ -207,10 +223,11 @@ def synthetic_correlated(rng: np.random.Generator, n: int, J: int,
     return X, y, beta_star
 
 
-def make_engine(cfg: LassoConfig, mesh) -> StradsEngine:
+def make_engine(cfg: LassoConfig, mesh,
+                scheduler: Optional[SchedulerSpec] = None) -> StradsEngine:
     app = StradsLasso(cfg)
     return StradsEngine(app, mesh, data_specs=app.data_specs(),
-                        state_specs=app.state_specs())
+                        state_specs=app.state_specs(), scheduler=scheduler)
 
 
 def fit(cfg: LassoConfig, X: np.ndarray, y: np.ndarray, mesh,
@@ -223,9 +240,11 @@ def fit(cfg: LassoConfig, X: np.ndarray, y: np.ndarray, mesh,
     executor (``"loop"`` host loop / ``"scan"`` one ``lax.scan`` program,
     bit-identical to the loop / ``"pipelined"`` one-round-stale schedule
     prefetch / ``"ssp"`` bounded staleness, at s=0 bit-identical to
-    ``"scan"``), rounds, and the ``collect_every`` trace cadence.  The
-    legacy ``executor=``/``staleness=``/``trace_every=`` kwargs still
-    work (deprecated, bit-identical).
+    ``"scan"``), rounds, the ``collect_every`` trace cadence, and the
+    scheduling policy (``plan.scheduler``, a ``SchedulerSpec`` — ``None``
+    runs the config's default policy).  The legacy
+    ``executor=``/``staleness=``/``trace_every=`` kwargs still work
+    (deprecated, bit-identical).
     """
     plan = _exec.resolve_plan(plan, num_rounds=num_rounds,
                               executor=executor, staleness=staleness,

@@ -45,6 +45,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import StradsAppBase, StradsEngine
 from repro.core.compat import shard_map
+from repro.sched import SchedulerSpec
 
 from . import _exec
 
@@ -106,11 +107,20 @@ def _gibbs_scan(cfg: LDAConfig, B, D, s, words, docs, z, active_mask,
 class StradsLDA(StradsAppBase):
     """Word-rotation model-parallel collapsed Gibbs on STRADS primitives."""
 
+    supported_scheduler_kinds = ("rotation",)
+
     def __init__(self, cfg: LDAConfig):
         self.cfg = cfg
         # one full rotation = U rounds; the scanned executor unrolls a
         # whole rotation per scan step so each ppermute stays static
         self.phase_period = cfg.num_workers
+
+    def default_scheduler_spec(self) -> SchedulerSpec:
+        # word-rotation over the U disjoint vocabulary blocks
+        return SchedulerSpec(kind="rotation")
+
+    def num_schedulable(self) -> int:
+        return self.cfg.padded_vocab
 
     def static_phase(self, t: int) -> int:
         return t % self.cfg.num_workers
@@ -132,12 +142,13 @@ class StradsLDA(StradsAppBase):
 
     def push(self, data, state, sched, phase):
         cfg = self.cfg
-        U = cfg.num_workers
-        p_fwd = [((d + phase) % U, d) for d in range(U)]   # block → worker
+        # the injected rotation policy owns the block↔worker assignment
+        # and the (static) ppermute communication pattern it implies
+        p_fwd = self.scheduler.forward_perm(phase)         # block → worker
         B = jax.lax.ppermute(state["B"], "data", p_fwd)
 
         p = jax.lax.axis_index("data")
-        block = (p + phase) % U
+        block = self.scheduler.block_for_worker(p, phase)
         block_start = block * cfg.block_vocab
         words, docs, z = data["words"], data["docs"], state["z"]
         active = (words >= 0) & (words // cfg.block_vocab == block)
@@ -150,7 +161,7 @@ class StradsLDA(StradsAppBase):
             block_start, rng)
 
         # send the processed block home
-        p_bwd = [(d, (d + phase) % U) for d in range(U)]
+        p_bwd = self.scheduler.backward_perm(phase)
         B_home = jax.lax.ppermute(B, "data", p_bwd)
 
         # partials for pull: fresh column sums + s-error numerator

@@ -37,6 +37,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import StradsAppBase, StradsEngine
 from repro.core.compat import shard_map
+from repro.sched import SchedulerSpec
 
 from . import _exec
 
@@ -54,6 +55,9 @@ class StradsMF(StradsAppBase):
     """Round-robin rank-wise CD on STRADS primitives."""
 
     phase_period = 2                     # H-phase / W-phase alternation
+    # rank blocks are mutually independent given the other factor — no
+    # dependency filter applies, so only the stateless dispatch kinds
+    supported_scheduler_kinds = ("round_robin", "random")
 
     def __init__(self, cfg: MFConfig):
         self.cfg = cfg
@@ -79,15 +83,30 @@ class StradsMF(StradsAppBase):
 
     # -- schedule: round-robin (phase, rank) --------------------------------
 
+    def default_scheduler_spec(self) -> SchedulerSpec:
+        # the paper's round-robin dispatch over the q_p / r_p index sets
+        return SchedulerSpec(kind="round_robin",
+                             block_size=self.cfg.ranks_per_round)
+
+    def num_schedulable(self) -> int:
+        return self.cfg.rank
+
     def static_phase(self, t: int) -> int:
         # Alternate H-phase (0) and W-phase (1) every round.
         return t % 2
 
-    def propose(self, state, rng, t, phase):
-        cfg = self.cfg
-        # rank block for this round: round-robin over K
-        base = (t // 2) * cfg.ranks_per_round
-        ks = (base + jnp.arange(cfg.ranks_per_round)) % cfg.rank
+    def propose(self, state, carry, rng, t, phase):
+        # rank block for this round: the injected policy over K ranks,
+        # advanced once per H/W cycle (two BSP rounds share a rank
+        # block).  Stochastic policies must draw the SAME block in both
+        # halves of a cycle, so the proposal key derives from the cycle
+        # index off a fixed base — the fold_in pattern LDA's Gibbs keys
+        # use — not from the per-round engine stream; like those Gibbs
+        # keys, the schedule sequence is therefore deterministic across
+        # runs regardless of the fit seed.
+        cyc = t // 2
+        key = jax.random.fold_in(jax.random.key(29), cyc)
+        ks = self.scheduler.propose(carry, key, cyc, phase)
         return {"ranks": ks}
 
     # -- push / pull ----------------------------------------------------------

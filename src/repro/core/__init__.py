@@ -1,23 +1,32 @@
-"""STRADS core: primitives, schedulers, BSP engine, sharded KV store."""
+"""STRADS core: primitives, BSP engine, sharded KV store, execution plans.
+
+Scheduling policy lives in its own subsystem, :mod:`repro.sched`
+(``SchedulerSpec`` + the ``Scheduler`` protocol); the classic scheduler
+names are re-exported here for compatibility, and the old
+``repro.core.schedulers`` / ``repro.core.block_scheduler`` module paths
+remain as deprecation shims.
+"""
 from .primitives import (RoundResult, StradsApp, StradsAppBase, tree_psum)
-from .schedulers import (DynamicPriorityScheduler, RandomScheduler,
-                         RotationScheduler, RoundRobinScheduler,
-                         dependency_filter, priority_weights,
-                         sample_candidates)
+from ..sched import (SCHEDULER_KINDS, Scheduler, SchedulerSpec,
+                     BlockStructuralScheduler, DynamicPriorityScheduler,
+                     RandomScheduler, RotationScheduler,
+                     RoundRobinScheduler, build_scheduler,
+                     dependency_filter, priority_weights,
+                     sample_candidates, structural_gram)
 from .engine import (EngineCarry, StradsEngine, single_device_mesh,
                      worker_mesh, DATA_AXIS)
 from .kvstore import (KVStore, VarSpec, VarTable, is_replicated,
                       specs_from_tree, store_from_tree)
 from .plan import EXECUTORS, ExecutionPlan, ExecutionReport
-from . import block_scheduler
 
 __all__ = [
     "RoundResult", "StradsApp", "StradsAppBase", "tree_psum",
-    "DynamicPriorityScheduler", "RandomScheduler", "RotationScheduler",
-    "RoundRobinScheduler", "dependency_filter", "priority_weights",
-    "sample_candidates", "EngineCarry", "StradsEngine",
+    "SCHEDULER_KINDS", "Scheduler", "SchedulerSpec",
+    "BlockStructuralScheduler", "DynamicPriorityScheduler",
+    "RandomScheduler", "RotationScheduler", "RoundRobinScheduler",
+    "build_scheduler", "dependency_filter", "priority_weights",
+    "sample_candidates", "structural_gram", "EngineCarry", "StradsEngine",
     "single_device_mesh", "worker_mesh", "DATA_AXIS", "KVStore",
     "VarSpec", "VarTable", "is_replicated", "specs_from_tree",
     "store_from_tree", "EXECUTORS", "ExecutionPlan", "ExecutionReport",
-    "block_scheduler",
 ]

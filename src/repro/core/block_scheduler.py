@@ -1,107 +1,27 @@
-"""Beyond-paper: STRADS block-coordinate scheduling for deep-net training.
+"""Deprecated shim: the block scheduler moved to :mod:`repro.sched.block`.
 
-The 2014 paper schedules *individual* model variables (Lasso coefficients,
-word-topic rows).  A 2026 Big Model has billions of parameters organized
-into natural blocks — transformer layers, MoE experts, embedding slices.
-This module transplants the paper's DynamicPriority schedule to those
-blocks:
-
-* priority  c_b ∝ ‖Δθ_b‖ + η            (the Lasso f₁ rule, per block)
-* dependency filter: adjacent layers are "correlated" (their gradients
-  flow through each other); we avoid co-scheduling blocks closer than
-  ``min_distance`` — the ρ filter with the graph distance standing in for
-  |x_jᵀx_k| (for deep nets the Gram surrogate is structural, not data-
-  dependent, so it costs nothing at runtime).
-* push/pull: the optimizer update for unscheduled blocks is masked to
-  zero, so per step only the scheduled blocks move — block-coordinate
-  descent over the network.
-
-The MoE router is the same idea executed at token granularity (router =
-schedule, expert FFN = push, weighted combine = pull, all_to_all = sync);
-see models/moe.py.
+``repro.core.block_scheduler`` re-exports the same names so old imports
+keep working (with a :class:`DeprecationWarning`, matching the PR 3 shim
+pattern); new code should import from :mod:`repro.sched.block`, where the
+structural distance filter is now a backend of the *same* greedy
+ρ-dependency filter the Lasso scheduler uses.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict
+import warnings
 
-import jax
-import jax.numpy as jnp
+warnings.warn(
+    "repro.core.block_scheduler moved to repro.sched.block (the pluggable "
+    "scheduler subsystem); import BlockScheduleConfig/select_blocks/"
+    "update_priority/mask_updates_by_block/block_norms from "
+    "repro.sched.block instead", DeprecationWarning, stacklevel=2)
 
-from .schedulers import sample_candidates
+from ..sched.block import (  # noqa: E402
+    BlockScheduleConfig, block_norms, config_from_spec, init_priority,
+    mask_updates_by_block, select_blocks, update_priority)
 
-
-@dataclasses.dataclass(frozen=True)
-class BlockScheduleConfig:
-    num_blocks: int
-    blocks_per_step: int          # U
-    candidates_per_step: int      # U' ≥ U
-    min_distance: int = 2         # dependency filter radius (layers)
-    eta: float = 1e-3             # exploration floor (paper's η)
-    ema: float = 0.9              # priority EMA decay
-
-
-def init_priority(cfg: BlockScheduleConfig) -> jax.Array:
-    """Uniform initial priorities (all blocks equally urgent)."""
-    return jnp.ones((cfg.num_blocks,), jnp.float32)
-
-
-def select_blocks(cfg: BlockScheduleConfig, priority: jax.Array,
-                  rng: jax.Array) -> jax.Array:
-    """schedule(): returns a (num_blocks,) 0/1 mask of blocks to update."""
-    cand = sample_candidates(rng, priority + cfg.eta, cfg.candidates_per_step)
-
-    # Greedy distance filter over candidates (ρ-filter, structural form).
-    def body(i, carry):
-        mask, count = carry
-        j = cand[i]
-        pos = jnp.arange(cfg.num_blocks)
-        near = (jnp.abs(pos - j) < cfg.min_distance) & (mask > 0)
-        ok = (~jnp.any(near)) & (count < cfg.blocks_per_step)
-        mask = mask.at[j].set(jnp.where(ok, 1.0, mask[j]))
-        return mask, count + ok.astype(jnp.int32)
-
-    mask0 = jnp.zeros((cfg.num_blocks,), jnp.float32)
-    mask, _ = jax.lax.fori_loop(0, cfg.candidates_per_step, body,
-                                (mask0, jnp.int32(0)))
-    return mask
-
-
-def update_priority(cfg: BlockScheduleConfig, priority: jax.Array,
-                    block_update_norms: jax.Array,
-                    scheduled: jax.Array) -> jax.Array:
-    """pull-side bookkeeping: EMA of per-block update magnitude.
-
-    Only scheduled blocks observed an update this step; unscheduled blocks
-    keep their stale priority (they will decay toward rescheduling via η)."""
-    new = cfg.ema * priority + (1 - cfg.ema) * block_update_norms
-    return jnp.where(scheduled > 0, new, priority)
-
-
-def mask_updates_by_block(updates: Any, block_of_param: Dict[str, int],
-                          mask: jax.Array) -> Any:
-    """Zero the optimizer update of every parameter whose block is
-    unscheduled.  ``block_of_param`` maps flattened param path → block id."""
-    flat = jax.tree_util.tree_flatten_with_path(updates)
-    leaves, treedef = flat
-    out = []
-    for path, leaf in leaves:
-        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                        for p in path)
-        b = block_of_param.get(name, None)
-        out.append(leaf if b is None else leaf * mask[b])
-    return jax.tree_util.tree_unflatten(treedef, out)
-
-
-def block_norms(updates: Any, block_of_param: Dict[str, int],
-                num_blocks: int) -> jax.Array:
-    """Per-block L2 norm of the (pre-mask) updates — feeds priorities."""
-    leaves, _ = jax.tree_util.tree_flatten_with_path(updates)
-    sq = jnp.zeros((num_blocks,), jnp.float32)
-    for path, leaf in leaves:
-        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                        for p in path)
-        b = block_of_param.get(name, None)
-        if b is not None:
-            sq = sq.at[b].add(jnp.sum(jnp.square(leaf).astype(jnp.float32)))
-    return jnp.sqrt(sq)
+__all__ = [
+    "BlockScheduleConfig", "block_norms", "config_from_spec",
+    "init_priority", "mask_updates_by_block", "select_blocks",
+    "update_priority",
+]

@@ -11,8 +11,8 @@ automatic: SPMD program order is the BSP barrier (DESIGN.md §3).
 
 The one public entry point is :meth:`StradsEngine.execute`, driven by a
 declarative :class:`~repro.core.plan.ExecutionPlan` (executor choice,
-rounds, staleness, unrolling, checkpoint cadence — validated at plan
-construction) and returning a uniform
+rounds, staleness, unrolling, checkpoint cadence, **scheduling policy**
+— validated at plan construction) and returning a uniform
 :class:`~repro.core.plan.ExecutionReport` (state, trace, telemetry,
 resumable carry).  Under it, four execution paths share one traced round
 body:
@@ -44,9 +44,18 @@ e.g. LDA's rotation over U workers, MF's H/W alternation) get L rounds
 unrolled per scan step so every ``phase`` stays a static Python int (the
 LDA ``ppermute`` needs a static permutation).
 
-Scheduler state (e.g. ``DynamicPriorityScheduler``'s Δx history) must
-live in the state pytree / scan carry, never host-side — see
-``schedulers.init_carry``/``update_carry``.
+Scheduling policy is **injected** (the v2 scheduler-injection contract,
+:mod:`repro.core.primitives`): the engine resolves
+``plan.scheduler`` — or the app's ``default_scheduler_spec()`` — into a
+:class:`~repro.sched.protocol.Scheduler` and hands it to the app before
+tracing.  The scheduler's on-device state (e.g.
+``DynamicPriorityScheduler``'s Δx history) is the engine-owned
+**scheduler carry**: created by ``scheduler.init_carry()``, threaded
+through every executor's scan carry, folded forward by the app's
+``sched_update`` after each committed round, and returned (and resumed)
+as :attr:`EngineCarry.sched_carry` — never an app-state stowaway, so it
+checkpoints through ``checkpoint/npz`` with the PRNG stream and round
+counter.
 
 The engine runs identically on a single device (unit tests, laptop-scale
 experiments) and on multi-chip meshes; the production 256/512-chip
@@ -56,6 +65,7 @@ executor).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Any, Callable, Optional
 
@@ -63,12 +73,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..sched import SchedulerSpec, build_scheduler
 from .compat import make_mesh, shard_map
 from .kvstore import KVStore, store_from_tree
 from .plan import ExecutionPlan, ExecutionReport
 from .primitives import RoundResult, StradsApp, StradsAppBase, tree_psum
 
 DATA_AXIS = "data"
+
+_UNSET = object()
 
 
 def _replicate_spec(tree: Any) -> Any:
@@ -79,12 +92,15 @@ def _replicate_spec(tree: Any) -> Any:
 @dataclasses.dataclass(frozen=True)
 class EngineCarry:
     """Resumable carry of the loop/scanned executors: PRNG stream, next
-    round index, and (pipelined only) the in-flight prefetched schedule.
-    The SSP twin (with vector clocks) is :class:`repro.ps.ssp.SSPCarry`;
-    both round-trip through ``checkpoint/npz``."""
+    round index, the engine-owned scheduler carry (e.g. the Δx priority
+    history; ``None`` for stateless policies), and (pipelined only) the
+    in-flight prefetched schedule.  The SSP twin (with vector clocks) is
+    :class:`repro.ps.ssp.SSPCarry`; both round-trip through
+    ``checkpoint/npz``."""
     rng: jax.Array
     t: jax.Array                  # int32: next round index
     sched: Any = None             # depth-1 prefetched schedule (else None)
+    sched_carry: Any = None       # scheduler carry (Δx history, …)
 
 
 class StradsEngine:
@@ -99,20 +115,104 @@ class StradsEngine:
                  (``P()``) behave like the paper's synced KV-store values;
                  sharded leaves are worker-local model partitions (model
                  parallelism — the Fig-3 memory win).
+    scheduler:   optional :class:`~repro.sched.spec.SchedulerSpec`
+                 overriding the app's ``default_scheduler_spec()`` from
+                 construction time (``execute`` re-resolves per plan).
     """
 
     def __init__(self, app: StradsApp, mesh: Mesh, data_specs: Any,
-                 state_specs: Any = None):
+                 state_specs: Any = None,
+                 scheduler: Optional[SchedulerSpec] = None):
         self.app = app
         self.mesh = mesh
         self.data_specs = data_specs
         self.state_specs = state_specs
-        self._needs_stats = getattr(
-            app, "needs_schedule_stats",
-            type(app).schedule_stats is not StradsAppBase.schedule_stats)
-        self._round = self._build_round()
         self._scan_cache: dict = {}
+        self._active_spec: Optional[SchedulerSpec] = None
+        self._round = None
+        # a constructor spec outranks the app default whenever a plan
+        # leaves its scheduler field None (plan > constructor > app)
+        self._spec_override = scheduler
+        self.set_scheduler(None)
         self.kvstore: Optional[KVStore] = None   # built by place_state
+
+    # -- scheduler injection (the v2 contract) -------------------------------
+
+    def set_scheduler(self, spec: Optional[SchedulerSpec] = None):
+        """Resolve a :class:`~repro.sched.spec.SchedulerSpec` (``None`` →
+        the engine's constructor spec, else the app's
+        ``default_scheduler_spec()``) into a
+        :class:`~repro.sched.protocol.Scheduler`, inject it into the app,
+        and rebind the traced round programs.  Idempotent for an
+        unchanged spec, and compiled programs are cached per spec, so
+        swapping policies back and forth never recompiles.  Returns the
+        active scheduler (or ``None`` for self-scheduling apps)."""
+        if spec is None:
+            spec = self._spec_override
+        resolved = spec if spec is not None else self._default_spec()
+        if resolved == self._active_spec and self._round is not None:
+            return self.scheduler
+        sched = None
+        if resolved is not None:
+            kinds = getattr(self.app, "supported_scheduler_kinds", None)
+            if kinds is not None and resolved.kind not in kinds:
+                raise ValueError(
+                    f"{type(self.app).__name__} cannot consume a "
+                    f"{resolved.kind!r} scheduler (it supports "
+                    f"{sorted(kinds)}); fix the plan's SchedulerSpec")
+            sched = build_scheduler(
+                resolved, num_vars=self.app.num_schedulable(),
+                num_workers=self.mesh.shape[DATA_AXIS])
+        if hasattr(self.app, "use_scheduler"):
+            self.app.use_scheduler(sched)
+        else:
+            # protocol-only apps: always (re)assign, so resolving back
+            # to a spec-less policy actually clears the old scheduler
+            self.app.scheduler = sched
+        self._active_spec = resolved
+        self._needs_stats = getattr(
+            self.app, "needs_schedule_stats",
+            type(self.app).schedule_stats
+            is not StradsAppBase.schedule_stats)
+        # Compiled programs are cached PER SPEC (every _scan_cache key
+        # carries the active spec), so swapping policies back and forth
+        # — a plan sweep — reuses each policy's compiled programs
+        # instead of recompiling on every switch.
+        key = ("round", resolved)
+        self._round = self._scan_cache.get(key)
+        if self._round is None:
+            self._round = self._build_round()
+            self._scan_cache[key] = self._round
+        return sched
+
+    def _default_spec(self) -> Optional[SchedulerSpec]:
+        fn = getattr(self.app, "default_scheduler_spec", None)
+        return fn() if callable(fn) else None
+
+    @property
+    def scheduler(self):
+        """The injected :class:`~repro.sched.protocol.Scheduler` (``None``
+        for apps that schedule themselves)."""
+        return getattr(self.app, "scheduler", None)
+
+    @property
+    def scheduler_spec(self) -> Optional[SchedulerSpec]:
+        """The resolved spec of the active scheduler (for artifacts)."""
+        return self._active_spec
+
+    def init_sched_carry(self):
+        """A fresh engine-owned scheduler carry (``None`` when the policy
+        is stateless or the app self-schedules)."""
+        sched = self.scheduler
+        return sched.init_carry() if sched is not None else None
+
+    def mark_sched_carry(self, carry, candidates):
+        """The SSP in-flight exclusion over the scheduler carry (identity
+        without an injected scheduler — state-resident priority tables go
+        through :class:`~repro.core.kvstore.VarTable` instead)."""
+        sched = self.scheduler
+        return (sched.mark_scheduled(carry, candidates)
+                if sched is not None else carry)
 
     # -- traced round pieces (shared by every executor) ---------------------
 
@@ -125,11 +225,11 @@ class StradsEngine:
         return (_replicate_spec(state) if self.state_specs is None
                 else self.state_specs)
 
-    def _make_schedule(self, state, data, rng, t, phase):
+    def _make_schedule(self, state, carry, data, rng, t, phase):
         """propose → [schedule_stats → psum] → schedule (replicated)."""
         app = self.app
         r1, r2 = jax.random.split(rng)
-        cand = app.propose(state, r1, t, phase)
+        cand = app.propose(state, carry, r1, t, phase)
         if self._needs_stats:
             def stats_fn(data, state, cand):
                 s = app.schedule_stats(data, state, cand, phase)
@@ -142,7 +242,7 @@ class StradsEngine:
             )(data, state, cand)
         else:
             stats = None
-        return app.schedule(state, cand, stats, r2, t, phase)
+        return app.schedule(state, carry, cand, stats, r2, t, phase)
 
     def _apply(self, state, data, sched, phase):
         """push → psum → pull under shard_map (the BSP update + sync)."""
@@ -160,12 +260,19 @@ class StradsEngine:
             out_specs=sspec,
         )(data, state, sched)
 
+    def _sched_update(self, carry, before, after, sched, phase):
+        fn = getattr(self.app, "sched_update", None)
+        return fn(carry, before, after, sched, phase) if fn else carry
+
     def _build_round(self):
-        @partial(jax.jit, static_argnums=(3,))
-        def round_fn(state, data, rng, phase, t):
-            sched = self._make_schedule(state, data, rng, t, phase)
+        @partial(jax.jit, static_argnums=(4,))
+        def round_fn(state, carry, data, rng, phase, t):
+            sched = self._make_schedule(state, carry, data, rng, t, phase)
             new_state = self._apply(state, data, sched, phase)
-            return RoundResult(state=new_state, sched=sched)
+            new_carry = self._sched_update(carry, state, new_state, sched,
+                                           phase)
+            return RoundResult(state=new_state, sched=sched,
+                               sched_carry=new_carry)
 
         return round_fn
 
@@ -179,8 +286,9 @@ class StradsEngine:
 
     def app_roles(self) -> dict:
         """The app's declarative VarSpec role map (``var_roles()``; see
-        :class:`~repro.core.kvstore.VarSpec` — e.g. ``"priority"`` leaves
-        the SSP window scheduler masks for in-flight exclusion)."""
+        :class:`~repro.core.kvstore.VarSpec` — ``"priority"`` leaves the
+        SSP window scheduler masks for in-flight exclusion when an app
+        keeps its priority table in state rather than the engine carry)."""
         fn = getattr(self.app, "var_roles", None)
         return dict(fn()) if callable(fn) else {}
 
@@ -201,9 +309,26 @@ class StradsEngine:
 
     # -- execution: host loop ------------------------------------------------
 
-    def run_round(self, state, data, rng, t: int = 0) -> RoundResult:
+    def run_round(self, state, data, rng, t: int = 0,
+                  sched_carry: Any = _UNSET) -> RoundResult:
+        """One jitted BSP round.  ``sched_carry`` defaults to a fresh
+        ``scheduler.init_carry()``; thread ``result.sched_carry`` back in
+        to keep a stateful policy's priorities evolving across rounds
+        (omitting it at t > 0 warns — the priorities silently reset to
+        uniform, which is almost never what a round loop wants; use
+        :meth:`run`/:meth:`execute` for whole runs)."""
         phase = self.app.static_phase(t)
-        return self._round(state, data, rng, phase, jnp.int32(t))
+        if sched_carry is _UNSET:
+            sched_carry = self.init_sched_carry()
+            if t and sched_carry is not None:
+                warnings.warn(
+                    "run_round(t>0) without sched_carry reinitializes "
+                    "the stateful scheduler's priorities every call; "
+                    "thread result.sched_carry between rounds (or drive "
+                    "the run through run/execute)", UserWarning,
+                    stacklevel=2)
+        return self._round(state, sched_carry, data, rng, phase,
+                           jnp.int32(t))
 
     def run(self, state, data, rng, num_rounds: int, callback=None):
         """Drive ``num_rounds`` BSP rounds (host loop; each round jitted).
@@ -216,6 +341,10 @@ class StradsEngine:
         if num_rounds < 1:
             return state
         plan = ExecutionPlan(executor="loop", rounds=num_rounds)
+        # execute-equivalence includes the policy: re-resolve the
+        # default spec so a scheduler swept in by a previous
+        # execute(plan.scheduler=...) cannot leak into this run
+        self.set_scheduler(None)
         return self._execute_span(state, data, rng, plan, num_rounds, 0,
                                   None, None, callback).state
 
@@ -226,6 +355,7 @@ class StradsEngine:
                     collect: Optional[Callable[[Any], Any]] = None,
                     donate: bool = True, unroll: int = 1,
                     t0: int = 0, sched0: Any = None,
+                    sched_carry0: Any = _UNSET,
                     return_carry: bool = False):
         """Execute ``num_rounds`` rounds as one XLA program.
 
@@ -251,11 +381,14 @@ class StradsEngine:
         ``unroll × phase_period`` rounds per step — bit-identical, fewer
         scan iterations.
 
-        ``t0``/``sched0`` resume a previous run (pass the values from an
-        :class:`EngineCarry`; ``t0`` must be a multiple of the phase
-        period, ``sched0`` is only meaningful at depth 1 where it is the
-        prefetched in-flight schedule).  ``return_carry=True`` appends the
-        final carry to the return value.
+        ``t0``/``sched0``/``sched_carry0`` resume a previous run (pass
+        the values from an :class:`EngineCarry`; ``t0`` must be a
+        multiple of the phase period, ``sched0`` is only meaningful at
+        depth 1 where it is the prefetched in-flight schedule, and
+        ``sched_carry0`` is the scheduler carry — omitted, a fresh
+        ``scheduler.init_carry()`` is used, which is only correct at
+        ``t0=0``).  ``return_carry=True`` appends the final carry to the
+        return value.
 
         Returns ``state`` (plus ``trace`` when collecting, plus ``carry``
         when requested).
@@ -275,6 +408,15 @@ class StradsEngine:
         if sched0 is not None and pipeline_depth != 1:
             raise ValueError("sched0 only resumes the pipelined executor "
                              "(pipeline_depth=1)")
+        if sched_carry0 is _UNSET:
+            sched_carry0 = self.init_sched_carry()
+            if t0 and sched_carry0 is not None:
+                warnings.warn(
+                    "run_scanned(t0>0) without sched_carry0 "
+                    "reinitializes the stateful scheduler's priorities; "
+                    "pass the EngineCarry.sched_carry a previous run "
+                    "returned for a bit-exact resume", UserWarning,
+                    stacklevel=2)
         L = period * unroll
         num_steps, tail = divmod(num_rounds, L)
         if tail and pipeline_depth == 1:
@@ -285,13 +427,14 @@ class StradsEngine:
 
         traces = []
         sched_c = sched0
+        sc = sched_carry0
         if num_steps:
             fn = self._get_scan_fn(num_steps, pipeline_depth, collect,
                                    donate, unroll, sched0 is not None)
-            args = (state, data, rng, jnp.int32(t0))
+            args = (state, data, rng, jnp.int32(t0), sc)
             if sched0 is not None:
                 args += (sched0,)
-            state, rng, sched_c, ys = fn(*args)
+            state, rng, sched_c, sc, ys = fn(*args)
             if collect is not None:
                 traces.append(ys)
 
@@ -300,8 +443,8 @@ class StradsEngine:
         for k in range(tail):
             t = t0 + num_steps * L + k
             rng, sub = jax.random.split(rng)
-            out = self.run_round(state, data, sub, t)
-            state = out.state
+            out = self.run_round(state, data, sub, t, sched_carry=sc)
+            state, sc = out.state, out.sched_carry
             if collect is not None:
                 traces.append(jax.tree.map(
                     lambda x: jnp.asarray(x)[None], collect(state)))
@@ -313,25 +456,31 @@ class StradsEngine:
                        if len(traces) > 1 else traces[0])
         if return_carry:
             ret.append(EngineCarry(rng=rng, t=jnp.int32(t0 + num_rounds),
-                                   sched=sched_c))
+                                   sched=sched_c, sched_carry=sc))
         return ret[0] if len(ret) == 1 else tuple(ret)
 
     def scanned_fn(self, num_rounds: int, *, pipeline_depth: int = 0,
                    collect: Optional[Callable] = None,
                    donate: bool = True, unroll: int = 1):
-        """The jitted ``(state, data, rng, t0) → (state, rng, sched,
-        trace)`` multi-round program, exposed for AOT
+        """The jitted ``(state, data, rng, t0, sched_carry) → (state, rng,
+        sched, sched_carry, trace)`` multi-round program, exposed for AOT
         ``.lower().compile()`` (the production-mesh dry-run in
-        ``launch/dryrun.py``).  ``num_rounds`` must be a multiple of
-        ``phase_period × unroll``."""
+        ``launch/dryrun.py``; pass ``engine.init_sched_carry()`` for a
+        fresh run).  ``num_rounds`` must be a multiple of ``phase_period
+        × unroll``."""
         num_steps, tail = divmod(num_rounds, self.phase_period * unroll)
         if tail or num_steps == 0:
             raise ValueError(
                 f"num_rounds must be a positive multiple of phase_period "
                 f"× unroll ({self.phase_period * unroll}); got "
                 f"{num_rounds}")
-        return self._get_scan_fn(num_steps, pipeline_depth, collect,
-                                 donate, unroll, False)
+        # pin the handle to the active policy: it traces lazily, and a
+        # set_scheduler swap between fetch and first call would
+        # otherwise bake the wrong scheduler into the per-spec cache
+        return _SpecBoundFn(self, self._active_spec,
+                            self._get_scan_fn(num_steps, pipeline_depth,
+                                              collect, donate, unroll,
+                                              False))
 
     # -- execution: SSP (bounded staleness — repro.ps) -----------------------
 
@@ -352,8 +501,9 @@ class StradsEngine:
         ``.lower().compile()`` (``launch/dryrun.py --engine --staleness``).
         """
         from ..ps.ssp import ssp_fn
-        return ssp_fn(self, num_rounds, staleness=staleness,
-                      collect=collect, donate=donate)
+        return _SpecBoundFn(self, self._active_spec,
+                            ssp_fn(self, num_rounds, staleness=staleness,
+                                   collect=collect, donate=donate))
 
     # -- execution: the unified entry point ----------------------------------
 
@@ -366,6 +516,12 @@ class StradsEngine:
         :meth:`run_ssp` and returns a uniform
         :class:`~repro.core.plan.ExecutionReport`.
 
+        ``plan.scheduler`` (a :class:`~repro.sched.spec.SchedulerSpec`)
+        selects the scheduling policy; ``None`` resolves to the app's
+        ``default_scheduler_spec()``.  Either way the resolved scheduler
+        is injected before tracing and its carry is threaded through the
+        run (and the report's resumable ``carry``).
+
         ``collect(state) -> pytree`` is evaluated after every executed
         round (the report's ``trace`` stacks the results).  ``callback(t,
         state, round_result)`` is the host-loop hook and therefore
@@ -373,9 +529,9 @@ class StradsEngine:
 
         ``carry`` resumes a previous report's run of the *same* plan:
         rounds ``carry.t .. plan.rounds`` execute with the carried PRNG
-        stream/clocks/prefetched schedule, so an interrupted run matches
-        an uninterrupted one bit-for-bit (``rng`` is taken from the carry
-        and the argument is ignored).
+        stream/clocks/scheduler carry/prefetched schedule, so an
+        interrupted run matches an uninterrupted one bit-for-bit (``rng``
+        is taken from the carry and the argument is ignored).
 
         ``ckpt_dir`` + ``plan.checkpoint_every`` chunk the run and save a
         ``{"state", "carry"}`` checkpoint via :mod:`repro.checkpoint`
@@ -394,6 +550,7 @@ class StradsEngine:
         if callback is not None and plan.executor != "loop":
             raise ValueError("callback is a host-loop hook; it requires "
                              f"executor='loop' (got {plan.executor!r})")
+        self.set_scheduler(plan.scheduler)
         t_done = 0
         if carry is not None:
             if plan.executor == "ssp" and not hasattr(carry, "clocks"):
@@ -409,6 +566,19 @@ class StradsEngine:
                                  "carried in-flight schedule (carry.sched "
                                  "is None — was this carry produced by a "
                                  "different executor?)")
+            stateful = self.init_sched_carry() is not None
+            prev_sc = getattr(carry, "sched_carry", None)
+            if stateful and prev_sc is None:
+                raise ValueError(
+                    "resuming this plan needs the scheduler carry, but "
+                    "carry.sched_carry is None — was this carry produced "
+                    "under a different (stateless) SchedulerSpec?")
+            if not stateful and prev_sc is not None:
+                raise ValueError(
+                    "carry.sched_carry holds a stateful scheduler's "
+                    "history, but the plan's resolved policy is "
+                    "stateless — the SchedulerSpec must match across "
+                    "resume")
             t_done = int(carry.t)
             if not 0 <= t_done < plan.rounds:
                 raise ValueError(f"carry.t={t_done} leaves no rounds of "
@@ -493,6 +663,8 @@ class StradsEngine:
                       callback) -> ExecutionReport:
         """One contiguous span of a plan (the whole plan, or one
         checkpoint chunk), dispatched to the executor it names."""
+        sc0 = (prev_carry.sched_carry if prev_carry is not None
+               else self.init_sched_carry())
         if plan.executor == "loop":
             cfn = None
             if collect is not None:
@@ -504,11 +676,12 @@ class StradsEngine:
                     self._scan_cache[key] = cfn
             ys: list = []
             executed = 0
+            sc = sc0
             for k in range(rounds):
                 t = t0 + k
                 rng, sub = jax.random.split(rng)
-                out = self.run_round(state, data, sub, t)
-                state = out.state
+                out = self.run_round(state, data, sub, t, sched_carry=sc)
+                state, sc = out.state, out.sched_carry
                 executed = k + 1
                 if cfn is not None:
                     ys.append(cfn(state))
@@ -516,7 +689,8 @@ class StradsEngine:
                     break
             trace = (jax.tree.map(lambda *xs: jnp.stack(xs), *ys)
                      if ys else None)
-            carry = EngineCarry(rng=rng, t=jnp.int32(t0 + executed))
+            carry = EngineCarry(rng=rng, t=jnp.int32(t0 + executed),
+                                sched_carry=sc)
             return ExecutionReport(state=state, trace=trace,
                                    carry=carry, plan=plan)
 
@@ -526,7 +700,7 @@ class StradsEngine:
                 state, data, rng, rounds, pipeline_depth=plan.depth,
                 collect=collect, donate=plan.donate,
                 unroll=plan.phase_unroll, t0=t0, sched0=sched0,
-                return_carry=True)
+                sched_carry0=sc0, return_carry=True)
             if collect is None:
                 state, carry = out
                 trace = None
@@ -541,7 +715,7 @@ class StradsEngine:
             state, data, rng, rounds, staleness=plan.staleness,
             collect=collect, donate=plan.donate,
             with_telemetry=plan.telemetry, t0=t0, clocks=clocks,
-            return_carry=True)
+            sched_carry0=sc0, return_carry=True)
         parts = list(out if isinstance(out, tuple) else (out,))
         state = parts.pop(0)
         trace = parts.pop(0) if collect is not None else None
@@ -553,7 +727,8 @@ class StradsEngine:
     def _get_scan_fn(self, num_steps: int, depth: int,
                      collect: Optional[Callable], donate: bool,
                      unroll: int = 1, with_sched0: bool = False):
-        key = (num_steps, depth, collect, donate, unroll, with_sched0)
+        key = (self._active_spec, num_steps, depth, collect, donate,
+               unroll, with_sched0)
         fn = self._scan_cache.get(key)
         if fn is None:
             fn = self._build_scan(num_steps, depth, collect, donate,
@@ -567,67 +742,99 @@ class StradsEngine:
         period = self.phase_period
         L = period * unroll           # rounds per scan step
 
-        def one_round(state, data, rng, t, phase, ys):
+        def one_round(state, sc, data, rng, t, phase, ys):
             # Depth-0 inner round: fresh schedule, then update — the exact
             # op/PRNG order of the host-loop round.
-            sched = self._make_schedule(state, data, rng, t, phase)
-            state = self._apply(state, data, sched, phase)
+            sched = self._make_schedule(state, sc, data, rng, t, phase)
+            new_state = self._apply(state, data, sched, phase)
+            sc = self._sched_update(sc, state, new_state, sched, phase)
             if collect is not None:
-                ys.append(collect(state))
-            return state
+                ys.append(collect(new_state))
+            return new_state, sc
 
-        def scanned(state, data, rng, t0, *sched0):
+        def scanned(state, data, rng, t0, sc0, *sched0):
             if depth == 0:
                 def step(carry, _):
-                    state, rng, tc = carry
+                    state, rng, tc, sc = carry
                     ys: list = []
                     for i in range(L):
                         rng, sub = jax.random.split(rng)
-                        state = one_round(state, data, sub, tc + i,
-                                          i % period, ys)
-                    return ((state, rng, tc + L),
+                        state, sc = one_round(state, sc, data, sub,
+                                              tc + i, i % period, ys)
+                    return ((state, rng, tc + L, sc),
                             _stack_rounds(ys) if collect else None)
 
-                (state, rng, _), ys = jax.lax.scan(
-                    step, (state, rng, t0), None, length=num_steps)
+                (state, rng, _, sc), ys = jax.lax.scan(
+                    step, (state, rng, t0, sc0), None, length=num_steps)
                 sched = None
             else:
                 # Pipelined: carry the next round's schedule.  At the top
                 # of step t we compute sched_{t+1} from the *pre-update*
-                # state — it is independent of round t's push/pull, so the
-                # two overlap; the executed schedule is one round stale.
+                # state and scheduler carry — it is independent of round
+                # t's push/pull, so the two overlap; the executed schedule
+                # is one round stale.
                 if with_sched0:
                     sched = sched0[0]       # resumed in-flight schedule
                 else:
                     rng, sub = jax.random.split(rng)
-                    sched = self._make_schedule(state, data, sub, t0, 0)
+                    sched = self._make_schedule(state, sc0, data, sub,
+                                                t0, 0)
 
                 def step(carry, _):
-                    state, rng, tc, sched = carry
+                    state, rng, tc, sc, sched = carry
                     ys: list = []
                     for i in range(L):
                         t = tc + i
                         rng, sub = jax.random.split(rng)
                         sched_next = self._make_schedule(
-                            state, data, sub, t + 1, (i + 1) % period)
-                        state = self._apply(state, data, sched, i % period)
+                            state, sc, data, sub, t + 1, (i + 1) % period)
+                        new_state = self._apply(state, data, sched,
+                                                i % period)
+                        sc = self._sched_update(sc, state, new_state,
+                                                sched, i % period)
+                        state = new_state
                         sched = sched_next
                         if collect is not None:
                             ys.append(collect(state))
-                    return ((state, rng, tc + L, sched),
+                    return ((state, rng, tc + L, sc, sched),
                             _stack_rounds(ys) if collect else None)
 
-                (state, rng, _, sched), ys = jax.lax.scan(
-                    step, (state, rng, t0, sched), None, length=num_steps)
+                (state, rng, _, sc, sched), ys = jax.lax.scan(
+                    step, (state, rng, t0, sc0, sched), None,
+                    length=num_steps)
 
             if collect is not None:
                 # (num_steps, L, ...) → (num_rounds, ...)
                 ys = jax.tree.map(
                     lambda x: x.reshape((num_steps * L,) + x.shape[2:]),
                     ys)
-            return state, rng, sched, ys
+            return state, rng, sched, sc, ys
 
         return jax.jit(scanned, donate_argnums=(0,) if donate else ())
+
+
+class _SpecBoundFn:
+    """A compiled-program handle pinned to the SchedulerSpec it was
+    requested under.  The underlying jit fn traces lazily (at first
+    call/lower) against whatever scheduler is then installed on the app,
+    so a handle obtained before a ``set_scheduler`` swap would otherwise
+    silently bake the *wrong* policy into the per-spec cache; this
+    wrapper reinstalls its owning spec first (a cheap no-op when it is
+    already active)."""
+
+    def __init__(self, eng: "StradsEngine", spec, fn):
+        self._eng, self._spec, self._fn = eng, spec, fn
+
+    def _bind(self):
+        self._eng.set_scheduler(self._spec)
+
+    def __call__(self, *args, **kw):
+        self._bind()
+        return self._fn(*args, **kw)
+
+    def lower(self, *args, **kw):
+        self._bind()
+        return self._fn.lower(*args, **kw)
 
 
 def _stack_rounds(ys: list):

@@ -31,6 +31,8 @@ import dataclasses
 import json
 from typing import Any, Optional
 
+from ..sched.spec import SchedulerSpec
+
 EXECUTORS = ("loop", "scan", "pipelined", "ssp")
 
 # The one place the executor-name error is worded (apps/_exec.py used to
@@ -74,6 +76,14 @@ class ExecutionPlan:
                      a value is validated against the engine's mesh and
                      used by drivers (``dryrun --plan``) to *build* the
                      mesh.
+    scheduler:       the scheduling policy, as a declarative
+                     :class:`~repro.sched.spec.SchedulerSpec` (kind ∈
+                     round_robin | random | rotation | dynamic_priority |
+                     block_structural plus its parameters).  ``None`` =
+                     the app's ``default_scheduler_spec()``; a value is
+                     resolved and injected by ``StradsEngine.execute``,
+                     so ``fit(plan=...)`` overrides policy without
+                     touching app config.
     """
 
     executor: str = "scan"
@@ -86,6 +96,7 @@ class ExecutionPlan:
     collect_every: int = 0
     donate: bool = True
     workers: Optional[int] = None
+    scheduler: Optional[SchedulerSpec] = None
 
     def __post_init__(self):
         if self.executor not in EXECUTORS:
@@ -132,6 +143,12 @@ class ExecutionPlan:
                                          or self.workers < 1):
             raise ValueError(f"workers must be None or a positive int; "
                              f"got {self.workers!r}")
+        if self.scheduler is not None \
+                and not isinstance(self.scheduler, SchedulerSpec):
+            raise ValueError(
+                f"scheduler must be None or a repro.sched.SchedulerSpec "
+                f"(its own __post_init__ validates the policy); got "
+                f"{type(self.scheduler).__name__}")
 
     # -- derived views -------------------------------------------------------
 
@@ -163,6 +180,9 @@ class ExecutionPlan:
         if unknown:
             raise ValueError(f"unknown ExecutionPlan field(s): "
                              f"{sorted(unknown)}")
+        if isinstance(obj.get("scheduler"), dict):
+            obj = dict(obj,
+                       scheduler=SchedulerSpec.from_json(obj["scheduler"]))
         return cls(**obj)
 
 

@@ -17,11 +17,12 @@ model the paper uses).
 
 Round anatomy (executed by :mod:`repro.core.engine`):
 
-    cand  = propose(state, rng, t)                      # replicated
-    stats = psum_p( schedule_stats(D_p, state, cand) )  # sharded, optional
-    sched = schedule(state, cand, stats, rng, t)        # replicated
-    z, local_p = push(D_p, state, sched)                # sharded
-    state = pull(state, sched, psum_p(z), local_p, D_p) # commit + sync
+    cand  = propose(state, carry, rng, t)                    # replicated
+    stats = psum_p( schedule_stats(D_p, state, cand) )       # sharded, opt.
+    sched = schedule(state, carry, cand, stats, rng, t)      # replicated
+    z, local_p = push(D_p, state, sched)                     # sharded
+    state = pull(state, sched, psum_p(z), local_p, D_p)      # commit + sync
+    carry = sched_update(carry, state_before, state, sched)  # replicated
 
 ``z`` is the paper's partial result (summed across workers exactly as the
 paper's Σ_p z_j^p); ``local_p`` carries per-shard state updates that never
@@ -35,6 +36,39 @@ schedules whose communication pattern changes per round (LDA's rotation
 Apps declare the cycle length as ``phase_period`` (``static_phase(t)`` must
 equal ``t % phase_period``): the scanned executor unrolls one full phase
 cycle per ``lax.scan`` step so every phase stays static inside the trace.
+
+The v2 scheduler-injection contract
+-----------------------------------
+
+Scheduling *policy* is not part of the app: it is a declarative
+:class:`~repro.sched.spec.SchedulerSpec` on the
+:class:`~repro.core.plan.ExecutionPlan` (or the app's
+``default_scheduler_spec()`` when the plan leaves it ``None``).  The
+engine resolves the spec into a :class:`~repro.sched.protocol.Scheduler`
+(``repro.sched.build_scheduler``, using the app's ``num_schedulable()``
+count and the mesh width) and injects it via ``use_scheduler()`` before
+tracing; apps *consume* ``self.scheduler`` inside ``propose`` /
+``schedule`` instead of hardcoding a policy.
+
+The scheduler's on-device state (e.g. the dynamic-priority Δx history)
+is the **engine-owned scheduler carry**:
+
+* ``scheduler.init_carry()`` creates it; the engine threads it through
+  every executor (host loop, ``lax.scan``, pipelined prefetch, SSP
+  windows) and returns it as ``EngineCarry.sched_carry`` /
+  ``SSPCarry.sched_carry`` — so it checkpoints and resumes bit-exactly
+  through ``checkpoint/npz`` like the PRNG stream and round counter;
+* ``propose(state, carry, ...)`` / ``schedule(state, carry, ...)`` read
+  it (apps usually just forward it to ``self.scheduler``);
+* ``sched_update(carry, state_before, state_after, sched, phase)`` folds
+  the committed round back into it — the app computes the policy's
+  feedback signal (e.g. Δβ over the scheduled block) and delegates to
+  ``scheduler.update_carry``; the default keeps the carry unchanged;
+* under SSP, ``scheduler.mark_scheduled(carry, candidates)`` applies the
+  in-flight exclusion between the window's stale proposals (replacing
+  the state-leaf ``var_roles()``/``role="priority"`` mechanism for
+  injected schedulers; the VarTable path remains for apps that keep a
+  priority table in their state).
 
 The v2 write contract (VarTable-mediated push/pull)
 ---------------------------------------------------
@@ -58,11 +92,10 @@ mediated by :class:`~repro.core.kvstore.VarTable`):
   the buffer) and ``z`` freshly aggregated in ONE batched collective.
 * server-resident writes (replicated VarSpecs) always flow through
   ``pull``; under SSP they commit at the flush, up to ``s`` rounds late.
-* apps with a dynamic scheduler declare the priority table via
-  ``var_roles() -> {leaf_path: "priority"}``; the SSP window scheduler
-  then excludes in-flight candidates by zeroing those entries in later
-  proposals' scheduling views (the STRADS in-flight exclusion rule —
-  no per-app override needed).
+* apps that keep a scheduling-priority table in their *state* declare it
+  via ``var_roles() -> {leaf_path: "priority"}`` and get the VarTable
+  in-flight exclusion; apps using an injected scheduler need neither —
+  the carry-based ``mark_scheduled`` above covers it.
 
 The v1 protocol's four ``ssp_commit_local`` / ``ssp_defer_local`` /
 ``ssp_commit_shared`` / ``ssp_mark_scheduled`` hook overrides are
@@ -73,7 +106,7 @@ rely purely on the derived behavior.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Protocol, runtime_checkable
+from typing import Any, Optional, Protocol, runtime_checkable
 
 import jax
 
@@ -83,6 +116,7 @@ DataShard = Any      # pytree: this worker's partition of the data D
 Schedule = Any       # pytree describing the scheduled variable block
 Partial = Any        # pytree of partial results z_j^p
 Stats = Any          # pytree of distributed statistics used by schedule()
+SchedCarry = Any     # scheduler scan carry (engine-owned; None if stateless)
 
 
 @runtime_checkable
@@ -93,21 +127,25 @@ class StradsApp(Protocol):
 
     def static_phase(self, t: int) -> int: ...
 
-    def propose(self, state: ModelState, rng: jax.Array,
-                t: jax.Array, phase: int) -> Schedule: ...
+    def propose(self, state: ModelState, carry: SchedCarry,
+                rng: jax.Array, t: jax.Array, phase: int) -> Schedule: ...
 
     def schedule_stats(self, data: DataShard, state: ModelState,
                        candidates: Schedule, phase: int) -> Stats: ...
 
-    def schedule(self, state: ModelState, candidates: Schedule,
-                 stats: Stats, rng: jax.Array, t: jax.Array,
-                 phase: int) -> Schedule: ...
+    def schedule(self, state: ModelState, carry: SchedCarry,
+                 candidates: Schedule, stats: Stats, rng: jax.Array,
+                 t: jax.Array, phase: int) -> Schedule: ...
 
     def push(self, data: DataShard, state: ModelState, sched: Schedule,
              phase: int) -> tuple[Partial, Any]: ...
 
     def pull(self, state: ModelState, sched: Schedule, z: Partial,
              local: Any, data: DataShard, phase: int) -> ModelState: ...
+
+    def sched_update(self, carry: SchedCarry, before: ModelState,
+                     after: ModelState, sched: Schedule,
+                     phase: int) -> SchedCarry: ...
 
 
 class StradsAppBase:
@@ -119,32 +157,70 @@ class StradsAppBase:
     ``phase_period`` to the cycle length and keep ``static_phase(t) ==
     t % phase_period``.
 
-    SSP behavior is **derived, not overridden** (the v2 write contract —
-    see the module docstring): commit-through and deferral follow from the
-    placement declared in ``state_specs()``; the only extra declaration an
-    app can make is ``var_roles()``, marking scheduling-priority leaves
-    for the SSP in-flight exclusion.
+    Scheduling policy arrives by **injection** (the v2 scheduler-injection
+    contract — see the module docstring): the engine resolves the plan's
+    ``SchedulerSpec`` (or ``default_scheduler_spec()``) and calls
+    ``use_scheduler``; ``propose``/``schedule``/``sched_update`` consume
+    ``self.scheduler`` and the engine-owned carry.
+
+    SSP behavior is **derived, not overridden** (the v2 write contract):
+    commit-through and deferral follow from the placement declared in
+    ``state_specs()``; in-flight exclusion follows from the injected
+    scheduler's ``mark_scheduled`` (or, for state-resident priority
+    tables, from ``var_roles()``).
     """
 
     phase_period: int = 1
 
+    #: the injected Scheduler (set by the engine; None = app self-schedules)
+    scheduler = None
+
+    #: which SchedulerSpec kinds this app can consume (None = any; the
+    #: engine rejects a plan naming an unlisted kind at injection time,
+    #: never at trace time)
+    supported_scheduler_kinds = None
+
     def static_phase(self, t: int) -> int:
         return 0
+
+    # -- scheduler injection -------------------------------------------------
+
+    def default_scheduler_spec(self) -> Optional[Any]:
+        """The policy this app runs when the plan names none (a
+        :class:`~repro.sched.spec.SchedulerSpec` or ``None`` for apps
+        that schedule themselves)."""
+        return None
+
+    def num_schedulable(self) -> int:
+        """How many schedulable variables the injected policy ranges over
+        (Lasso: J coefficients, MF: K ranks, LDA: the padded vocab).
+        Required whenever a scheduler spec is resolved for this app."""
+        raise NotImplementedError(
+            f"{type(self).__name__} must define num_schedulable() to "
+            f"accept an injected SchedulerSpec")
+
+    def use_scheduler(self, scheduler) -> None:
+        """Receive the engine-resolved :class:`~repro.sched.Scheduler`."""
+        self.scheduler = scheduler
 
     def var_roles(self) -> dict:
         """Leaf-path → :class:`~repro.core.kvstore.VarSpec` role
         declarations beyond placement (currently only ``"priority"``:
-        scheduling-priority tables the SSP window scheduler masks for
-        in-flight exclusion).  Default: none."""
+        scheduling-priority tables kept in app *state*, which the SSP
+        window scheduler masks for in-flight exclusion via VarTable).
+        Apps with injected schedulers keep priorities in the engine carry
+        instead and need no roles.  Default: none."""
         return {}
 
-    def propose(self, state, rng, t, phase):
+    # -- the primitives ------------------------------------------------------
+
+    def propose(self, state, carry, rng, t, phase):
         return None
 
     def schedule_stats(self, data, state, candidates, phase):
         return None
 
-    def schedule(self, state, candidates, stats, rng, t, phase):
+    def schedule(self, state, carry, candidates, stats, rng, t, phase):
         return candidates
 
     def push(self, data, state, sched, phase):
@@ -152,6 +228,11 @@ class StradsAppBase:
 
     def pull(self, state, sched, z, local, data, phase):
         raise NotImplementedError
+
+    def sched_update(self, carry, before, after, sched, phase):
+        """Fold the committed round into the scheduler carry.  Default:
+        unchanged (stateless policies)."""
+        return carry
 
 
 @jax.tree_util.register_dataclass
@@ -161,6 +242,7 @@ class RoundResult:
     state: ModelState
     sched: Schedule
     aux: Any = None
+    sched_carry: SchedCarry = None   # post-round engine-owned carry
 
 
 def tree_psum(tree: Any, axis_name: str) -> Any:

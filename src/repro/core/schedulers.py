@@ -1,184 +1,30 @@
-"""Schedulers: the paper's three ``schedule`` strategies, jit-friendly.
+"""Deprecated shim: the schedulers moved to :mod:`repro.sched`.
 
-* :class:`RoundRobinScheduler` — fixed cyclic blocks (STRADS MF; and the
-  Lasso-RR baseline, which imitates Shotgun random scheduling).
-* :class:`RotationScheduler` — word-rotation over U disjoint blocks
-  (STRADS LDA): worker p owns block ``(p + t) mod U`` at round t, so every
-  worker touches every block once per U rounds and concurrently-sampled
-  variables stay disjoint.
-* :class:`DynamicPriorityScheduler` — the STRADS Lasso strategy: sample U'
-  candidates with probability c_j ∝ |x_j^(t-1) − x_j^(t-2)| + η, then
-  greedily keep a subset of size ≤ U whose pairwise dependencies are below
-  ρ (|x_jᵀx_k| < ρ), preventing the divergence of naive parallel CD on
-  correlated designs (Bradley et al., 2011).
-
-Everything is shape-static so it jits: candidate sets have fixed size U′,
-the filtered schedule is a fixed-size index vector with a validity mask.
-
-Scheduler state lives on-device as explicit *scan carries*, never
-host-side: :class:`DynamicPriorityScheduler` owns its Δx history through
-``init_carry``/``update_carry`` (the app threads the carry through its
-state pytree, so the scanned executor in :mod:`repro.core.engine` rolls it
-through ``lax.scan`` untouched); :class:`RotationScheduler`'s only state
-is the round counter, which the engine carries as ``t``.
+``repro.core.schedulers`` re-exports the same names so old imports keep
+working (with a :class:`DeprecationWarning`, matching the PR 3 shim
+pattern); new code should import from :mod:`repro.sched` — the pluggable
+scheduler subsystem that also carries the declarative
+:class:`~repro.sched.spec.SchedulerSpec` / ``ExecutionPlan.scheduler``
+surface.
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 
-import jax
-import jax.numpy as jnp
+warnings.warn(
+    "repro.core.schedulers moved to repro.sched (the pluggable scheduler "
+    "subsystem); import RoundRobinScheduler/RandomScheduler/"
+    "RotationScheduler/DynamicPriorityScheduler and the filter helpers "
+    "from repro.sched instead", DeprecationWarning, stacklevel=2)
 
+from ..sched.schedulers import (  # noqa: E402
+    BlockStructuralScheduler, DynamicPriorityScheduler, RandomScheduler,
+    RotationScheduler, RoundRobinScheduler, dependency_filter,
+    priority_weights, sample_candidates, structural_gram)
 
-# ---------------------------------------------------------------------------
-# Static schedules
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class RoundRobinScheduler:
-    """Cyclic fixed-size blocks over J variables.
-
-    Round t schedules indices ``[t*U, ..., (t+1)*U) mod J``.
-    """
-    num_vars: int
-    block_size: int
-
-    def __call__(self, t: jax.Array) -> jax.Array:
-        start = (t * self.block_size) % self.num_vars
-        idx = (start + jnp.arange(self.block_size)) % self.num_vars
-        return idx
-
-
-@dataclasses.dataclass(frozen=True)
-class RandomScheduler:
-    """Uniform random block (the Shotgun / Lasso-RR baseline)."""
-    num_vars: int
-    block_size: int
-
-    def __call__(self, rng: jax.Array) -> jax.Array:
-        return jax.random.choice(
-            rng, self.num_vars, shape=(self.block_size,), replace=False)
-
-
-@dataclasses.dataclass(frozen=True)
-class RotationScheduler:
-    """Word-rotation over U disjoint variable blocks (STRADS LDA).
-
-    ``block_for_worker(p, t) = (p + t) mod U``.  Blocks are the contiguous
-    partition of ``num_vars`` into U chunks; chunk u is
-    ``[bounds[u], bounds[u+1])``.
-    """
-    num_vars: int
-    num_workers: int
-
-    @property
-    def bounds(self) -> jnp.ndarray:
-        edges = jnp.linspace(0, self.num_vars, self.num_workers + 1)
-        return jnp.round(edges).astype(jnp.int32)
-
-    def block_for_worker(self, p: jax.Array, t: jax.Array) -> jax.Array:
-        return (p + t) % self.num_workers
-
-    def block_mask(self, block: jax.Array) -> jax.Array:
-        """Boolean mask of shape (num_vars,): which vars are in ``block``."""
-        b = self.bounds
-        j = jnp.arange(self.num_vars)
-        return (j >= b[block]) & (j < b[block + 1])
-
-
-# ---------------------------------------------------------------------------
-# Dynamic priority + dependency filter (STRADS Lasso)
-# ---------------------------------------------------------------------------
-
-def priority_weights(delta: jax.Array, eta: float) -> jax.Array:
-    """c_j ∝ |Δx_j| + η  (paper §3.3, f₁)."""
-    return jnp.abs(delta) + eta
-
-
-def sample_candidates(rng: jax.Array, weights: jax.Array,
-                      num_candidates: int) -> jax.Array:
-    """Draw U′ distinct candidates ∝ weights via Gumbel top-k.
-
-    Gumbel-top-k gives exact sampling-without-replacement from the
-    categorical distribution ∝ weights, fully vectorized (no rejection
-    loop), which is what makes the dynamic schedule cheap on-device.
-    """
-    logits = jnp.log(jnp.maximum(weights, 1e-30))
-    g = jax.random.gumbel(rng, weights.shape, dtype=logits.dtype)
-    _, idx = jax.lax.top_k(logits + g, num_candidates)
-    return idx
-
-
-def dependency_filter(gram: jax.Array, rho: float,
-                      max_select: int) -> jax.Array:
-    """Greedy ρ-dependency filter (paper §3.3, f₂).
-
-    ``gram`` is the U′×U′ candidate correlation block (|x_jᵀx_k|, columns
-    standardized so the diagonal is 1).  Greedily admit candidates in
-    order; candidate i joins iff its correlation with every admitted
-    candidate is < ρ.  Returns a boolean keep-mask of shape (U′,) with at
-    most ``max_select`` True entries.  O(U′²), matching the paper's cost
-    argument (U′² ≪ J²).
-    """
-    u = gram.shape[0]
-    absg = jnp.abs(gram)
-
-    def body(i, carry):
-        keep, count = carry
-        # max correlation with already-kept candidates (exclude self)
-        conflict = jnp.max(jnp.where(keep, absg[i], 0.0))
-        ok = (conflict < rho) & (count < max_select)
-        keep = keep.at[i].set(ok)
-        return keep, count + ok.astype(jnp.int32)
-
-    keep0 = jnp.zeros((u,), dtype=bool)
-    # candidate 0 always admitted (count starts at 0, conflict max over
-    # empty set = 0 < rho)
-    keep, _ = jax.lax.fori_loop(0, u, body, (keep0, jnp.int32(0)))
-    return keep
-
-
-@dataclasses.dataclass(frozen=True)
-class DynamicPriorityScheduler:
-    """STRADS Lasso scheduler: priority sampling + dependency filtering.
-
-    Usage: ``propose`` samples U′ candidates from c; the application
-    computes the candidate Gram block (a distributed psum over data
-    shards); ``finalize`` applies the ρ filter and returns
-    ``(indices, mask)`` — a static-size schedule.
-    """
-    num_vars: int
-    num_candidates: int      # U'
-    block_size: int          # U  (≤ num_candidates)
-    rho: float = 0.1
-    eta: float = 1e-6
-
-    # -- carry: the Δx history driving the priorities c_j -------------------
-    # The carry is a plain (J,) array so it rides any pytree (app state,
-    # scan carry) without wrappers.  Host code must never own it: the
-    # scanned executor keeps it on-device across all R rounds.
-
-    def init_carry(self) -> jax.Array:
-        """Uniform priority at t=0 (every variable equally likely)."""
-        return jnp.ones((self.num_vars,), jnp.float32)
-
-    def update_carry(self, delta: jax.Array, idx: jax.Array,
-                     mask: jax.Array, dx: jax.Array) -> jax.Array:
-        """Fold round t's updates Δx into the history: scheduled-and-kept
-        entries take |Δx|, everything else keeps its previous priority."""
-        return delta.at[idx].set(
-            jnp.where(mask, jnp.abs(dx), jnp.take(delta, idx)))
-
-    def propose(self, delta: jax.Array, rng: jax.Array) -> jax.Array:
-        c = priority_weights(delta, self.eta)
-        return sample_candidates(rng, c, self.num_candidates)
-
-    def finalize(self, candidates: jax.Array,
-                 gram: jax.Array) -> tuple[jax.Array, jax.Array]:
-        keep = dependency_filter(gram, self.rho, self.block_size)
-        # Compact the kept candidates to the front; pad with the first
-        # kept index (masked out downstream).
-        order = jnp.argsort(~keep)          # kept first, stable
-        idx = candidates[order][: self.block_size]
-        mask = keep[order][: self.block_size]
-        return idx, mask
+__all__ = [
+    "BlockStructuralScheduler", "DynamicPriorityScheduler",
+    "RandomScheduler", "RotationScheduler", "RoundRobinScheduler",
+    "dependency_filter", "priority_weights", "sample_candidates",
+    "structural_gram",
+]

@@ -156,8 +156,14 @@ def _build_engine(engine: str, workers: int, mesh):
         from ..apps import lasso
         n, J = workers * 64, 1024
         X, y, _ = lasso.synthetic_correlated(rng, n=n, J=J, k_true=16)
+        # The DEFAULT policy keeps the historical dry-run workload
+        # (U=32, U'=128, rho=0.3 — a representative dynamic schedule, so
+        # engine artifacts stay comparable across PRs), but it is no
+        # longer baked in: run_engine resolves plan.scheduler /
+        # --scheduler / --rho over this default via eng.set_scheduler
+        # and records the spec that actually lowered in the artifact.
         cfg = lasso.LassoConfig(num_features=J, lam=0.02, block_size=32,
-                                num_candidates=128, rho=0.3)
+                                num_candidates=128)
         eng = lasso.make_engine(cfg, mesh)
         data = eng.shard_data({"X": X, "y": y})
         state = eng.init_state(jax.random.key(0), y=y)
@@ -201,32 +207,45 @@ def engine_rounds(engine: str, workers: int, rounds: int,
 
 
 def run_engine(engine: str, workers: int, rounds: int, depth: int,
-               staleness=None, unroll: int = 1) -> dict:
+               staleness=None, unroll: int = 1, scheduler=None,
+               sched_kind: str = "", rho=None) -> dict:
     """Lower + compile the scanned (or, with ``staleness``, the SSP)
     STRADS executor on a ``workers``-wide data mesh (a slice of the
     forced-512 topology).  ``rounds`` must already be step-aligned
-    (see :func:`engine_rounds`)."""
+    (see :func:`engine_rounds`).  ``scheduler`` is an optional
+    :class:`repro.sched.SchedulerSpec` overriding the app default;
+    ``sched_kind``/``rho`` are the flag form, resolved against the app's
+    own ``default_scheduler_spec()`` (so ``--rho`` alone moves only the
+    threshold).  The resolved spec dict is recorded in the result."""
     import numpy as np
     from jax.sharding import Mesh
 
     mesh = Mesh(np.array(jax.devices()[:workers]), ("data",))
     eng, state, data, meta = _build_engine(engine, workers, mesh)
+    if scheduler is None and (sched_kind or rho is not None):
+        scheduler = _override_spec(eng.app.default_scheduler_spec(),
+                                   sched_kind, rho)
+    eng.set_scheduler(scheduler)               # None → app default
 
     out = {"engine": engine, "workers": workers, "rounds": rounds,
            "pipeline_depth": depth, **meta}
+    if eng.scheduler_spec is not None:
+        out["scheduler"] = eng.scheduler_spec.to_json()
     if unroll != 1:
         out["phase_unroll"] = unroll
     import jax.numpy as jnp
+    sc0 = eng.init_sched_carry()
     t0 = time.time()
     if staleness is None:
         fn = eng.scanned_fn(rounds, pipeline_depth=depth, unroll=unroll)
-        lowered = fn.lower(state, data, jax.random.key(1), jnp.int32(0))
+        lowered = fn.lower(state, data, jax.random.key(1), jnp.int32(0),
+                           sc0)
     else:
         from .. import ps
         out["staleness"] = staleness
         fn = eng.ssp_fn(rounds, staleness=staleness)
         lowered = fn.lower(state, data, jax.random.key(1), jnp.int32(0),
-                           ps.init_clocks(workers))
+                           ps.init_clocks(workers), sc0)
     out["lower_s"] = round(time.time() - t0, 2)
     t0 = time.time()
     compiled = lowered.compile()
@@ -248,6 +267,32 @@ def run_engine(engine: str, workers: int, rounds: int, depth: int,
     except Exception as e:                                # pragma: no cover
         out["cost"] = {"error": repr(e)}
     return out
+
+
+def _override_spec(base, kind: str, rho):
+    """Resolve the --scheduler/--rho flags against the app's OWN default
+    policy: ``--rho`` alone keeps the default kind/U/U′ and moves only
+    the threshold; a kind switch keeps the default block size and fills
+    the remaining fields with that kind's conventional values."""
+    import dataclasses as dc
+
+    from ..sched import SchedulerSpec
+
+    if kind and (base is None or kind != base.kind):
+        bs = (base.block_size if base is not None and base.block_size
+              else 32)
+        nc = (base.num_candidates
+              if base is not None and base.num_candidates >= bs
+              else 0)
+        base = SchedulerSpec.default_for(kind, block_size=bs,
+                                         num_candidates=nc)
+    if rho is not None:
+        if base is None:
+            raise SystemExit("--rho needs a policy to apply to: the app "
+                             "has no default scheduler spec and no "
+                             "--scheduler kind was given")
+        base = dc.replace(base, rho=rho)   # spec validation guards kinds
+    return base
 
 
 def main():
@@ -273,12 +318,25 @@ def main():
                          "executor (repro.ps) instead of the BSP scan")
     ap.add_argument("--plan", default="",
                     help="with --engine: an ExecutionPlan JSON file; its "
-                         "executor/rounds/staleness/workers drive the "
-                         "lowering (overrides the per-flag form)")
+                         "executor/rounds/staleness/workers/scheduler "
+                         "drive the lowering (overrides the per-flag "
+                         "form)")
+    ap.add_argument("--scheduler", default="",
+                    help="with --engine: SchedulerSpec kind overriding "
+                         "the app's default policy (round_robin|random|"
+                         "rotation|dynamic_priority|block_structural)")
+    ap.add_argument("--rho", type=float, default=None,
+                    help="with --engine: dependency threshold ρ for the "
+                         "dynamic scheduler kinds (overrides the app "
+                         "default spec)")
     args = ap.parse_args()
     if args.plan and not args.engine:
         ap.error("--plan requires --engine (plans drive the STRADS "
                  "executor lowering, not the arch × shape specs)")
+    if args.plan and (args.scheduler or args.rho is not None):
+        ap.error("--scheduler/--rho conflict with --plan (the plan's "
+                 "scheduler field — possibly null = app default — is "
+                 "authoritative); edit the plan file instead")
 
     os.makedirs(RESULTS_DIR, exist_ok=True)
 
@@ -287,6 +345,7 @@ def main():
         plan = None
         workers, rounds_req = args.workers, args.rounds
         depth, staleness, unroll = args.pipeline_depth, args.staleness, 1
+        spec = None
         if args.plan:
             from ..core import ExecutionPlan
             with open(args.plan) as f:
@@ -299,8 +358,17 @@ def main():
             rounds_req, depth = plan.rounds, plan.depth
             staleness = plan.staleness if plan.executor == "ssp" else None
             unroll = plan.phase_unroll
+            spec = plan.scheduler         # None → the app's default policy
         variant = (f"s{staleness}" if staleness is not None
                    else f"d{depth}")
+        if spec is not None:
+            variant += f"__{spec.kind}"
+            if spec.rho:
+                variant += f"-rho{spec.rho:g}"
+        elif args.scheduler or args.rho is not None:
+            variant += f"__{args.scheduler or 'default'}"
+            if args.rho is not None:
+                variant += f"-rho{args.rho:g}"
         rounds = engine_rounds(args.engine, workers, rounds_req, staleness,
                                unroll)
         if rounds != rounds_req:
@@ -314,7 +382,9 @@ def main():
             return
         print(f"[dryrun] {name} ...", flush=True)
         res = run_engine(args.engine, workers, rounds, depth, staleness,
-                         unroll=unroll)
+                         unroll=unroll, scheduler=spec,
+                         sched_kind="" if args.plan else args.scheduler,
+                         rho=None if args.plan else args.rho)
         if plan is not None:
             # record what actually ran: engine_rounds may have aligned
             # the round count to whole SSP steps

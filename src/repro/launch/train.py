@@ -7,7 +7,9 @@ Runs the real substrate end to end on whatever devices exist (CPU here,
 TPU pods via the same pjit path — the mesh is built from jax.devices()):
 synthetic data pipeline → pjit'd train step (AdamW + schedule) →
 checkpointing.  ``--strads`` turns on the paper's technique as
-block-coordinate scheduled training (core/block_scheduler).
+block-coordinate scheduled training (repro.sched.block); the block
+policy is a declarative ``SchedulerSpec`` (``--scheduler``/``--rho``
+flags or ``plan.scheduler`` — kind ``block_structural``).
 
 ``--scan-steps K`` rolls K train steps into a single ``lax.scan`` XLA
 program with donated state (the training-substrate twin of
@@ -38,7 +40,8 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import ARCHS, get_config
-from ..core.block_scheduler import BlockScheduleConfig
+from ..sched import SchedulerSpec
+from ..sched.block import config_from_spec
 from ..checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from ..data import SyntheticLMConfig, make_batch
 from ..optim import AdamWConfig, cosine_schedule, wsd_schedule
@@ -78,10 +81,25 @@ def main(argv=None):
                     help="ExecutionPlan JSON driving the run shape: "
                          "rounds→steps, phase_unroll→scan-steps (scanned "
                          "executors), staleness→--staleness (implies "
-                         "--strads), checkpoint_every→--ckpt-every; "
-                         "overrides those flags")
+                         "--strads), checkpoint_every→--ckpt-every, "
+                         "scheduler→the --strads block policy; overrides "
+                         "those flags")
+    ap.add_argument("--scheduler", default="",
+                    help="SchedulerSpec kind for the --strads block "
+                         "schedule (only 'block_structural' has a "
+                         "trainer lowering); implies --strads")
+    ap.add_argument("--rho", type=float, default=None,
+                    help="structural-filter threshold ρ for --scheduler "
+                         "(with the 0/1 structural gram any value in "
+                         "(0,1] is equivalent; min_distance is the real "
+                         "knob)")
     args = ap.parse_args(argv)
 
+    if args.plan and (args.scheduler or args.rho is not None):
+        ap.error("--scheduler/--rho conflict with --plan (the plan's "
+                 "scheduler field — possibly null = default — is "
+                 "authoritative); edit the plan file instead")
+    sched_spec = None
     if args.plan:
         from ..core import ExecutionPlan
         with open(args.plan) as f:
@@ -102,7 +120,22 @@ def main(argv=None):
             args.strads = True           # stale schedules are strads-only
         if plan.checkpoint_every:
             args.ckpt_every = plan.checkpoint_every
+        if plan.scheduler is not None:
+            sched_spec = plan.scheduler
+            args.strads = True           # a block policy is strads-only
         print(f"plan: {plan.to_json()}")
+    elif args.scheduler or args.rho is not None:
+        kind = args.scheduler or "block_structural"
+        if kind != "block_structural":
+            ap.error(f"the trainer's block-coordinate lowering only "
+                     f"takes kind='block_structural'; got {kind!r} "
+                     f"(the paper apps take any kind via their fit "
+                     f"plans)")
+        args.strads = True               # spec built once nblocks is known
+    if sched_spec is not None and sched_spec.kind != "block_structural":
+        ap.error(f"plan.scheduler kind {sched_spec.kind!r} has no "
+                 f"trainer lowering (block-coordinate training needs "
+                 f"'block_structural')")
 
     cfg = get_config(args.arch)
     if args.preset == "reduced":
@@ -131,14 +164,21 @@ def main(argv=None):
         else:
             nblocks = group_layout(cfg)[0] + 1
         u = args.blocks_per_step or max(1, nblocks // 2)
-        sched = BlockScheduleConfig(
-            num_blocks=nblocks, blocks_per_step=u,
-            candidates_per_step=min(nblocks, 2 * u), min_distance=1)
+        if sched_spec is None:
+            # the conventional block_structural defaults, with the
+            # trainer's historical adjacency radius of 1 layer-group
+            sched_spec = SchedulerSpec.default_for(
+                "block_structural", block_size=u,
+                num_candidates=min(nblocks, 2 * u), min_distance=1,
+                **({"rho": args.rho} if args.rho is not None else {}))
+        sched = config_from_spec(sched_spec, nblocks)
         state = init_strads_state(cfg, tc, sched, rng,
                                   staleness=args.staleness)
         step_fn = make_strads_train_step(cfg, tc, sched,
                                          staleness=args.staleness)
-        print(f"STRADS block scheduling: {u}/{nblocks} blocks per step"
+        print(f"STRADS block scheduling: {sched.blocks_per_step}/"
+              f"{nblocks} blocks per step "
+              f"(spec: {sched_spec.to_json()})"
               + (f", schedule staleness {args.staleness}"
                  if args.staleness else ""))
     else:

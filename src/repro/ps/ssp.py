@@ -27,9 +27,14 @@ a ``local`` leaf whose key path names a worker-resident (sharded) state
 leaf is its committed value and commits every round; the remaining
 ``local`` leaves are buffered until the flush, where the app's own
 ``pull`` replays per deferred round with ``local`` reconstructed;
-``role="priority"`` VarSpecs get the in-flight exclusion.  Apps that
-still define the deprecated v1 ``ssp_*`` hook overrides are honored with
-a ``DeprecationWarning``.
+``role="priority"`` VarSpecs get the in-flight exclusion.  With an
+injected scheduler (the v2 scheduler-injection contract) the priority
+table lives in the engine-owned scheduler carry instead: the window
+scheduler masks it via ``scheduler.mark_scheduled`` between stale
+proposals, folds it forward via ``app.sched_update`` per replayed
+commit, and returns it as ``SSPCarry.sched_carry``.  Apps that still
+define the deprecated v1 ``ssp_*`` hook overrides are honored with a
+``DeprecationWarning``.
 
 Rounds therefore execute in windows of ``s + 1``: the first round of a
 window reads a fresh snapshot (staleness 0), the last reads one that is
@@ -77,10 +82,14 @@ from .server import ParameterServer, init_clocks, tick
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class SSPCarry:
-    """Resumable executor carry: PRNG stream, next round, vector clocks."""
+    """Resumable executor carry: PRNG stream, next round, vector clocks,
+    and the engine-owned scheduler carry (Δx priority history; ``None``
+    for stateless policies) — the SSP twin of
+    :class:`repro.core.engine.EngineCarry`."""
     rng: jax.Array
     t: jax.Array                 # int32: next round index
     clocks: jax.Array            # (num_workers,) per-worker vector clock
+    sched_carry: Any = None      # scheduler carry (Δx history, …)
 
 
 def rounds_per_step(engine, staleness: int) -> int:
@@ -198,23 +207,27 @@ def _make_hooks(app, table: VarTable):
 # Round pieces (shard_map regions)
 # ---------------------------------------------------------------------------
 
-def _window_schedules(eng, hooks, view, data, subs, ts, phases):
+def _window_schedules(eng, hooks, view, sc, data, subs, ts, phases):
     """propose → [batched schedule_stats psum] → schedule for a whole
-    window, all reading the same stale cache view (schedule staleness
-    ≤ s — the generalization of the depth-1 pipeline prefetch).  Between
-    proposals the view passes through the derived in-flight exclusion
-    (``role="priority"`` VarSpecs) so later proposals in the window avoid
-    variables already in flight; only later *proposals* see the marks —
-    stats and the schedule decisions read the pristine stale view."""
+    window, all reading the same stale cache view and window-start
+    scheduler carry (schedule staleness ≤ s — the generalization of the
+    depth-1 pipeline prefetch).  Between proposals the view/carry pass
+    through the in-flight exclusion (``scheduler.mark_scheduled`` on the
+    engine-owned carry; ``role="priority"`` VarSpecs for state-resident
+    tables) so later proposals in the window avoid variables already in
+    flight; only later *proposals* see the marks — stats and the schedule
+    decisions read the pristine stale view/carry."""
     app = eng.app
     keys = [jax.random.split(sub) for sub in subs]
     cands = []
     marked = view
+    marked_sc = sc
     for i, ((r1, _), t, ph) in enumerate(zip(keys, ts, phases)):
-        c = app.propose(marked, r1, t, ph)
+        c = app.propose(marked, marked_sc, r1, t, ph)
         cands.append(c)
         if i + 1 < len(subs):        # only later proposals see the mark
             marked = hooks.mark_scheduled(marked, c, ph)
+            marked_sc = eng.mark_sched_carry(marked_sc, c)
     if eng._needs_stats:
         def stats_fn(data, st, cands):
             stats = [app.schedule_stats(data, st, c, ph)
@@ -227,7 +240,7 @@ def _window_schedules(eng, hooks, view, data, subs, ts, phases):
         )(data, view, tuple(cands))
     else:
         stats = [None] * len(subs)
-    return [app.schedule(view, c, s, r2, t, ph)
+    return [app.schedule(view, sc, c, s, r2, t, ph)
             for c, s, (_, r2), t, ph in zip(cands, stats, keys, ts, phases)]
 
 
@@ -319,14 +332,14 @@ def _build_ssp(eng, num_steps: int, staleness: int,
     period = eng.phase_period
     L = rounds_per_step(eng, staleness)
 
-    def scanned(state, data, rng, t0, clocks):
+    def scanned(state, data, rng, t0, clocks, sc0):
         server = ParameterServer.from_state(eng.mesh, state,
                                             eng._sspec(state),
                                             roles=eng.app_roles())
         hooks = _make_hooks(eng.app, VarTable(server.store))
 
         def step(carry, _):
-            state, rng, t, clocks, telem = carry
+            state, rng, t, clocks, sc, telem = carry
             ys: list = []
             cache = StaleCache(values=server.snapshot(state),
                                clock=jnp.asarray(t, jnp.int32))
@@ -344,14 +357,17 @@ def _build_ssp(eng, num_steps: int, staleness: int,
                 assert W - 1 <= staleness
 
                 view = server.merge(state, cache.values)
-                scheds = _window_schedules(eng, hooks, view, data, subs,
-                                           ts, phases)
+                scheds = _window_schedules(eng, hooks, view, sc, data,
+                                           subs, ts, phases)
 
                 if W == 1:
                     # single-round window: nothing to defer — fused path
                     zb: list = []
-                    state = _fused_round(eng, hooks, view, data, scheds[0],
-                                         phases[0], zb)
+                    new_state = _fused_round(eng, hooks, view, data,
+                                             scheds[0], phases[0], zb)
+                    sc = eng._sched_update(sc, view, new_state, scheds[0],
+                                           phases[0])
+                    state = new_state
                     telem = T.observe_read(telem, ts[0], cache.clock)
                     clocks = tick(clocks)
                     if not info.get("traced"):
@@ -377,7 +393,9 @@ def _build_ssp(eng, num_steps: int, staleness: int,
 
                 # The staleness bound now forces a sync: flush the pending
                 # buffer (one batched collective), replay the deferred
-                # commits in round order, refresh the cache.
+                # commits in round order, refresh the cache.  The
+                # scheduler carry folds forward per replayed commit, in
+                # round order — exactly when the deferred Δx commits.
                 if not info.get("traced"):
                     wb = sum(_tree_nbytes(z) for z in z_pends)
                     info["deferred_bytes_peak"] = max(
@@ -386,9 +404,12 @@ def _build_ssp(eng, num_steps: int, staleness: int,
                         info.get("push_bytes_per_step", 0) + wb)
                 zs = _flush_aggregate(eng, z_pends)
                 for k in range(W):
-                    state = _commit_round(eng, hooks, state, data,
-                                          scheds[k], zs[k], keep_pends[k],
-                                          phases[k])
+                    new_state = _commit_round(eng, hooks, state, data,
+                                              scheds[k], zs[k],
+                                              keep_pends[k], phases[k])
+                    sc = eng._sched_update(sc, state, new_state,
+                                           scheds[k], phases[k])
+                    state = new_state
                     if collect is not None:
                         ys.append(collect(state))
                 cache = cache.refresh(server.snapshot(state), ts[-1] + 1)
@@ -396,11 +417,12 @@ def _build_ssp(eng, num_steps: int, staleness: int,
             out = None
             if collect is not None:
                 out = jax.tree.map(lambda *xs: jnp.stack(xs), *ys)
-            return (state, rng, t + L, clocks, telem), out
+            return (state, rng, t + L, clocks, sc, telem), out
 
         telem0 = T.device_init(staleness)
-        (state, rng, t, clocks, telem), ys = jax.lax.scan(
-            step, (state, rng, jnp.asarray(t0, jnp.int32), clocks, telem0),
+        (state, rng, t, clocks, sc, telem), ys = jax.lax.scan(
+            step, (state, rng, jnp.asarray(t0, jnp.int32), clocks, sc0,
+                   telem0),
             None, length=num_steps)
         if not info.get("traced"):
             info["traced"] = True
@@ -409,14 +431,15 @@ def _build_ssp(eng, num_steps: int, staleness: int,
         if collect is not None:
             ys = jax.tree.map(
                 lambda x: x.reshape((num_steps * L,) + x.shape[2:]), ys)
-        return state, SSPCarry(rng=rng, t=t, clocks=clocks), telem, ys
+        return state, SSPCarry(rng=rng, t=t, clocks=clocks,
+                               sched_carry=sc), telem, ys
 
     return jax.jit(scanned, donate_argnums=(0,) if donate else ())
 
 
 def _get_ssp_fn(eng, num_steps: int, staleness: int,
                 collect: Optional[Callable], donate: bool):
-    key = ("ssp", num_steps, staleness, collect, donate)
+    key = ("ssp", eng._active_spec, num_steps, staleness, collect, donate)
     hit = eng._scan_cache.get(key)
     if hit is None:
         info: dict = {}
@@ -432,9 +455,10 @@ def _get_ssp_fn(eng, num_steps: int, staleness: int,
 
 def ssp_fn(eng, num_rounds: int, *, staleness: int = 0,
            collect: Optional[Callable] = None, donate: bool = True):
-    """The jitted ``(state, data, rng, t0, clocks) → (state, carry,
-    telemetry, trace)`` SSP program, exposed for AOT
-    ``.lower().compile()`` (``launch/dryrun.py --engine ... --staleness``).
+    """The jitted ``(state, data, rng, t0, clocks, sched_carry) → (state,
+    carry, telemetry, trace)`` SSP program, exposed for AOT
+    ``.lower().compile()`` (``launch/dryrun.py --engine ... --staleness``;
+    pass ``engine.init_sched_carry()`` for a fresh run).
     """
     num_steps = _check_rounds(eng, num_rounds, staleness)
     return _get_ssp_fn(eng, num_steps, staleness, collect, donate)[0]
@@ -452,10 +476,14 @@ def _check_rounds(eng, num_rounds: int, staleness: int) -> int:
     return num_steps
 
 
+_UNSET = object()
+
+
 def run_ssp(eng, state, data, rng, num_rounds: int, *, staleness: int = 0,
             collect: Optional[Callable] = None, donate: bool = True,
             with_telemetry: bool = False, t0: int = 0,
             clocks: Optional[jax.Array] = None,
+            sched_carry0: Any = _UNSET,
             return_carry: bool = False):
     """Execute ``num_rounds`` rounds under bounded staleness ``s``.
 
@@ -467,10 +495,12 @@ def run_ssp(eng, state, data, rng, num_rounds: int, *, staleness: int = 0,
     ``collect(state)`` is evaluated after every committed round inside
     the flush; the stacked trace has leading axis ``num_rounds``.
 
-    ``t0``/``clocks`` resume a previous run (pass the values from a saved
-    :class:`SSPCarry`; ``t0`` must be a multiple of the step length).
-    ``return_carry=True`` appends the final carry to the return value;
-    ``with_telemetry=True`` appends an
+    ``t0``/``clocks``/``sched_carry0`` resume a previous run (pass the
+    values from a saved :class:`SSPCarry`; ``t0`` must be a multiple of
+    the step length, ``sched_carry0`` is the engine-owned scheduler
+    carry — omitted, a fresh ``scheduler.init_carry()`` is used, which
+    is only correct at ``t0=0``).  ``return_carry=True`` appends the
+    final carry to the return value; ``with_telemetry=True`` appends an
     :class:`~repro.ps.telemetry.SSPTelemetry`.
     """
     num_steps = _check_rounds(eng, num_rounds, staleness)
@@ -481,9 +511,18 @@ def run_ssp(eng, state, data, rng, num_rounds: int, *, staleness: int = 0,
     num_workers = eng.mesh.shape[DATA_AXIS]
     if clocks is None:
         clocks = init_clocks(num_workers)
+    if sched_carry0 is _UNSET:
+        sched_carry0 = eng.init_sched_carry()
+        if t0 and sched_carry0 is not None:
+            warnings.warn(
+                "run_ssp(t0>0) without sched_carry0 reinitializes the "
+                "stateful scheduler's priorities; pass the "
+                "SSPCarry.sched_carry a previous run returned for a "
+                "bit-exact resume", UserWarning, stacklevel=2)
     fn, info = _get_ssp_fn(eng, num_steps, staleness, collect, donate)
     state, carry, telem, ys = fn(state, data, rng,
-                                 jnp.int32(t0), jnp.asarray(clocks))
+                                 jnp.int32(t0), jnp.asarray(clocks),
+                                 sched_carry0)
 
     ret = [state]
     if collect is not None:

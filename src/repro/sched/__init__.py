@@ -1,0 +1,38 @@
+"""The pluggable scheduler subsystem.
+
+``schedule()`` is the paper's headline primitive; this package makes the
+scheduling *policy* a first-class, declarative part of the execution
+surface:
+
+* :class:`SchedulerSpec` (:mod:`repro.sched.spec`) — the frozen,
+  hashable, JSON-round-trippable policy value that rides
+  ``ExecutionPlan.scheduler``;
+* :class:`Scheduler` (:mod:`repro.sched.protocol`) — the formal
+  ``init_carry / propose / finalize / update_carry / mark_scheduled``
+  contract every policy implements;
+* :mod:`repro.sched.schedulers` — the five policies (round-robin,
+  random, rotation, dynamic priority, block structural) sharing ONE
+  greedy ρ-dependency filter with two gram backends (data Gram /
+  structural graph distance);
+* :mod:`repro.sched.block` — trainer-side block-coordinate helpers
+  (``launch/train.py --strads``).
+
+``repro.core.schedulers`` and ``repro.core.block_scheduler`` remain as
+deprecation shims re-exporting from here.
+"""
+from .spec import SCHEDULER_KINDS, SchedulerSpec
+from .protocol import Scheduler, SchedulerBase
+from .schedulers import (BlockStructuralScheduler, DynamicPriorityScheduler,
+                         RandomScheduler, RotationScheduler,
+                         RoundRobinScheduler, build_scheduler,
+                         dependency_filter, priority_weights,
+                         sample_candidates, structural_gram)
+from . import block
+
+__all__ = [
+    "SCHEDULER_KINDS", "SchedulerSpec", "Scheduler", "SchedulerBase",
+    "BlockStructuralScheduler", "DynamicPriorityScheduler",
+    "RandomScheduler", "RotationScheduler", "RoundRobinScheduler",
+    "build_scheduler", "dependency_filter", "priority_weights",
+    "sample_candidates", "structural_gram", "block",
+]

@@ -1,0 +1,138 @@
+"""Beyond-paper: STRADS block-coordinate scheduling for deep-net training.
+
+The 2014 paper schedules *individual* model variables (Lasso coefficients,
+word-topic rows).  A 2026 Big Model has billions of parameters organized
+into natural blocks — transformer layers, MoE experts, embedding slices.
+This module transplants the paper's DynamicPriority schedule to those
+blocks:
+
+* priority  c_b ∝ ‖Δθ_b‖ + η            (the Lasso f₁ rule, per block)
+* dependency filter: adjacent layers are "correlated" (their gradients
+  flow through each other); we avoid co-scheduling blocks closer than
+  ``min_distance`` — the *same* greedy ρ filter as the Lasso scheduler
+  (:func:`repro.sched.schedulers.dependency_filter`), fed the
+  :func:`~repro.sched.schedulers.structural_gram` (graph distance
+  standing in for |x_jᵀx_k|; for deep nets the dependency surrogate is
+  structural, not data-dependent, so it costs nothing at runtime).
+* push/pull: the optimizer update for unscheduled blocks is masked to
+  zero, so per step only the scheduled blocks move — block-coordinate
+  descent over the network.
+
+The MoE router is the same idea executed at token granularity (router =
+schedule, expert FFN = push, weighted combine = pull, all_to_all = sync);
+see models/moe.py.
+
+:class:`BlockScheduleConfig` remains the trainer-facing surface
+(``launch/train.py --strads``, ``train/step.py``); it round-trips to the
+declarative :class:`~repro.sched.spec.SchedulerSpec` via
+:func:`config_from_spec` / :meth:`BlockScheduleConfig.to_spec`, so one
+plan file can drive the block-scheduled trainer too.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .schedulers import dependency_filter, sample_candidates, structural_gram
+from .spec import SchedulerSpec
+
+
+def _leaf_name(path) -> str:
+    """'/'-joined pytree key path (the one flattened-path-name helper —
+    same convention as checkpoint/npz and core/kvstore)."""
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockScheduleConfig:
+    num_blocks: int
+    blocks_per_step: int          # U
+    candidates_per_step: int      # U' ≥ U
+    min_distance: int = 2         # dependency filter radius (layers)
+    eta: float = 1e-3             # exploration floor (paper's η)
+    ema: float = 0.9              # priority EMA decay
+    rho: float = 0.5              # threshold over the 0/1 structural gram
+
+    def to_spec(self) -> SchedulerSpec:
+        """The declarative twin (``kind="block_structural"``) — what a
+        plan file carries instead of this trainer config."""
+        return SchedulerSpec(kind="block_structural",
+                             block_size=self.blocks_per_step,
+                             num_candidates=self.candidates_per_step,
+                             rho=self.rho, eta=self.eta,
+                             min_distance=self.min_distance, ema=self.ema)
+
+
+def config_from_spec(spec: SchedulerSpec,
+                     num_blocks: int) -> BlockScheduleConfig:
+    """Materialize the trainer config a ``block_structural`` spec
+    declares (``num_blocks`` is structural — it comes from the model
+    layout, never the spec)."""
+    if spec.kind != "block_structural":
+        raise ValueError(f"the block-coordinate trainer needs a "
+                         f"kind='block_structural' spec; got {spec.kind!r}")
+    return BlockScheduleConfig(
+        num_blocks=num_blocks,
+        blocks_per_step=min(spec.block_size, num_blocks),
+        candidates_per_step=min(spec.num_candidates, num_blocks),
+        min_distance=spec.min_distance, eta=spec.eta, ema=spec.ema,
+        rho=spec.rho)
+
+
+def init_priority(cfg: BlockScheduleConfig) -> jax.Array:
+    """Uniform initial priorities (all blocks equally urgent)."""
+    return jnp.ones((cfg.num_blocks,), jnp.float32)
+
+
+def select_blocks(cfg: BlockScheduleConfig, priority: jax.Array,
+                  rng: jax.Array) -> jax.Array:
+    """schedule(): returns a (num_blocks,) 0/1 mask of blocks to update.
+
+    Priority sampling (f₁) then the shared greedy ρ filter (f₂) over the
+    structural gram — the duplicated distance-filter loop this module
+    used to carry is gone."""
+    cand = sample_candidates(rng, priority + cfg.eta, cfg.candidates_per_step)
+    keep = dependency_filter(structural_gram(cand, cfg.min_distance),
+                             cfg.rho, cfg.blocks_per_step)
+    mask0 = jnp.zeros((cfg.num_blocks,), jnp.float32)
+    return mask0.at[cand].set(keep.astype(jnp.float32))
+
+
+def update_priority(cfg: BlockScheduleConfig, priority: jax.Array,
+                    block_update_norms: jax.Array,
+                    scheduled: jax.Array) -> jax.Array:
+    """pull-side bookkeeping: EMA of per-block update magnitude.
+
+    Only scheduled blocks observed an update this step; unscheduled blocks
+    keep their stale priority (they will decay toward rescheduling via η)."""
+    new = cfg.ema * priority + (1 - cfg.ema) * block_update_norms
+    return jnp.where(scheduled > 0, new, priority)
+
+
+def mask_updates_by_block(updates: Any, block_of_param: Dict[str, int],
+                          mask: jax.Array) -> Any:
+    """Zero the optimizer update of every parameter whose block is
+    unscheduled.  ``block_of_param`` maps flattened param path → block id."""
+    flat = jax.tree_util.tree_flatten_with_path(updates)
+    leaves, treedef = flat
+    out = []
+    for path, leaf in leaves:
+        b = block_of_param.get(_leaf_name(path), None)
+        out.append(leaf if b is None else leaf * mask[b])
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def block_norms(updates: Any, block_of_param: Dict[str, int],
+                num_blocks: int) -> jax.Array:
+    """Per-block L2 norm of the (pre-mask) updates — feeds priorities."""
+    leaves, _ = jax.tree_util.tree_flatten_with_path(updates)
+    sq = jnp.zeros((num_blocks,), jnp.float32)
+    for path, leaf in leaves:
+        b = block_of_param.get(_leaf_name(path), None)
+        if b is not None:
+            sq = sq.at[b].add(jnp.sum(jnp.square(leaf).astype(jnp.float32)))
+    return jnp.sqrt(sq)

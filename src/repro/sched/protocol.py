@@ -1,0 +1,88 @@
+"""The formal :class:`Scheduler` protocol (the v2 scheduler-injection
+contract).
+
+Before this module the protocol was an informal convention buried in
+docstrings: schedulers "should" expose ``init_carry``/``update_carry``
+and the engine hoped the app threaded the carry through its state
+pytree.  Now it is a typed contract the engine drives directly:
+
+    carry  = scheduler.init_carry()                 # once per run
+    cand   = scheduler.propose(carry, rng, t, phase)
+    idx, m = scheduler.finalize(cand, stats)        # stats = psum'd Gram
+    carry' = scheduler.update_carry(carry, idx, m, dx)
+
+* ``init_carry`` returns the scheduler's on-device state (e.g. the Δx
+  priority history) or ``None`` for stateless policies.  The engine owns
+  the carry: it rides :class:`~repro.core.engine.EngineCarry` /
+  :class:`~repro.ps.ssp.SSPCarry` (never the app state pytree), so it
+  checkpoints, resumes and donates with the rest of the executor carry.
+* ``propose`` draws the candidate set from the carry (shape-static: U′
+  indices).  Stateless kinds derive it from ``t``/``rng`` alone.
+* ``finalize`` applies the dependency filter to the candidates given the
+  distributed statistics (``schedule_stats`` psum — the candidate Gram
+  block for the data-dependent filter, ignored by the structural one)
+  and returns ``(indices, mask)``, a fixed-size schedule.
+* ``update_carry`` folds the committed update magnitudes ``dx`` of the
+  scheduled block back into the carry (identity for stateless kinds).
+* ``mark_scheduled`` is the SSP in-flight exclusion hook: zero the
+  priority of candidates already proposed inside the current staleness
+  window so later (≤ s-stale) proposals pick fresh variables instead of
+  compounding the same deferred update.
+
+Every scheduler is a frozen dataclass — a hashable value, safe as part
+of a jit cache key — and every method is jit-traceable with shape-static
+outputs.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+Carry = Any          # scheduler scan carry (pytree or None)
+Candidates = Any     # proposal output (usually an int index vector)
+
+
+@runtime_checkable
+class Scheduler(Protocol):
+    """The pluggable scheduling policy (built from a
+    :class:`~repro.sched.spec.SchedulerSpec` by
+    :func:`~repro.sched.build_scheduler`)."""
+
+    #: True when ``finalize`` needs distributed schedule statistics (the
+    #: app's ``schedule_stats`` psum — e.g. the candidate Gram block).
+    needs_stats: bool
+
+    def init_carry(self) -> Carry: ...
+
+    def propose(self, carry: Carry, rng: jax.Array, t: jax.Array,
+                phase: int) -> Candidates: ...
+
+    def finalize(self, candidates: Candidates,
+                 stats: Any) -> tuple[jax.Array, jax.Array]: ...
+
+    def update_carry(self, carry: Carry, idx: jax.Array, mask: jax.Array,
+                     dx: jax.Array) -> Carry: ...
+
+    def mark_scheduled(self, carry: Carry,
+                       candidates: Candidates) -> Carry: ...
+
+
+class SchedulerBase:
+    """Stateless defaults: no carry, no stats, full-block mask."""
+
+    needs_stats = False
+
+    def init_carry(self) -> Optional[Any]:
+        return None
+
+    def finalize(self, candidates, stats):
+        """Identity filter: keep the whole candidate block."""
+        return candidates, jnp.ones(jnp.shape(candidates), bool)
+
+    def update_carry(self, carry, idx, mask, dx):
+        return carry
+
+    def mark_scheduled(self, carry, candidates):
+        return carry

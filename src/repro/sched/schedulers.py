@@ -1,0 +1,350 @@
+"""Schedulers: the paper's ``schedule`` strategies behind one protocol.
+
+* :class:`RoundRobinScheduler` — fixed cyclic blocks (STRADS MF; and the
+  Lasso-cyclic baseline).
+* :class:`RandomScheduler` — uniform random blocks (the Shotgun /
+  Lasso-RR baseline, which diverges on correlated designs at large U).
+* :class:`RotationScheduler` — word-rotation over U disjoint blocks
+  (STRADS LDA): worker p owns block ``(p + t) mod U`` at round t, so every
+  worker touches every block once per U rounds and concurrently-sampled
+  variables stay disjoint.
+* :class:`DynamicPriorityScheduler` — the STRADS Lasso strategy: sample U'
+  candidates with probability c_j ∝ |x_j^(t-1) − x_j^(t-2)| + η, then
+  greedily keep a subset of size ≤ U whose pairwise dependencies are below
+  ρ (|x_jᵀx_k| < ρ), preventing the divergence of naive parallel CD on
+  correlated designs (Bradley et al., 2011).
+* :class:`BlockStructuralScheduler` — the same f₁/f₂ rules at layer-block
+  granularity: priorities from update norms, and the ρ filter applied to
+  a *structural* gram (graph distance standing in for |x_jᵀx_k| — for
+  deep nets the dependency surrogate is structural, not data-dependent,
+  so it costs nothing at runtime).  See :mod:`repro.sched.block` for the
+  trainer-side helpers built on it.
+
+All five implement the :class:`~repro.sched.protocol.Scheduler` protocol
+(``init_carry`` / ``propose`` / ``finalize`` / ``update_carry`` /
+``mark_scheduled``); the engine builds them from a declarative
+:class:`~repro.sched.spec.SchedulerSpec` via :func:`build_scheduler`.
+
+Everything is shape-static so it jits: candidate sets have fixed size U′,
+the filtered schedule is a fixed-size index vector with a validity mask.
+Scheduler state lives on-device as an explicit carry the *engine* owns
+(:class:`~repro.core.engine.EngineCarry.sched_carry`) — never host-side,
+and no longer an app-state stowaway.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .protocol import SchedulerBase
+from .spec import SchedulerSpec
+
+
+# ---------------------------------------------------------------------------
+# Static schedules
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RoundRobinScheduler(SchedulerBase):
+    """Cyclic fixed-size blocks over J variables.
+
+    Round t schedules indices ``[t*U, ..., (t+1)*U) mod J``.
+    """
+    num_vars: int
+    block_size: int
+
+    def __call__(self, t: jax.Array) -> jax.Array:
+        start = (t * self.block_size) % self.num_vars
+        idx = (start + jnp.arange(self.block_size)) % self.num_vars
+        return idx
+
+    def propose(self, carry, rng, t, phase):
+        return self(t)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomScheduler(SchedulerBase):
+    """Uniform random block (the Shotgun / Lasso-RR baseline)."""
+    num_vars: int
+    block_size: int
+
+    def __call__(self, rng: jax.Array) -> jax.Array:
+        return jax.random.choice(
+            rng, self.num_vars, shape=(self.block_size,), replace=False)
+
+    def propose(self, carry, rng, t, phase):
+        return self(rng)
+
+
+@dataclasses.dataclass(frozen=True)
+class RotationScheduler(SchedulerBase):
+    """Word-rotation over U disjoint variable blocks (STRADS LDA).
+
+    ``block_for_worker(p, t) = (p + t) mod U``.  Blocks are the contiguous
+    partition of ``num_vars`` into U chunks; chunk u is
+    ``[bounds[u], bounds[u+1])``.  The rotation's communication pattern is
+    exposed as *static* permutation lists (``forward_perm`` /
+    ``backward_perm``) because the LDA ``lax.ppermute`` needs a static
+    permutation per phase.
+    """
+    num_vars: int
+    num_workers: int
+
+    @property
+    def bounds(self) -> jnp.ndarray:
+        edges = jnp.linspace(0, self.num_vars, self.num_workers + 1)
+        return jnp.round(edges).astype(jnp.int32)
+
+    def block_for_worker(self, p: jax.Array, t: jax.Array) -> jax.Array:
+        return (p + t) % self.num_workers
+
+    def block_mask(self, block: jax.Array) -> jax.Array:
+        """Boolean mask of shape (num_vars,): which vars are in ``block``."""
+        b = self.bounds
+        j = jnp.arange(self.num_vars)
+        return (j >= b[block]) & (j < b[block + 1])
+
+    def forward_perm(self, phase: int) -> list:
+        """Static ppermute pairs sending block d to its phase-t worker."""
+        U = self.num_workers
+        return [((d + phase) % U, d) for d in range(U)]
+
+    def backward_perm(self, phase: int) -> list:
+        """Static ppermute pairs sending each processed block home."""
+        U = self.num_workers
+        return [(d, (d + phase) % U) for d in range(U)]
+
+    def propose(self, carry, rng, t, phase):
+        # the rotation is implicit in the app's communication pattern
+        return None
+
+    def finalize(self, candidates, stats):
+        return candidates, None
+
+
+# ---------------------------------------------------------------------------
+# Dynamic priority + dependency filter (STRADS Lasso)
+# ---------------------------------------------------------------------------
+
+def priority_weights(delta: jax.Array, eta: float) -> jax.Array:
+    """c_j ∝ |Δx_j| + η  (paper §3.3, f₁)."""
+    return jnp.abs(delta) + eta
+
+
+def sample_candidates(rng: jax.Array, weights: jax.Array,
+                      num_candidates: int) -> jax.Array:
+    """Draw U′ distinct candidates ∝ weights via Gumbel top-k.
+
+    Gumbel-top-k gives exact sampling-without-replacement from the
+    categorical distribution ∝ weights, fully vectorized (no rejection
+    loop), which is what makes the dynamic schedule cheap on-device.
+    """
+    logits = jnp.log(jnp.maximum(weights, 1e-30))
+    g = jax.random.gumbel(rng, weights.shape, dtype=logits.dtype)
+    _, idx = jax.lax.top_k(logits + g, num_candidates)
+    return idx
+
+
+def dependency_filter(gram: jax.Array, rho: float,
+                      max_select: int) -> jax.Array:
+    """Greedy ρ-dependency filter (paper §3.3, f₂) — ONE implementation
+    for both dependency backends.
+
+    ``gram`` is the U′×U′ candidate correlation block: |x_jᵀx_k| with
+    standardized columns for the data-dependent (Gram) backend, or the
+    0/1 :func:`structural_gram` for the graph-distance backend.  Greedily
+    admit candidates in order; candidate i joins iff its correlation with
+    every admitted candidate is < ρ.  Returns a boolean keep-mask of
+    shape (U′,) with at most ``max_select`` True entries.  O(U′²),
+    matching the paper's cost argument (U′² ≪ J²).
+    """
+    u = gram.shape[0]
+    absg = jnp.abs(gram)
+
+    def body(i, carry):
+        keep, count = carry
+        # max correlation with already-kept candidates (exclude self)
+        conflict = jnp.max(jnp.where(keep, absg[i], 0.0))
+        ok = (conflict < rho) & (count < max_select)
+        keep = keep.at[i].set(ok)
+        return keep, count + ok.astype(jnp.int32)
+
+    keep0 = jnp.zeros((u,), dtype=bool)
+    # candidate 0 always admitted (count starts at 0, conflict max over
+    # empty set = 0 < rho)
+    keep, _ = jax.lax.fori_loop(0, u, body, (keep0, jnp.int32(0)))
+    return keep
+
+
+def structural_gram(candidates: jax.Array,
+                    min_distance: int) -> jax.Array:
+    """The graph-distance dependency surrogate: a 0/1 "correlation" block
+    where candidates closer than ``min_distance`` (adjacent layers, whose
+    gradients flow through each other) count as fully correlated.  Feeds
+    :func:`dependency_filter` exactly like the data Gram block does —
+    any ρ ∈ (0, 1] then admits precisely the distance-filtered set."""
+    d = jnp.abs(candidates[:, None] - candidates[None, :])
+    return (d < min_distance).astype(jnp.float32)
+
+
+def _compact_schedule(candidates: jax.Array, keep: jax.Array,
+                      block_size: int) -> tuple[jax.Array, jax.Array]:
+    """Compact the kept candidates to the front; pad with the first kept
+    index (masked out downstream)."""
+    order = jnp.argsort(~keep)          # kept first, stable
+    idx = candidates[order][:block_size]
+    mask = keep[order][:block_size]
+    return idx, mask
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicPriorityScheduler(SchedulerBase):
+    """STRADS Lasso scheduler: priority sampling + Gram dependency filter.
+
+    ``propose`` samples U′ candidates ∝ the carry (the Δx history); the
+    application computes the candidate Gram block (a distributed psum
+    over data shards — its ``schedule_stats``); ``finalize`` applies the
+    ρ filter and returns ``(indices, mask)`` — a static-size schedule.
+    """
+    num_vars: int
+    num_candidates: int      # U'
+    block_size: int          # U  (≤ num_candidates)
+    rho: float = 0.1
+    eta: float = 1e-6
+
+    needs_stats = True
+
+    # -- carry: the Δx history driving the priorities c_j -------------------
+    # A plain (J,) array so it rides the engine carry without wrappers.
+    # Host code must never own it: the scanned executors keep it on-device
+    # across all R rounds, and it checkpoints/resumes via EngineCarry.
+
+    def init_carry(self) -> jax.Array:
+        """Uniform priority at t=0 (every variable equally likely)."""
+        return jnp.ones((self.num_vars,), jnp.float32)
+
+    def update_carry(self, carry: jax.Array, idx: jax.Array,
+                     mask: jax.Array, dx: jax.Array) -> jax.Array:
+        """Fold round t's updates Δx into the history: scheduled-and-kept
+        entries take |Δx|, everything else keeps its previous priority."""
+        return carry.at[idx].set(
+            jnp.where(mask, jnp.abs(dx), jnp.take(carry, idx)))
+
+    def propose(self, carry: jax.Array, rng: jax.Array, t=None,
+                phase: int = 0) -> jax.Array:
+        c = priority_weights(carry, self.eta)
+        return sample_candidates(rng, c, self.num_candidates)
+
+    def finalize(self, candidates: jax.Array,
+                 gram: jax.Array) -> tuple[jax.Array, jax.Array]:
+        keep = dependency_filter(gram, self.rho, self.block_size)
+        return _compact_schedule(candidates, keep, self.block_size)
+
+    def mark_scheduled(self, carry: jax.Array,
+                       candidates: jax.Array) -> jax.Array:
+        """SSP in-flight exclusion: candidates already proposed in this
+        staleness window drop to the η floor, so later stale proposals
+        pick fresh coordinates instead of compounding the same deferred
+        update (the divergence mode of stale CD)."""
+        if candidates is None:
+            return carry
+        return carry.at[candidates].set(jnp.zeros((), carry.dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockStructuralScheduler(SchedulerBase):
+    """Layer-block scheduling: dynamic priorities + the structural ρ
+    filter (graph distance instead of the data Gram — dependency between
+    blocks is adjacency, known statically).
+
+    The carry is the per-block priority table (EMA of update norms).
+    ``finalize`` ignores ``stats``: the dependency surrogate is
+    :func:`structural_gram`, so no distributed statistics pass is needed.
+    """
+    num_blocks: int
+    block_size: int          # U  — blocks per step
+    num_candidates: int      # U' ≥ U
+    min_distance: int = 2
+    rho: float = 0.5         # any value in (0,1] is equivalent (0/1 gram)
+    eta: float = 1e-3
+    ema: float = 0.9
+
+    def init_carry(self) -> jax.Array:
+        return jnp.ones((self.num_blocks,), jnp.float32)
+
+    def propose(self, carry: jax.Array, rng: jax.Array, t=None,
+                phase: int = 0) -> jax.Array:
+        return sample_candidates(rng, carry + self.eta,
+                                 self.num_candidates)
+
+    def finalize(self, candidates: jax.Array,
+                 stats=None) -> tuple[jax.Array, jax.Array]:
+        gram = structural_gram(candidates, self.min_distance)
+        keep = dependency_filter(gram, self.rho, self.block_size)
+        return _compact_schedule(candidates, keep, self.block_size)
+
+    def keep_mask(self, candidates: jax.Array) -> jax.Array:
+        """The uncompacted (U′,) keep mask — the trainer scatters it onto
+        the (num_blocks,) 0/1 schedule mask (see
+        :func:`repro.sched.block.select_blocks`)."""
+        gram = structural_gram(candidates, self.min_distance)
+        return dependency_filter(gram, self.rho, self.block_size)
+
+    def update_carry(self, carry: jax.Array, idx: jax.Array,
+                     mask: jax.Array, dx: jax.Array) -> jax.Array:
+        """EMA of per-block update magnitude; only scheduled blocks
+        observed an update, the rest keep their stale priority."""
+        norms = jnp.zeros_like(carry).at[idx].set(
+            jnp.where(mask, jnp.abs(dx), jnp.take(carry, idx)))
+        new = self.ema * carry + (1 - self.ema) * norms
+        sel = jnp.zeros_like(carry, bool).at[idx].set(mask)
+        return jnp.where(sel, new, carry)
+
+    def mark_scheduled(self, carry, candidates):
+        if candidates is None:
+            return carry
+        return carry.at[candidates].set(jnp.zeros((), carry.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Spec → scheduler (the injection registry)
+# ---------------------------------------------------------------------------
+
+def build_scheduler(spec: SchedulerSpec, *, num_vars: int,
+                    num_workers: int):
+    """Materialize the policy a :class:`SchedulerSpec` declares for a
+    concrete app: ``num_vars`` is the app's schedulable-variable count
+    (``StradsAppBase.num_schedulable()``), ``num_workers`` the data-mesh
+    width.  The spec stays app-agnostic; this is the one place structure
+    meets policy."""
+    if not isinstance(spec, SchedulerSpec):
+        raise TypeError(f"build_scheduler wants a SchedulerSpec; got "
+                        f"{type(spec).__name__}")
+    if spec.num_candidates > num_vars:
+        raise ValueError(
+            f"spec.num_candidates={spec.num_candidates} exceeds the "
+            f"app's {num_vars} schedulable variables (top-U′ sampling "
+            f"needs U′ <= J)")
+    if spec.block_size > num_vars:
+        raise ValueError(
+            f"spec.block_size={spec.block_size} exceeds the app's "
+            f"{num_vars} schedulable variables (a block larger than J "
+            f"would schedule duplicates)")
+    if spec.kind == "round_robin":
+        return RoundRobinScheduler(num_vars, spec.block_size)
+    if spec.kind == "random":
+        return RandomScheduler(num_vars, spec.block_size)
+    if spec.kind == "rotation":
+        return RotationScheduler(num_vars, num_workers)
+    if spec.kind == "dynamic_priority":
+        return DynamicPriorityScheduler(
+            num_vars=num_vars, num_candidates=spec.num_candidates,
+            block_size=spec.block_size, rho=spec.rho, eta=spec.eta)
+    # "block_structural" (spec validation admits nothing else)
+    return BlockStructuralScheduler(
+        num_blocks=num_vars, block_size=spec.block_size,
+        num_candidates=spec.num_candidates,
+        min_distance=spec.min_distance, rho=spec.rho, eta=spec.eta,
+        ema=spec.ema)

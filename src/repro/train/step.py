@@ -3,7 +3,7 @@
 * ``make_train_step`` — standard full-parameter AdamW step (the dry-run
   lowers this for the ``train_4k`` shape).
 * ``make_strads_train_step`` — the paper's technique as a first-class
-  trainer feature: a DynamicPriority block scheduler (core/block_scheduler)
+  trainer feature: a DynamicPriority block scheduler (repro.sched.block)
   picks which layer-blocks receive optimizer updates each step
   (schedule), per-block update norms are the partial results (push), the
   masked AdamW commit is the aggregation (pull), and SPMD program order
@@ -17,8 +17,8 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core.block_scheduler import (BlockScheduleConfig, init_priority,
-                                    select_blocks, update_priority)
+from ..sched.block import (BlockScheduleConfig, init_priority,
+                           select_blocks, update_priority)
 from ..models import model as M
 from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
 from .losses import cross_entropy, token_accuracy

@@ -56,21 +56,51 @@ def test_ssp_resume_matches_uninterrupted(tmp_path, rng):
     restored = restore_checkpoint(str(tmp_path), 4, template)
     c = restored["carry"]
     assert int(c.t) == 4 and (np.asarray(c.clocks) == 4).all()
+    # the scheduler carry (Δβ priority history) is part of SSPCarry now
+    # and must resume with the rest of the carry for bit-exactness
+    assert c.sched_carry is not None
     resumed = eng.run_ssp(restored["state"], data, c.rng, 4, staleness=s,
-                          t0=int(c.t), clocks=c.clocks)
+                          t0=int(c.t), clocks=c.clocks,
+                          sched_carry0=c.sched_carry)
     _bit_identical(full, resumed)
 
 
-def test_scanned_state_roundtrips_through_npz(tmp_path, rng):
-    """The scheduler carry (Δx history) rides the state pytree, so a
-    plain state round-trip preserves the dynamic schedule exactly."""
+def test_scanned_sched_carry_roundtrips_through_npz(tmp_path, rng):
+    """The scheduler carry (Δx history) is an explicit EngineCarry field
+    now — ``{"state", "carry"}`` round-trips it through checkpoint/npz,
+    and resuming from it continues the dynamic schedule bit-exactly."""
     eng, data, y = _setup(rng)
-    st = eng.run_scanned(eng.init_state(jax.random.key(0), y=y), data,
-                         jax.random.key(1), 4)
-    save_checkpoint(str(tmp_path), 4, st)
-    back = restore_checkpoint(str(tmp_path), 4,
-                              jax.tree.map(jnp.zeros_like, st))
-    _bit_identical(st, back)
+
+    full, full_carry = eng.run_scanned(
+        eng.init_state(jax.random.key(0), y=y), data, jax.random.key(1),
+        8, return_carry=True)
+
+    st, carry = eng.run_scanned(eng.init_state(jax.random.key(0), y=y),
+                                data, jax.random.key(1), 4,
+                                return_carry=True)
+    assert carry.sched_carry is not None        # the Δβ priority history
+    save_checkpoint(str(tmp_path), 4, {"state": st, "carry": carry})
+    template = {"state": jax.tree.map(jnp.copy, st), "carry": carry}
+    back = restore_checkpoint(str(tmp_path), 4, template)
+    c = back["carry"]
+    assert (np.asarray(c.sched_carry)
+            == np.asarray(carry.sched_carry)).all()
+    resumed, res_carry = eng.run_scanned(back["state"], data, c.rng, 4,
+                                         t0=int(c.t), donate=False,
+                                         sched_carry0=c.sched_carry,
+                                         return_carry=True)
+    _bit_identical(full, resumed)
+    # the final carries of full vs chunked runs agree exactly
+    assert (np.asarray(full_carry.sched_carry)
+            == np.asarray(res_carry.sched_carry)).all()
+    # the carry is load-bearing: resuming with a FRESH carry (uniform
+    # priorities) must diverge from the uninterrupted dynamic schedule —
+    # and omitting it at t0>0 warns about exactly that
+    with pytest.warns(UserWarning, match="without sched_carry0"):
+        fresh = eng.run_scanned(back["state"], data, c.rng, 4,
+                                t0=int(c.t), donate=False)
+    assert not (np.asarray(fresh["beta"])
+                == np.asarray(full["beta"])).all()
 
 
 def test_execute_plan_checkpoint_chunks_match_uninterrupted(tmp_path,

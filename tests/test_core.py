@@ -8,10 +8,9 @@ from repro.core import (DynamicPriorityScheduler, RandomScheduler,
                         RotationScheduler, RoundRobinScheduler,
                         dependency_filter, priority_weights,
                         sample_candidates)
-from repro.core.block_scheduler import (BlockScheduleConfig, block_norms,
-                                        init_priority,
-                                        mask_updates_by_block,
-                                        select_blocks, update_priority)
+from repro.sched.block import (BlockScheduleConfig, block_norms,
+                               init_priority, mask_updates_by_block,
+                               select_blocks, update_priority)
 
 
 # ---------------------------------------------------------------------------

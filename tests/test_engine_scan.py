@@ -163,7 +163,7 @@ def test_run_scanned_without_collect_returns_state_only(mesh, rng):
     data = eng.shard_data({"X": jnp.asarray(X), "y": jnp.asarray(y)})
     state = eng.app.init_state(jax.random.key(0), y=y)
     out = eng.run_scanned(state, data, jax.random.key(0), 4)
-    assert isinstance(out, dict) and set(out) == {"beta", "delta", "r"}
+    assert isinstance(out, dict) and set(out) == {"beta", "r"}
 
 
 def test_run_scanned_collect_trace_has_one_entry_per_round(mesh, rng):
@@ -189,6 +189,6 @@ def test_scanned_fn_is_aot_lowerable(mesh, rng):
     data = eng.shard_data({"X": jnp.asarray(X), "y": jnp.asarray(y)})
     state = eng.app.init_state(jax.random.key(0), y=y)
     fn = eng.scanned_fn(4, pipeline_depth=1)
-    compiled = fn.lower(state, data, jax.random.key(1),
-                        jnp.int32(0)).compile()
+    compiled = fn.lower(state, data, jax.random.key(1), jnp.int32(0),
+                        eng.init_sched_carry()).compile()
     assert compiled.cost_analysis() is not None

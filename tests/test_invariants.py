@@ -64,7 +64,7 @@ def test_hubert_is_bidirectional():
 
 
 def test_strads_unscheduled_blocks_do_not_move():
-    from repro.core.block_scheduler import BlockScheduleConfig
+    from repro.sched.block import BlockScheduleConfig
     from repro.data import SyntheticLMConfig, make_batch
     from repro.train import TrainConfig
     from repro.train.step import init_strads_state, make_strads_train_step

@@ -105,15 +105,17 @@ def test_schedule_respects_rho(mesh, rng):
     eng = lasso.make_engine(cfg, mesh)
     data = eng.shard_data({"X": jnp.asarray(X), "y": jnp.asarray(y)})
     state = eng.app.init_state(jax.random.key(0), y=y)
+    sc = eng.init_sched_carry()          # the Δβ priority history
     for t in range(5):
-        out = eng.run_round(state, data, jax.random.key(t), t=t)
+        out = eng.run_round(state, data, jax.random.key(t), t=t,
+                            sched_carry=sc)
         idx = np.asarray(out.sched["idx"])
         mask = np.asarray(out.sched["mask"])
         kept = idx[mask]
         G = np.abs(X[:, kept].T @ X[:, kept])
         np.fill_diagonal(G, 0)
         assert (G < 0.2 + 1e-5).all()
-        state = out.state
+        state, sc = out.state, out.sched_carry
 
 
 @settings(max_examples=10, deadline=None)

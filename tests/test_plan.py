@@ -268,11 +268,19 @@ def test_apps_define_no_v1_ssp_hooks():
             assert not hasattr(app_cls, hook), (app_cls.__name__, hook)
 
 
-def test_lasso_declares_priority_role_only_for_strads(rng):
+def test_lasso_default_scheduler_specs_follow_config(rng):
+    """The app's policy is declarative now: cfg.scheduler maps onto a
+    default SchedulerSpec (and no state leaf carries priorities — the
+    Δβ history is the engine-owned scheduler carry)."""
+    from repro.sched import SchedulerSpec
     cfg, X, y = _lasso_setup(rng)
-    assert lasso.StradsLasso(cfg).var_roles() == {"delta": "priority"}
+    assert lasso.StradsLasso(cfg).default_scheduler_spec() == \
+        SchedulerSpec(kind="dynamic_priority", block_size=4,
+                      num_candidates=8, rho=0.3, eta=1e-6)
     rr = lasso.LassoConfig(num_features=20, scheduler="rr")
-    assert lasso.StradsLasso(rr).var_roles() == {}
+    assert lasso.StradsLasso(rr).default_scheduler_spec() == \
+        SchedulerSpec(kind="random", block_size=8)
+    assert lasso.StradsLasso(cfg).var_roles() == {}
 
 
 def test_legacy_ssp_hooks_still_run_with_deprecation_warning(mesh, rng):

@@ -189,15 +189,16 @@ def test_server_split_and_byte_accounting(mesh, rng):
     cfg, X, y = _lasso_problem(rng, n=40, J=20)
     eng = lasso.make_engine(cfg, mesh)
     state = eng.init_state(jax.random.key(0), y=y)
-    # engine placement now goes through the KV store
+    # engine placement now goes through the KV store; the Δβ priority
+    # history is the engine-owned scheduler carry, not a state leaf
     assert eng.kvstore is not None
-    assert set(eng.kvstore.specs) == {"beta", "delta", "r"}
-    assert eng.kvstore.total_bytes() == (20 + 20 + 40) * 4
+    assert set(eng.kvstore.specs) == {"beta", "r"}
+    assert eng.kvstore.total_bytes() == (20 + 40) * 4
     srv = ParameterServer.from_state(eng.mesh, state, eng._sspec(state))
-    assert srv.shared_names == {"beta", "delta"}     # r is worker-local
-    assert srv.shared_nbytes() == (20 + 20) * 4
+    assert srv.shared_names == {"beta"}              # r is worker-local
+    assert srv.shared_nbytes() == 20 * 4
     snap = srv.snapshot(state)
-    assert set(snap) == {"beta", "delta"}
+    assert set(snap) == {"beta"}
     merged = srv.merge(state, snap)
     _bit_identical(merged, state)
 
