@@ -36,7 +36,10 @@ def run(quick: bool = True):
             round(bytes_per_machine(cfg, False) / 2**20, 3))
         out["baseline_mb"].append(
             round(bytes_per_machine(cfg, True) / 2**20, 3))
-    save("bench_memory", out)
+    # BENCH_-prefixed like the other tracked artifacts (the bench-memory
+    # CI job uploads it — Fig 3 is the trajectory the repartitioner's
+    # byte accounting feeds, so it is tracked per PR, not best-effort)
+    save("BENCH_memory", out)
     return out
 
 

@@ -1,0 +1,152 @@
+"""Partition-policy benchmark: static vs load-balanced ownership on a
+deliberately skewed lasso workload.
+
+The paper's other headline primitive is *partitioning* of the model
+variables; the companion papers (1312.5766, 1411.2305) make it dynamic —
+ownership follows load.  With partition policy now a declarative
+``PartitionerSpec`` on the ``ExecutionPlan``, the comparison is literally
+two plans.
+
+The workload is built to be skewed: a power-law β* concentrated on a
+*contiguous* block of columns, so almost all update activity lands on
+the first worker's contiguous static shard.  The benchmark runs
+``kind="static"`` vs ``kind="load_balanced"`` (same dynamic-priority
+scheduler, same chunked scan executor — rebalance checks ride the
+``checkpoint_every`` chunk boundaries) and reports, per arm:
+
+* rounds/sec (compile excluded, interleaved best-of-3);
+* per-worker load spread ``(max − min)/mean`` of the *measured* update
+  activity Σ_t |Δβ_t| binned by the arm's final ownership assignment —
+  the quantity the repartitioner exists to shrink;
+* the objective-vs-round curve (ownership is model-store bookkeeping;
+  the curves must not degrade — identical schedules ⇒ identical math);
+* the rebalance count (final ``Assignment.version``).
+
+Writes ``benchmarks/results/BENCH_part.json`` (each arm embeds the exact
+plan + partitioner-spec dicts and the per-worker load vector) for the
+cross-PR trajectory; uploaded as a CI artifact by the bench-part job.
+``examples/plans/lasso_loadbal.json`` is the checked-in form of the
+load-balanced arm.
+"""
+from __future__ import annotations
+
+import json
+
+from .common import run_sub, save
+
+_CODE = """
+import json, tempfile, time
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.apps import lasso
+from repro.core import (ExecutionPlan, PartitionerSpec, SchedulerSpec,
+                        worker_mesh)
+
+U, R, CK, RB, BS = {workers}, {rounds}, {chunk}, {rebalance}, 16
+n, J = {rows}, {feats}
+
+# Skewed design: power-law activity concentrated on a CONTIGUOUS hot
+# block, so the static contiguous partition overloads worker 0.
+rng = np.random.default_rng(0)
+X = rng.normal(size=(n, J)).astype(np.float32)
+X -= X.mean(axis=0)
+X /= np.maximum(np.linalg.norm(X, axis=0), 1e-12)
+hot = J // 8
+bstar = np.zeros((J,), np.float32)
+bstar[:hot] = 8.0 * np.arange(1, hot + 1, dtype=np.float32) ** -1.2
+y = (X @ bstar).astype(np.float32)
+y -= y.mean()
+
+cfg = lasso.LassoConfig(num_features=J, lam=0.02, block_size=BS,
+                        num_candidates=4 * BS)
+mesh = worker_mesh(U)
+eng = lasso.make_engine(cfg, mesh)
+data = eng.shard_data({{"X": jnp.asarray(X), "y": jnp.asarray(y)}})
+init = lambda: eng.init_state(jax.random.key(0), y=y)
+obj = eng.app.objective_collect()
+
+sched = SchedulerSpec(kind="dynamic_priority", block_size=BS,
+                      num_candidates=4 * BS, rho=0.3, eta=1e-3)
+plans = {{
+    "static": ExecutionPlan(
+        executor="scan", rounds=R, checkpoint_every=CK, scheduler=sched,
+        partitioner=PartitionerSpec(kind="static")),
+    "load_balanced": ExecutionPlan(
+        executor="scan", rounds=R, checkpoint_every=CK, scheduler=sched,
+        partitioner=PartitionerSpec(kind="load_balanced", ema=0.5,
+                                    imbalance_threshold=0.1,
+                                    rebalance_every=RB)),
+}}
+
+run = lambda st, plan: eng.execute(st, data, jax.random.key(1), plan,
+                                   ckpt_dir=tempfile.mkdtemp()).state
+
+for plan in plans.values():                  # compile warmup, all first
+    run(init(), plan)
+
+# Interleaved best-of-3 (chunk checkpoints included in both arms).
+best = {{name: 0.0 for name in plans}}
+for _ in range(3):
+    for name, plan in plans.items():
+        st = init()
+        t0 = time.time()
+        jax.block_until_ready(run(st, plan))
+        best[name] = max(best[name], R / (time.time() - t0))
+
+out = {{}}
+stride = max(1, R // 20)
+for name, plan in plans.items():
+    rep = eng.execute(init(), data, jax.random.key(1), plan,
+                      collect=lambda s: {{"beta": s["beta"],
+                                          "obj": obj(s)}},
+                      ckpt_dir=tempfile.mkdtemp())
+    betas = np.asarray(rep.trace["beta"])            # (R, J)
+    objs = np.asarray(rep.trace["obj"])
+    # measured per-variable update activity over the whole run
+    steps = np.vstack([betas[:1], np.diff(betas, axis=0)])
+    activity = np.abs(steps).sum(axis=0)
+    asgn = eng.partition_assignment
+    loads = asgn.loads(activity)
+    out[name] = {{
+        "rounds_per_sec": best[name],
+        "load_spread": asgn.spread(activity),
+        "per_worker_load": [float(v) for v in loads],
+        "rebalances": asgn.version,
+        "objective": [float(v) for v in objs[::stride]]
+                     + [float(objs[-1])],
+        "plan": plan.to_json(),
+        "partitioner": plan.partitioner.to_json(),
+    }}
+print("PAYLOAD:" + json.dumps(out))
+"""
+
+
+def run(quick: bool = True):
+    rounds, chunk, rebalance = (120, 20, 40) if quick else (300, 30, 60)
+    rows, feats = (256, 256) if quick else (2048, 2048)
+    out = {"rounds": rounds, "chunk": chunk, "rebalance": rebalance,
+           "rows": rows, "feats": feats, "workers": {}}
+    for U in (4,):
+        stdout = run_sub(_CODE.format(workers=U, rounds=rounds,
+                                      chunk=chunk, rebalance=rebalance,
+                                      rows=rows, feats=feats),
+                         devices=U, timeout=560)
+        payload = json.loads(
+            stdout.strip().splitlines()[-1][len("PAYLOAD:"):])
+        out["workers"][U] = payload
+    save("BENCH_part", out)
+    return out
+
+
+def rows(out):
+    for U, p in out["workers"].items():
+        for name, rec in p.items():
+            rps = rec["rounds_per_sec"]
+            yield (f"part/U{U}/{name}_us_per_round", 1e6 / rps,
+                   round(rps, 2))
+            yield (f"part/U{U}/{name}_load_spread", 0.0,
+                   round(rec["load_spread"], 4))
+            yield (f"part/U{U}/{name}_rebalances", 0.0,
+                   rec["rebalances"])
+            yield (f"part/U{U}/{name}_final_objective", 0.0,
+                   round(rec["objective"][-1], 4))

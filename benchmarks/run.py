@@ -13,7 +13,8 @@ import sys
 import traceback
 
 from . import (bench_lasso, bench_lda, bench_memory, bench_mf,
-               bench_pipeline, bench_scaling, bench_sched, bench_ssp)
+               bench_part, bench_pipeline, bench_scaling, bench_sched,
+               bench_ssp)
 
 BENCHES = {
     "lasso": bench_lasso,       # Fig 8/9 right
@@ -24,6 +25,7 @@ BENCHES = {
     "pipeline": bench_pipeline,  # loop vs scan vs pipelined executor
     "ssp": bench_ssp,           # bounded staleness vs BSP (repro.ps)
     "sched": bench_sched,       # scheduler-policy ρ × U′ sweep (repro.sched)
+    "part": bench_part,         # partition-policy static vs load_balanced
 }
 
 
@@ -36,6 +38,12 @@ def main(argv=None) -> None:
                          f"{','.join(BENCHES)},roofline")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
+    if only:
+        # a typo'd name used to run nothing and exit 0 — fail loudly
+        unknown = only - set(BENCHES) - {"roofline"}
+        if unknown:
+            ap.error(f"unknown benchmark name(s) {sorted(unknown)}; "
+                     f"valid: {sorted(BENCHES) + ['roofline']}")
 
     print("name,us_per_call,derived")
     failed = []

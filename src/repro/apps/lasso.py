@@ -40,6 +40,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import StradsAppBase, StradsEngine
 from repro.core.compat import shard_map
 from repro.kernels import ops
+from repro.part import PartitionerSpec
 from repro.sched import SchedulerSpec
 
 from . import _exec
@@ -92,6 +93,21 @@ class StradsLasso(StradsAppBase):
 
     def num_schedulable(self) -> int:
         return self.cfg.num_features
+
+    # -- partition injection -------------------------------------------------
+    # Coefficients are interchangeable, so every partition kind applies:
+    # the ownership map is model-store bookkeeping (which worker serves
+    # β_j), and the load balancer's activity signal is |Δβ| — the same
+    # quantity the dynamic scheduler's priorities track.
+
+    supported_partitioner_kinds = ("static", "size_balanced",
+                                   "load_balanced")
+
+    def default_partitioner_spec(self) -> PartitionerSpec:
+        return PartitionerSpec(kind="static")
+
+    def partition_signal(self, state):
+        return state["beta"]
 
     @property
     def needs_schedule_stats(self) -> bool:

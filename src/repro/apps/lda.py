@@ -45,6 +45,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import StradsAppBase, StradsEngine
 from repro.core.compat import shard_map
+from repro.part import PartitionerSpec
 from repro.sched import SchedulerSpec
 
 from . import _exec
@@ -121,6 +122,17 @@ class StradsLDA(StradsAppBase):
 
     def num_schedulable(self) -> int:
         return self.cfg.padded_vocab
+
+    # The rotation's ppermute pattern *is* a frozen contiguous word→
+    # worker map (RotationScheduler.bounds); ownership cannot move
+    # without retiling B, so only the static partitioner applies — the
+    # engine rejects anything else at injection time.  The static
+    # assignment is bit-identical to the rotation bounds
+    # (repro.part.contiguous_assignment shares the linspace).
+    supported_partitioner_kinds = ("static",)
+
+    def default_partitioner_spec(self) -> PartitionerSpec:
+        return PartitionerSpec(kind="static")
 
     def static_phase(self, t: int) -> int:
         return t % self.cfg.num_workers

@@ -37,6 +37,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import StradsAppBase, StradsEngine
 from repro.core.compat import shard_map
+from repro.part import PartitionerSpec
 from repro.sched import SchedulerSpec
 
 from . import _exec
@@ -90,6 +91,26 @@ class StradsMF(StradsAppBase):
 
     def num_schedulable(self) -> int:
         return self.cfg.rank
+
+    # -- partition injection -------------------------------------------------
+    # Rank blocks are interchangeable (mutually independent given the
+    # other factor), so ownership may move freely; the activity signal
+    # is the per-rank L1 mass of H — rank rows that move a lot pull
+    # their server load with them.
+
+    supported_partitioner_kinds = ("static", "size_balanced",
+                                   "load_balanced")
+
+    def default_partitioner_spec(self) -> PartitionerSpec:
+        return PartitionerSpec(kind="static")
+
+    def partition_signal(self, state):
+        return jnp.sum(jnp.abs(state["H"]), axis=1)
+
+    def partition_sizes(self):
+        # bytes per rank: a row of H (M floats) + a column of W (N)
+        cfg = self.cfg
+        return [4 * (cfg.num_cols + cfg.num_rows)] * cfg.rank
 
     def static_phase(self, t: int) -> int:
         # Alternate H-phase (0) and W-phase (1) every round.

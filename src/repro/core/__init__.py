@@ -4,9 +4,15 @@ Scheduling policy lives in its own subsystem, :mod:`repro.sched`
 (``SchedulerSpec`` + the ``Scheduler`` protocol); the classic scheduler
 names are re-exported here for compatibility, and the old
 ``repro.core.schedulers`` / ``repro.core.block_scheduler`` module paths
-remain as deprecation shims.
+remain as deprecation shims.  Partition policy mirrors it in
+:mod:`repro.part` (``PartitionerSpec`` + the ``Partitioner`` protocol +
+the variable→worker ``Assignment``), completing the paper's primitive
+pair: ``ExecutionPlan`` swaps both without touching app code.
 """
 from .primitives import (RoundResult, StradsApp, StradsAppBase, tree_psum)
+from ..part import (PARTITIONER_KINDS, Assignment, Partitioner,
+                    PartitionerSpec, build_partitioner,
+                    contiguous_assignment)
 from ..sched import (SCHEDULER_KINDS, Scheduler, SchedulerSpec,
                      BlockStructuralScheduler, DynamicPriorityScheduler,
                      RandomScheduler, RotationScheduler,
@@ -21,6 +27,8 @@ from .plan import EXECUTORS, ExecutionPlan, ExecutionReport
 
 __all__ = [
     "RoundResult", "StradsApp", "StradsAppBase", "tree_psum",
+    "PARTITIONER_KINDS", "Assignment", "Partitioner", "PartitionerSpec",
+    "build_partitioner", "contiguous_assignment",
     "SCHEDULER_KINDS", "Scheduler", "SchedulerSpec",
     "BlockStructuralScheduler", "DynamicPriorityScheduler",
     "RandomScheduler", "RotationScheduler", "RoundRobinScheduler",

@@ -57,6 +57,18 @@ as :attr:`EngineCarry.sched_carry` — never an app-state stowaway, so it
 checkpoints through ``checkpoint/npz`` with the PRNG stream and round
 counter.
 
+Partition policy is injected the same way (the partitioning contract,
+:mod:`repro.core.primitives`): ``plan.partitioner`` — or the app's
+``default_partitioner_spec()`` — resolves to a
+:class:`~repro.part.protocol.Partitioner` whose variable→worker
+:class:`~repro.part.assignment.Assignment` the engine owns.  Repartition
+checks run host-side at the ``checkpoint_every`` chunk boundaries of
+:meth:`StradsEngine.execute` (state is synced there, so a move is a
+``KVStore.repartition`` re-placement); compiled-program caches are keyed
+per (SchedulerSpec, Assignment), and the assignment + activity stats
+ride the ``{"state", "carry", "assignment"}`` checkpoint payload
+(resumed via ``execute(..., partition=...)``).
+
 The engine runs identically on a single device (unit tests, laptop-scale
 experiments) and on multi-chip meshes; the production 256/512-chip
 lowering is exercised by ``launch/dryrun.py`` (``--engine`` mode for this
@@ -71,8 +83,10 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..part import Assignment, PartitionerSpec, build_partitioner
 from ..sched import SchedulerSpec, build_scheduler
 from .compat import make_mesh, shard_map
 from .kvstore import KVStore, store_from_tree
@@ -118,11 +132,15 @@ class StradsEngine:
     scheduler:   optional :class:`~repro.sched.spec.SchedulerSpec`
                  overriding the app's ``default_scheduler_spec()`` from
                  construction time (``execute`` re-resolves per plan).
+    partitioner: optional :class:`~repro.part.spec.PartitionerSpec`
+                 overriding the app's ``default_partitioner_spec()``
+                 the same way (plan > constructor > app).
     """
 
     def __init__(self, app: StradsApp, mesh: Mesh, data_specs: Any,
                  state_specs: Any = None,
-                 scheduler: Optional[SchedulerSpec] = None):
+                 scheduler: Optional[SchedulerSpec] = None,
+                 partitioner: Optional[PartitionerSpec] = None):
         self.app = app
         self.mesh = mesh
         self.data_specs = data_specs
@@ -133,7 +151,13 @@ class StradsEngine:
         # a constructor spec outranks the app default whenever a plan
         # leaves its scheduler field None (plan > constructor > app)
         self._spec_override = scheduler
+        self._part_override = partitioner
+        self._active_part_spec: Optional[PartitionerSpec] = None
+        self.partitioner = None
+        self._assignment: Optional[Assignment] = None
+        self._part_stats = None
         self.set_scheduler(None)
+        self.set_partitioner(None)
         self.kvstore: Optional[KVStore] = None   # built by place_state
 
     # -- scheduler injection (the v2 contract) -------------------------------
@@ -174,16 +198,24 @@ class StradsEngine:
             self.app, "needs_schedule_stats",
             type(self.app).schedule_stats
             is not StradsAppBase.schedule_stats)
-        # Compiled programs are cached PER SPEC (every _scan_cache key
-        # carries the active spec), so swapping policies back and forth
-        # — a plan sweep — reuses each policy's compiled programs
-        # instead of recompiling on every switch.
-        key = ("round", resolved)
+        # Compiled programs are cached PER SPEC and PER ASSIGNMENT
+        # (every _scan_cache key carries both), so swapping policies —
+        # a plan sweep — or rebalancing the partition reuses each
+        # configuration's compiled programs instead of recompiling on
+        # every switch.
+        self._rebind_round()
+        return sched
+
+    def _rebind_round(self):
+        """(Re)fetch the traced round program for the active
+        (SchedulerSpec, Assignment) pair — called whenever either
+        changes, so a stale program can never serve a new policy or a
+        moved partition."""
+        key = ("round", self._active_spec, self._assignment)
         self._round = self._scan_cache.get(key)
         if self._round is None:
             self._round = self._build_round()
             self._scan_cache[key] = self._round
-        return sched
 
     def _default_spec(self) -> Optional[SchedulerSpec]:
         fn = getattr(self.app, "default_scheduler_spec", None)
@@ -213,6 +245,208 @@ class StradsEngine:
         sched = self.scheduler
         return (sched.mark_scheduled(carry, candidates)
                 if sched is not None else carry)
+
+    # -- partition injection (the partitioning contract) ---------------------
+
+    def set_partitioner(self, spec: Optional[PartitionerSpec] = None):
+        """Resolve a :class:`~repro.part.spec.PartitionerSpec` (``None``
+        → the engine's constructor spec, else the app's
+        ``default_partitioner_spec()``) into a
+        :class:`~repro.part.protocol.Partitioner`, inject its initial
+        variable→worker assignment into the app, and rebind the traced
+        round programs.  Idempotent for an unchanged spec — crucially,
+        it then *keeps* the current assignment and activity stats, so a
+        resumed run continues the partition trajectory instead of
+        resetting it.  Returns the active partitioner (or ``None`` for
+        apps with no partition story)."""
+        if spec is None:
+            spec = self._part_override
+        resolved = spec if spec is not None else self._default_part_spec()
+        if resolved == self._active_part_spec:
+            return self.partitioner
+        if resolved is None:
+            self.partitioner = None
+            self._active_part_spec = None
+            self._part_stats = None
+            self._install_assignment(None)
+            return None
+        kinds = getattr(self.app, "supported_partitioner_kinds", None)
+        if kinds is not None and resolved.kind not in kinds:
+            raise ValueError(
+                f"{type(self.app).__name__} cannot host a "
+                f"{resolved.kind!r} partitioner (it supports "
+                f"{sorted(kinds)}); fix the plan's PartitionerSpec")
+        if resolved.kind == "load_balanced" \
+                and not self._has_partition_signal():
+            raise ValueError(
+                f"kind='load_balanced' needs a per-variable activity "
+                f"signal, but {type(self.app).__name__} does not define "
+                f"partition_signal(state); declare one (see "
+                f"repro.core.primitives) or use a static kind")
+        sizes_fn = getattr(self.app, "partition_sizes", None)
+        part = build_partitioner(
+            resolved, num_vars=self.app.num_schedulable(),
+            num_workers=self.mesh.shape[DATA_AXIS],
+            sizes=sizes_fn() if callable(sizes_fn) else None)
+        self.partitioner = part
+        self._active_part_spec = resolved
+        self._part_stats = part.init_stats()
+        self._install_assignment(part.init_assignment())
+        return part
+
+    def _default_part_spec(self) -> Optional[PartitionerSpec]:
+        fn = getattr(self.app, "default_partitioner_spec", None)
+        return fn() if callable(fn) else None
+
+    def _has_partition_signal(self) -> bool:
+        fn = getattr(type(self.app), "partition_signal", None)
+        return (fn is not None
+                and fn is not StradsAppBase.partition_signal)
+
+    def _install_assignment(self, assignment: Optional[Assignment]):
+        self._assignment = assignment
+        if hasattr(self.app, "use_partition"):
+            self.app.use_partition(assignment)
+        else:
+            self.app.assignment = assignment
+        self._rebind_round()
+
+    @property
+    def partitioner_spec(self) -> Optional[PartitionerSpec]:
+        """The resolved spec of the active partitioner (for artifacts)."""
+        return self._active_part_spec
+
+    @property
+    def partition_assignment(self) -> Optional[Assignment]:
+        """The active variable→worker assignment (``None`` without a
+        partitioner)."""
+        return self._assignment
+
+    @property
+    def partition_stats(self):
+        """The partitioner's host-side activity state (the load
+        balancer's per-variable EMA; ``None`` for stateless kinds)."""
+        return self._part_stats
+
+    def reset_partition(self):
+        """Back to the partitioner's initial assignment and fresh stats
+        — what a fresh (carry-less, payload-less) ``execute`` does, so
+        rebalances from a previous run can never leak into a new one."""
+        part = self.partitioner
+        if part is None:
+            return
+        self._part_stats = part.init_stats()
+        init = part.init_assignment()
+        if init != self._assignment:
+            self._install_assignment(init)
+
+    def apply_assignment(self, assignment: Assignment, state: Any = None):
+        """Adopt a new assignment mid-run: the KV store re-derives its
+        VarSpecs and re-places the worker-resident leaves
+        (:meth:`~repro.core.kvstore.KVStore.repartition` — byte
+        accounting stays truthful), the app receives the move via
+        ``use_partition``, and the traced-program binding is refreshed
+        (compiled caches are keyed per assignment, so this is one cache
+        miss the first time and a hit ever after).  Returns the
+        re-placed state when one is passed."""
+        out = None
+        if self.kvstore is not None:
+            out = self.kvstore.repartition(assignment, state)
+        elif state is not None:
+            out = state
+        self._install_assignment(assignment)
+        return out
+
+    def partition_payload(self) -> Optional[dict]:
+        """The ``"assignment"`` subtree of a chunked run's
+        ``{"state", "carry", "assignment"}`` checkpoint: the assignment
+        arrays plus the partitioner's activity stats, flat for
+        ``checkpoint/npz``.  ``None`` without a partitioner."""
+        if self._assignment is None:
+            return None
+        payload = dict(self._assignment.payload())
+        if isinstance(self._part_stats, dict):
+            for k, v in self._part_stats.items():
+                payload[f"stats_{k}"] = np.asarray(v)
+        return payload
+
+    def restore_partition(self, payload: dict):
+        """Resume the partition trajectory from a checkpoint's
+        ``"assignment"`` payload (``execute(..., partition=...)``): the
+        saved assignment is re-applied and the activity stats restored,
+        so the resumed run replays the remaining rebalance decisions
+        bit-exactly."""
+        if self.partitioner is None:
+            raise ValueError(
+                "restore_partition needs an active partitioner (the "
+                "plan/app resolved none) — was this checkpoint written "
+                "under a different plan?")
+        asgn = Assignment.from_payload(
+            {k: payload[k] for k in ("owner", "num_workers", "version")})
+        num_workers = self.mesh.shape[DATA_AXIS]
+        if asgn.num_workers != num_workers:
+            raise ValueError(
+                f"checkpointed assignment spans {asgn.num_workers} "
+                f"workers but the engine mesh has {num_workers}")
+        num_vars = self.partitioner.num_vars
+        if asgn.num_vars != num_vars:
+            raise ValueError(
+                f"checkpointed assignment covers {asgn.num_vars} "
+                f"variables but this app partitions {num_vars} — was "
+                f"this checkpoint written for a different model size?")
+        stats = {k[len("stats_"):]: np.asarray(v)
+                 for k, v in payload.items() if k.startswith("stats_")}
+        fresh = self.partitioner.init_stats()
+        if (stats or fresh is not None) and set(stats) != \
+                set(fresh or {}):
+            raise ValueError(
+                f"checkpointed partition stats {sorted(stats)} do not "
+                f"match the resolved {self._active_part_spec.kind!r} "
+                f"partitioner's {sorted(fresh or {})} — the "
+                f"PartitionerSpec must match across resume")
+        if stats:
+            self._part_stats = stats
+        self.apply_assignment(asgn)
+
+    def _partition_signal_snapshot(self, state) -> Optional[np.ndarray]:
+        """Host copy of the app's per-variable partition signal (taken
+        *before* a chunk runs — donation consumes the device buffers)."""
+        if self.partitioner is None:
+            return None
+        fn = getattr(self.app, "partition_signal", None)
+        sig = fn(state) if callable(fn) else None
+        if sig is None:
+            return None
+        return np.array(jax.device_get(sig))
+
+    def _partition_step(self, state, sig_before, t: int,
+                        allow_move: bool = True):
+        """One chunk-boundary partition check: fold the chunk's observed
+        activity |Δsignal| into the partitioner's stats, and rebalance
+        (re-place + rebind) when the policy says so.  Host-side — state
+        is already synced here.  Returns ``(state, sig_after)`` so the
+        caller reuses the chunk-end snapshot as the next chunk's
+        baseline instead of re-fetching it (``sig_before=None`` — no
+        stateful policy or no app signal — skips the snapshot
+        entirely).  ``allow_move=False`` still measures but never
+        rebalances — the final chunk boundary, where a move would
+        produce an assignment no round ever runs under."""
+        part = self.partitioner
+        sig_after = (self._partition_signal_snapshot(state)
+                     if sig_before is not None else None)
+        activity = (np.abs(sig_after - sig_before)
+                    if sig_after is not None else None)
+        self._part_stats = part.measure(self._part_stats,
+                                        self._assignment, activity)
+        if allow_move and part.should_rebalance(
+                self._part_stats, self._assignment, t):
+            new = part.propose_assignment(self._part_stats,
+                                          self._assignment)
+            if new.owner != self._assignment.owner:
+                # re-placement keeps leaf values, so sig_after stays a
+                # valid baseline for the next chunk
+                state = self.apply_assignment(new, state)
+        return state, sig_after
 
     # -- traced round pieces (shared by every executor) ---------------------
 
@@ -341,10 +575,12 @@ class StradsEngine:
         if num_rounds < 1:
             return state
         plan = ExecutionPlan(executor="loop", rounds=num_rounds)
-        # execute-equivalence includes the policy: re-resolve the
-        # default spec so a scheduler swept in by a previous
-        # execute(plan.scheduler=...) cannot leak into this run
+        # execute-equivalence includes the policies: re-resolve the
+        # default specs so a scheduler or partitioner swept in by a
+        # previous execute(plan.…=...) cannot leak into this run
         self.set_scheduler(None)
+        self.set_partitioner(None)
+        self.reset_partition()
         return self._execute_span(state, data, rng, plan, num_rounds, 0,
                                   None, None, callback).state
 
@@ -510,7 +746,8 @@ class StradsEngine:
     def execute(self, state, data, rng, plan: ExecutionPlan, *,
                 collect: Optional[Callable[[Any], Any]] = None,
                 callback=None, carry=None,
-                ckpt_dir: Optional[str] = None) -> ExecutionReport:
+                ckpt_dir: Optional[str] = None,
+                partition: Optional[dict] = None) -> ExecutionReport:
         """Run an :class:`~repro.core.plan.ExecutionPlan` — the one entry
         point that subsumes :meth:`run`, :meth:`run_scanned` and
         :meth:`run_ssp` and returns a uniform
@@ -533,9 +770,21 @@ class StradsEngine:
         interrupted run matches an uninterrupted one bit-for-bit (``rng``
         is taken from the carry and the argument is ignored).
 
+        ``plan.partitioner`` (a :class:`~repro.part.spec.PartitionerSpec`)
+        selects the partition policy the same way (``None`` resolves to
+        the app's ``default_partitioner_spec()``).  The resolved
+        partitioner owns the variable→worker assignment; repartition
+        checks run at the chunk boundaries below (state is host-synced
+        there — see the partitioning contract in
+        :mod:`repro.core.primitives`).  A fresh run (no ``carry``)
+        starts from the partitioner's initial assignment; resuming
+        passes the checkpoint's ``"assignment"`` payload as
+        ``partition=`` so the trajectory continues bit-exactly.
+
         ``ckpt_dir`` + ``plan.checkpoint_every`` chunk the run and save a
-        ``{"state", "carry"}`` checkpoint via :mod:`repro.checkpoint`
-        every ``checkpoint_every`` rounds (the cadence must tile the
+        ``{"state", "carry"}`` checkpoint (plus ``"assignment"`` when a
+        partitioner is active) via :mod:`repro.checkpoint` every
+        ``checkpoint_every`` rounds (the cadence must tile the
         executor's step length; each chunk reuses one compiled program).
         """
         if not isinstance(plan, ExecutionPlan):
@@ -551,6 +800,13 @@ class StradsEngine:
             raise ValueError("callback is a host-loop hook; it requires "
                              f"executor='loop' (got {plan.executor!r})")
         self.set_scheduler(plan.scheduler)
+        self.set_partitioner(plan.partitioner)
+        if partition is not None:
+            self.restore_partition(partition)
+        elif carry is None:
+            # fresh run: rebalances from a previous execute of the same
+            # spec must not leak in (in-process resumes keep them)
+            self.reset_partition()
         t_done = 0
         if carry is not None:
             if plan.executor == "ssp" and not hasattr(carry, "clocks"):
@@ -595,7 +851,22 @@ class StradsEngine:
                              "was passed — the run would silently never "
                              "checkpoint")
         chunk = plan.checkpoint_every if ckpt_dir else 0
+        pspec = self._active_part_spec
+        if chunk and pspec is not None and pspec.rebalance_every \
+                and pspec.rebalance_every % chunk:
+            raise ValueError(
+                f"partitioner.rebalance_every={pspec.rebalance_every} "
+                f"must be a multiple of plan.checkpoint_every={chunk} — "
+                f"repartition checks only run at chunk boundaries, so a "
+                f"misaligned cadence would silently (almost) never fire")
         if not chunk:
+            if pspec is not None and pspec.kind == "load_balanced":
+                warnings.warn(
+                    "a load_balanced partitioner only rebalances at "
+                    "checkpoint chunk boundaries; without plan."
+                    "checkpoint_every + ckpt_dir the assignment stays "
+                    "at its initial (static) value for the whole run",
+                    UserWarning, stacklevel=2)
             return self._execute_span(state, data, rng, plan,
                                       plan.rounds - t_done, t_done, carry,
                                       collect, callback)
@@ -628,6 +899,12 @@ class StradsEngine:
                 return r
         traces = []
         t = t_done
+        # the activity baseline is only worth a host sync when a
+        # stateful policy will consume it (static/size_balanced measure
+        # nothing); one snapshot here, then each chunk reuses the
+        # previous boundary's
+        sig0 = (self._partition_signal_snapshot(state)
+                if self._part_stats is not None else None)
         while t < plan.rounds:
             n = min(chunk, plan.rounds - t)
             rep = self._execute_span(state, data, rng, plan, n, t, carry,
@@ -637,7 +914,18 @@ class StradsEngine:
             if rep.trace is not None:
                 traces.append(rep.trace)
             t = int(carry.t)
-            save_checkpoint(ckpt_dir, t, {"state": state, "carry": carry})
+            if self.partitioner is not None:
+                # the repartition check rides the chunk boundary: state
+                # is host-synced here, so a move is a re-placement (the
+                # next chunk fetches programs under the new assignment;
+                # after the LAST chunk there is no next chunk, so only
+                # measure — never move)
+                state, sig0 = self._partition_step(
+                    state, sig0, t, allow_move=t < plan.rounds)
+            payload = {"state": state, "carry": carry}
+            if self.partitioner is not None:
+                payload["assignment"] = self.partition_payload()
+            save_checkpoint(ckpt_dir, t, payload)
             if stops:                           # honored across chunks
                 break
         trace = (jax.tree.map(lambda *xs: jnp.concatenate(xs), *traces)
@@ -727,8 +1015,8 @@ class StradsEngine:
     def _get_scan_fn(self, num_steps: int, depth: int,
                      collect: Optional[Callable], donate: bool,
                      unroll: int = 1, with_sched0: bool = False):
-        key = (self._active_spec, num_steps, depth, collect, donate,
-               unroll, with_sched0)
+        key = (self._active_spec, self._assignment, num_steps, depth,
+               collect, donate, unroll, with_sched0)
         fn = self._scan_cache.get(key)
         if fn is None:
             fn = self._build_scan(num_steps, depth, collect, donate,
@@ -814,19 +1102,33 @@ class StradsEngine:
 
 
 class _SpecBoundFn:
-    """A compiled-program handle pinned to the SchedulerSpec it was
-    requested under.  The underlying jit fn traces lazily (at first
-    call/lower) against whatever scheduler is then installed on the app,
-    so a handle obtained before a ``set_scheduler`` swap would otherwise
-    silently bake the *wrong* policy into the per-spec cache; this
-    wrapper reinstalls its owning spec first (a cheap no-op when it is
-    already active)."""
+    """A compiled-program handle pinned to the (SchedulerSpec,
+    Assignment) pair it was requested under.  The underlying jit fn
+    traces lazily (at first call/lower) against whatever scheduler and
+    partition assignment are then installed on the app, so a handle
+    obtained before a ``set_scheduler`` swap or an ``apply_assignment``
+    move would otherwise silently bake the *wrong* configuration into
+    the per-key cache; this wrapper reinstalls its owning pair first (a
+    cheap no-op when both are already active)."""
 
     def __init__(self, eng: "StradsEngine", spec, fn):
         self._eng, self._spec, self._fn = eng, spec, fn
+        self._assignment = eng._assignment
+        self._part_spec = eng._active_part_spec
 
     def _bind(self):
         self._eng.set_scheduler(self._spec)
+        if self._eng._active_part_spec != self._part_spec:
+            # reinstalling the pinned assignment under a different
+            # partitioner (or none) would desync assignment/stats/spec;
+            # the handle is simply stale — refetch it
+            raise RuntimeError(
+                "this AOT handle was requested under PartitionerSpec "
+                f"{self._part_spec!r} but the engine now runs "
+                f"{self._eng._active_part_spec!r}; refetch scanned_fn/"
+                f"ssp_fn after set_partitioner")
+        if self._eng._assignment != self._assignment:
+            self._eng.apply_assignment(self._assignment)
 
     def __call__(self, *args, **kw):
         self._bind()

@@ -51,6 +51,16 @@ class VarSpec:
     spec: P = P()          # replicated by default (data-parallel style)
     role: str = "model"    # "model" | "priority"
 
+    VALID_ROLES = ("model", "priority")
+
+    def __post_init__(self):
+        if self.role not in self.VALID_ROLES:
+            raise ValueError(
+                f"VarSpec.role must be one of {list(self.VALID_ROLES)} "
+                f"('model' = ordinary variable, 'priority' = scheduling-"
+                f"priority table masked for SSP in-flight exclusion); "
+                f"got {self.role!r}")
+
     def nbytes(self) -> int:
         return int(np.prod(self.shape)) * np.dtype(self.dtype).itemsize
 
@@ -72,6 +82,9 @@ class KVStore:
     def __init__(self, mesh: Mesh, specs: Mapping[str, VarSpec]):
         self.mesh = mesh
         self.specs = dict(specs)
+        #: the active variable→worker Assignment (repro.part) — None
+        #: until the engine repartitions through this store
+        self.assignment = None
 
     # -- placement ----------------------------------------------------------
 
@@ -104,6 +117,44 @@ class KVStore:
         return jax.tree_util.tree_map_with_path(
             lambda p, x: jax.device_put(x, self.sharding(path_name(p))),
             tree)
+
+    def repartition(self, assignment, state: Any = None,
+                    leaf_specs: Optional[Mapping[str, P]] = None) -> Any:
+        """Adopt a new variable→worker
+        :class:`~repro.part.assignment.Assignment` — the paper's dynamic
+        partitioning move, applied where placement is owned.
+
+        ``leaf_specs`` maps leaf names to new :class:`PartitionSpec`\\ s
+        for leaves whose *device placement* the move changes (a
+        replicated leaf becoming sharded, or vice versa); their VarSpecs
+        are re-derived in place, so the Fig-3 byte accounting
+        (:meth:`bytes_per_device`, :meth:`nbytes_per_device`) stays
+        truthful after the move.  Built-in apps keep their leaf placement
+        fixed (ownership moves are bookkeeping-level), so they pass no
+        ``leaf_specs`` — the hook exists for stores whose physical layout
+        follows ownership.
+
+        With ``state``, every worker-resident leaf (and every leaf whose
+        spec just changed) is re-placed through ``device_put`` and the
+        re-placed pytree returned; without it, only the bookkeeping
+        updates."""
+        moved = set()
+        for name, spec in dict(leaf_specs or {}).items():
+            if name not in self.specs:
+                raise ValueError(f"repartition names unknown variable "
+                                 f"{name!r} (store has "
+                                 f"{sorted(self.specs)})")
+            self.specs[name] = dataclasses.replace(self.specs[name],
+                                                   spec=spec)
+            moved.add(name)
+        self.assignment = assignment
+        if state is None:
+            return None
+        return jax.tree_util.tree_map_with_path(
+            lambda p, x: jax.device_put(x, self.sharding(path_name(p)))
+            if (path_name(p) in moved
+                or not is_replicated(self.specs[path_name(p)].spec))
+            else x, state)
 
     # -- accounting (Fig 3) -------------------------------------------------
 

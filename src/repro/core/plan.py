@@ -31,6 +31,7 @@ import dataclasses
 import json
 from typing import Any, Optional
 
+from ..part.spec import PartitionerSpec
 from ..sched.spec import SchedulerSpec
 
 EXECUTORS = ("loop", "scan", "pipelined", "ssp")
@@ -84,6 +85,17 @@ class ExecutionPlan:
                      resolved and injected by ``StradsEngine.execute``,
                      so ``fit(plan=...)`` overrides policy without
                      touching app config.
+    partitioner:     the partition policy, as a declarative
+                     :class:`~repro.part.spec.PartitionerSpec` (kind ∈
+                     static | size_balanced | load_balanced plus its
+                     parameters).  ``None`` = the app's
+                     ``default_partitioner_spec()``; the resolved
+                     partitioner owns the variable→worker
+                     :class:`~repro.part.assignment.Assignment`, and the
+                     engine checks it for rebalances at the
+                     ``checkpoint_every`` chunk boundaries — the other
+                     half of the paper's primitive pair, swappable from
+                     the plan exactly like the scheduler.
     """
 
     executor: str = "scan"
@@ -97,6 +109,7 @@ class ExecutionPlan:
     donate: bool = True
     workers: Optional[int] = None
     scheduler: Optional[SchedulerSpec] = None
+    partitioner: Optional[PartitionerSpec] = None
 
     def __post_init__(self):
         if self.executor not in EXECUTORS:
@@ -149,6 +162,12 @@ class ExecutionPlan:
                 f"scheduler must be None or a repro.sched.SchedulerSpec "
                 f"(its own __post_init__ validates the policy); got "
                 f"{type(self.scheduler).__name__}")
+        if self.partitioner is not None \
+                and not isinstance(self.partitioner, PartitionerSpec):
+            raise ValueError(
+                f"partitioner must be None or a repro.part.PartitionerSpec "
+                f"(its own __post_init__ validates the policy); got "
+                f"{type(self.partitioner).__name__}")
 
     # -- derived views -------------------------------------------------------
 
@@ -183,6 +202,9 @@ class ExecutionPlan:
         if isinstance(obj.get("scheduler"), dict):
             obj = dict(obj,
                        scheduler=SchedulerSpec.from_json(obj["scheduler"]))
+        if isinstance(obj.get("partitioner"), dict):
+            obj = dict(obj, partitioner=PartitionerSpec.from_json(
+                obj["partitioner"]))
         return cls(**obj)
 
 

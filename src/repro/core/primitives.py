@@ -70,6 +70,47 @@ is the **engine-owned scheduler carry**:
   injected schedulers; the VarTable path remains for apps that keep a
   priority table in their state).
 
+The partition-injection contract
+--------------------------------
+
+Partitioning — the paper's *other* headline primitive — is declarative
+too: a :class:`~repro.part.spec.PartitionerSpec` on the
+:class:`~repro.core.plan.ExecutionPlan` (or the app's
+``default_partitioner_spec()`` when the plan leaves it ``None``).  The
+engine resolves it into a :class:`~repro.part.protocol.Partitioner`
+(``repro.part.build_partitioner``, using the app's ``num_schedulable()``
+count, the mesh width, and the optional per-variable byte vector
+``partition_sizes()``) and injects the resulting variable→worker
+:class:`~repro.part.assignment.Assignment` via ``use_partition()``
+before tracing; apps read ``self.assignment`` if their primitives
+consume ownership (the built-in apps' math is ownership-agnostic — the
+assignment governs the model store's placement bookkeeping and the
+Fig-3 byte accounting).
+
+The repartition loop is **engine-owned and host-side**, mirroring the
+scheduler-carry pattern one level up:
+
+* the engine checks for rebalances at the ``plan.checkpoint_every``
+  chunk boundaries of ``StradsEngine.execute`` — the one place state is
+  already synced to the host, so a move is a ``KVStore.repartition``
+  re-placement, never XLA-program surgery;
+* the activity signal feeding the load balancer is the |Δ| of the app's
+  ``partition_signal(state)`` (a ``(J,)`` per-variable statistic, e.g.
+  Lasso's β) across each chunk — the partition-level twin of the
+  priority signal ``sched_update`` feeds the dynamic scheduler;
+* compiled-program caches are keyed per assignment (a rebalance is one
+  cache miss, a swap back is a hit), and the SSP server/cache split in
+  :mod:`repro.ps` re-derives from the repartitioned KVStore specs;
+* the assignment (+ the partitioner's activity stats) rides the
+  ``{"state", "carry", "assignment"}`` checkpoint payload, so a resumed
+  run replays the same rebalance decisions bit-exactly
+  (``execute(..., partition=...)``);
+* apps declare which kinds they can host via
+  ``supported_partitioner_kinds`` (e.g. LDA's rotation owns a frozen
+  contiguous block map, so only ``"static"`` applies) — the engine
+  rejects a plan naming an unlisted kind at injection time, never at
+  trace time, exactly like ``supported_scheduler_kinds``.
+
 The v2 write contract (VarTable-mediated push/pull)
 ---------------------------------------------------
 
@@ -180,6 +221,14 @@ class StradsAppBase:
     #: never at trace time)
     supported_scheduler_kinds = None
 
+    #: the injected variable→worker Assignment (set by the engine; None =
+    #: no partitioner resolved — the pre-subsystem behavior)
+    assignment = None
+
+    #: which PartitionerSpec kinds this app can host (None = any; same
+    #: injection-time rejection rule as supported_scheduler_kinds)
+    supported_partitioner_kinds = None
+
     def static_phase(self, t: int) -> int:
         return 0
 
@@ -202,6 +251,35 @@ class StradsAppBase:
     def use_scheduler(self, scheduler) -> None:
         """Receive the engine-resolved :class:`~repro.sched.Scheduler`."""
         self.scheduler = scheduler
+
+    # -- partition injection -------------------------------------------------
+
+    def default_partitioner_spec(self) -> Optional[Any]:
+        """The partition policy this app runs when the plan names none
+        (a :class:`~repro.part.spec.PartitionerSpec` or ``None`` for
+        apps that manage placement entirely through ``state_specs()``
+        with no variable-ownership story)."""
+        return None
+
+    def use_partition(self, assignment) -> None:
+        """Receive the engine-resolved variable→worker
+        :class:`~repro.part.assignment.Assignment` (``None`` clears
+        it)."""
+        self.assignment = assignment
+
+    def partition_signal(self, state):
+        """A ``(num_schedulable(),)`` per-variable statistic whose |Δ|
+        across a chunk is the load balancer's activity measure (e.g.
+        Lasso's β — |Δβ| is exactly the dynamic scheduler's priority
+        signal).  ``None`` (the default) means the app emits no
+        activity signal and cannot host a ``load_balanced``
+        partitioner."""
+        return None
+
+    def partition_sizes(self):
+        """Per-variable byte sizes for the ``size_balanced`` kind
+        (``None`` = uniform)."""
+        return None
 
     def var_roles(self) -> dict:
         """Leaf-path → :class:`~repro.core.kvstore.VarSpec` role

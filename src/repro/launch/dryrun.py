@@ -24,10 +24,15 @@ collectives) instead of the BSP scan:
     PYTHONPATH=src python -m repro.launch.dryrun --engine lda \
         --workers 16 --rounds 16 --staleness 2
 
+``--scheduler``/``--rho`` and ``--partitioner`` override the app's
+default scheduling/partitioning policies from flags; the resolved
+``SchedulerSpec``/``PartitionerSpec`` dicts (and the initial
+variable→worker assignment's shape) are recorded in the artifact.
+
 ``--plan plan.json`` (with ``--engine``) AOT-lowers a declarative
 :class:`repro.core.ExecutionPlan` instead of the per-flag form — the
-plan's executor/rounds/staleness/workers drive the lowering and the plan
-dict is recorded in the result JSON:
+plan's executor/rounds/staleness/workers/scheduler/partitioner drive
+the lowering and the plan dict is recorded in the result JSON:
 
     PYTHONPATH=src python -m repro.launch.dryrun --engine lasso \
         --plan examples/plans/ssp_s2.json
@@ -208,7 +213,8 @@ def engine_rounds(engine: str, workers: int, rounds: int,
 
 def run_engine(engine: str, workers: int, rounds: int, depth: int,
                staleness=None, unroll: int = 1, scheduler=None,
-               sched_kind: str = "", rho=None) -> dict:
+               sched_kind: str = "", rho=None, partitioner=None,
+               part_kind: str = "") -> dict:
     """Lower + compile the scanned (or, with ``staleness``, the SSP)
     STRADS executor on a ``workers``-wide data mesh (a slice of the
     forced-512 topology).  ``rounds`` must already be step-aligned
@@ -216,7 +222,11 @@ def run_engine(engine: str, workers: int, rounds: int, depth: int,
     :class:`repro.sched.SchedulerSpec` overriding the app default;
     ``sched_kind``/``rho`` are the flag form, resolved against the app's
     own ``default_scheduler_spec()`` (so ``--rho`` alone moves only the
-    threshold).  The resolved spec dict is recorded in the result."""
+    threshold).  ``partitioner``/``part_kind`` do the same for the
+    :class:`repro.part.PartitionerSpec` (flag form built by
+    ``PartitionerSpec.default_for``).  The resolved spec dicts — and the
+    initial variable→worker assignment's shape — are recorded in the
+    result."""
     import numpy as np
     from jax.sharding import Mesh
 
@@ -226,11 +236,21 @@ def run_engine(engine: str, workers: int, rounds: int, depth: int,
         scheduler = _override_spec(eng.app.default_scheduler_spec(),
                                    sched_kind, rho)
     eng.set_scheduler(scheduler)               # None → app default
+    if partitioner is None and part_kind:
+        from ..part import PartitionerSpec
+        partitioner = PartitionerSpec.default_for(part_kind)
+    eng.set_partitioner(partitioner)           # None → app default
 
     out = {"engine": engine, "workers": workers, "rounds": rounds,
            "pipeline_depth": depth, **meta}
     if eng.scheduler_spec is not None:
         out["scheduler"] = eng.scheduler_spec.to_json()
+    if eng.partitioner_spec is not None:
+        out["partitioner"] = eng.partitioner_spec.to_json()
+        asgn = eng.partition_assignment
+        out["assignment"] = {"num_vars": asgn.num_vars,
+                             "num_workers": asgn.num_workers,
+                             "version": asgn.version}
     if unroll != 1:
         out["phase_unroll"] = unroll
     import jax.numpy as jnp
@@ -329,14 +349,20 @@ def main():
                     help="with --engine: dependency threshold ρ for the "
                          "dynamic scheduler kinds (overrides the app "
                          "default spec)")
+    ap.add_argument("--partitioner", default="",
+                    help="with --engine: PartitionerSpec kind overriding "
+                         "the app's default partition policy (static|"
+                         "size_balanced|load_balanced)")
     args = ap.parse_args()
     if args.plan and not args.engine:
         ap.error("--plan requires --engine (plans drive the STRADS "
                  "executor lowering, not the arch × shape specs)")
-    if args.plan and (args.scheduler or args.rho is not None):
-        ap.error("--scheduler/--rho conflict with --plan (the plan's "
-                 "scheduler field — possibly null = app default — is "
-                 "authoritative); edit the plan file instead")
+    if args.plan and (args.scheduler or args.rho is not None
+                      or args.partitioner):
+        ap.error("--scheduler/--rho/--partitioner conflict with --plan "
+                 "(the plan's scheduler/partitioner fields — possibly "
+                 "null = app default — are authoritative); edit the "
+                 "plan file instead")
 
     os.makedirs(RESULTS_DIR, exist_ok=True)
 
@@ -346,6 +372,7 @@ def main():
         workers, rounds_req = args.workers, args.rounds
         depth, staleness, unroll = args.pipeline_depth, args.staleness, 1
         spec = None
+        part_spec = None
         if args.plan:
             from ..core import ExecutionPlan
             with open(args.plan) as f:
@@ -359,6 +386,7 @@ def main():
             staleness = plan.staleness if plan.executor == "ssp" else None
             unroll = plan.phase_unroll
             spec = plan.scheduler         # None → the app's default policy
+            part_spec = plan.partitioner  # None → the app's default
         variant = (f"s{staleness}" if staleness is not None
                    else f"d{depth}")
         if spec is not None:
@@ -369,6 +397,10 @@ def main():
             variant += f"__{args.scheduler or 'default'}"
             if args.rho is not None:
                 variant += f"-rho{args.rho:g}"
+        if part_spec is not None:
+            variant += f"__part-{part_spec.kind}"
+        elif args.partitioner:
+            variant += f"__part-{args.partitioner}"
         rounds = engine_rounds(args.engine, workers, rounds_req, staleness,
                                unroll)
         if rounds != rounds_req:
@@ -384,7 +416,9 @@ def main():
         res = run_engine(args.engine, workers, rounds, depth, staleness,
                          unroll=unroll, scheduler=spec,
                          sched_kind="" if args.plan else args.scheduler,
-                         rho=None if args.plan else args.rho)
+                         rho=None if args.plan else args.rho,
+                         partitioner=part_spec,
+                         part_kind="" if args.plan else args.partitioner)
         if plan is not None:
             # record what actually ran: engine_rounds may have aligned
             # the round count to whole SSP steps

@@ -107,7 +107,11 @@ def main(argv=None):
         unsupported = [name for name, v in
                        (("telemetry", plan.telemetry),
                         ("collect_every", plan.collect_every),
-                        ("workers", plan.workers)) if v]
+                        ("workers", plan.workers),
+                        # block-coordinate training has no variable-
+                        # ownership store to repartition — only the
+                        # paper apps consume plan.partitioner
+                        ("partitioner", plan.partitioner)) if v]
         if unsupported:
             ap.error(f"--plan fields the trainer has no surface for "
                      f"(they would be silently dropped): {unsupported}")

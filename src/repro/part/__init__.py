@@ -1,0 +1,37 @@
+"""The pluggable partitioning subsystem.
+
+Partitioning is the paper's *other* headline primitive ("partitioning
+and update scheduling of model variables"); this package makes partition
+*policy* a first-class, declarative part of the execution surface,
+mirroring :mod:`repro.sched` exactly:
+
+* :class:`PartitionerSpec` (:mod:`repro.part.spec`) — the frozen,
+  hashable, JSON-round-trippable policy value that rides
+  ``ExecutionPlan.partitioner``;
+* :class:`Assignment` (:mod:`repro.part.assignment`) — the hashable
+  variable→worker ownership value the engine keys compiled-program
+  caches on and checkpoints alongside the executor carry;
+* :class:`Partitioner` (:mod:`repro.part.protocol`) — the formal
+  ``init_assignment / init_stats / measure / should_rebalance /
+  propose_assignment`` contract every policy implements;
+* :mod:`repro.part.partitioners` — the three policies (static,
+  size-balanced, load-balanced) sharing ONE greedy bin-packer
+  (:func:`greedy_balance`).
+
+The engine drives the protocol at ``plan.checkpoint_every`` chunk
+boundaries (:meth:`repro.core.engine.StradsEngine.execute`) — state is
+already host-synced there, so repartitioning is a host-side
+re-placement, never XLA-program surgery.
+"""
+from .spec import PARTITIONER_KINDS, PartitionerSpec
+from .assignment import Assignment, contiguous_assignment
+from .protocol import Partitioner, PartitionerBase, greedy_balance
+from .partitioners import (LoadBalancedPartitioner, SizeBalancedPartitioner,
+                           StaticPartitioner, build_partitioner)
+
+__all__ = [
+    "PARTITIONER_KINDS", "PartitionerSpec", "Assignment",
+    "contiguous_assignment", "Partitioner", "PartitionerBase",
+    "greedy_balance", "LoadBalancedPartitioner",
+    "SizeBalancedPartitioner", "StaticPartitioner", "build_partitioner",
+]

@@ -1,0 +1,120 @@
+"""The formal :class:`Partitioner` protocol (the partition-injection
+contract).
+
+The engine drives it host-side, at the ``plan.checkpoint_every`` chunk
+boundaries of :meth:`repro.core.engine.StradsEngine.execute` — the one
+place the state is already synced to the host, so a repartition needs no
+XLA-program surgery (the compiled-program caches are keyed per
+assignment instead):
+
+    assignment = partitioner.init_assignment()          # once per run
+    stats      = partitioner.init_stats()               # None if stateless
+    # ... chunk of rounds executes ...
+    stats      = partitioner.measure(stats, assignment, activity)
+    if partitioner.should_rebalance(stats, assignment, t):
+        assignment' = partitioner.propose_assignment(stats, assignment)
+
+* ``init_assignment`` returns the initial variable→worker
+  :class:`~repro.part.assignment.Assignment`.
+* ``init_stats`` returns the partitioner's host-side activity state
+  (e.g. the load-balancer's per-variable activity EMA) or ``None`` for
+  stateless policies.  The engine owns it: it checkpoints alongside the
+  assignment (the ``{"state", "carry", "assignment"}`` payload), so a
+  resumed run reproduces the same rebalance decisions bit-exactly.
+* ``measure`` folds one chunk's observed per-variable activity — the
+  |Δsignal| the app's ``partition_signal`` exposes (Δx magnitude; the
+  same quantity the dynamic scheduler's priorities track) — into the
+  stats.  ``activity`` is a ``(J,)`` numpy array, or ``None`` when the
+  app declares no signal.
+* ``should_rebalance`` decides whether this chunk boundary moves
+  variables (cadence + imbalance threshold for the load balancer;
+  always ``False`` for the static kinds).
+* ``propose_assignment`` returns the new assignment (``version`` bumped)
+  — deterministic given (stats, assignment), which is what makes a
+  mid-run rebalance resumable.
+
+Everything is host-side numpy: partitioners never trace.  The chosen
+assignment reaches devices only through
+``StradsEngine.apply_assignment`` (KVStore replacement + app injection +
+per-assignment compiled-program keys).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from .assignment import Assignment
+
+Stats = Any     # partitioner activity state (host-side numpy, or None)
+
+
+@runtime_checkable
+class Partitioner(Protocol):
+    """The pluggable partition policy (built from a
+    :class:`~repro.part.spec.PartitionerSpec` by
+    :func:`~repro.part.build_partitioner`)."""
+
+    def init_assignment(self) -> Assignment: ...
+
+    def init_stats(self) -> Stats: ...
+
+    def measure(self, stats: Stats, assignment: Assignment,
+                activity: Optional[np.ndarray]) -> Stats: ...
+
+    def should_rebalance(self, stats: Stats, assignment: Assignment,
+                         t: int) -> bool: ...
+
+    def propose_assignment(self, stats: Stats,
+                           assignment: Assignment) -> Assignment: ...
+
+
+class PartitionerBase:
+    """Stateless defaults: no stats, never rebalances, identity
+    proposal."""
+
+    def init_stats(self) -> Optional[Any]:
+        return None
+
+    def measure(self, stats, assignment, activity):
+        return stats
+
+    def should_rebalance(self, stats, assignment, t) -> bool:
+        return False
+
+    def propose_assignment(self, stats, assignment) -> Assignment:
+        return assignment
+
+
+def greedy_balance(weights: np.ndarray, num_workers: int,
+                   version: int = 0) -> Assignment:
+    """Greedy least-loaded bin-packing with balanced capacities — ONE
+    implementation for both balancing kinds (sizes for
+    ``size_balanced``, activity EMA for ``load_balanced``).
+
+    Variables are placed heaviest-first onto the least-loaded worker
+    that still has capacity; capacities are the balanced variable counts
+    ``ceil``/``floor(J/U)``, so a load rebalance can never silently
+    unbalance the per-worker variable (memory) counts.  Ties break by
+    lowest index / lowest worker id — fully deterministic, which is what
+    makes a mid-run rebalance checkpoint-resumable."""
+    w = np.asarray(weights, np.float64)
+    J = w.shape[0]
+    if num_workers < 1:
+        raise ValueError(f"num_workers must be >= 1; got {num_workers}")
+    base, extra = divmod(J, num_workers)
+    capacity = np.full((num_workers,), base, np.int64)
+    capacity[:extra] += 1
+    # stable heaviest-first: ties keep index order
+    order = np.argsort(-w, kind="stable")
+    owner = np.empty((J,), np.int64)
+    loads = np.zeros((num_workers,), np.float64)
+    filled = np.zeros((num_workers,), np.int64)
+    for j in order:
+        open_w = np.flatnonzero(filled < capacity)
+        u = open_w[np.argmin(loads[open_w])]     # argmin ties → lowest id
+        owner[j] = u
+        loads[u] += w[j]
+        filled[u] += 1
+    return Assignment(owner=tuple(int(o) for o in owner),
+                      num_workers=num_workers, version=version)

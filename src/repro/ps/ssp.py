@@ -333,9 +333,17 @@ def _build_ssp(eng, num_steps: int, staleness: int,
     L = rounds_per_step(eng, staleness)
 
     def scanned(state, data, rng, t0, clocks, sc0):
-        server = ParameterServer.from_state(eng.mesh, state,
-                                            eng._sspec(state),
-                                            roles=eng.app_roles())
+        # The server/cache split follows the engine's KV store when one
+        # was built (place_state) — a repartition re-derives that
+        # store's VarSpecs, and the per-assignment program cache key
+        # guarantees this trace re-runs after a move; engines driven
+        # without place_state fall back to the app's declarations.
+        if eng.kvstore is not None:
+            server = ParameterServer(eng.mesh, eng.kvstore)
+        else:
+            server = ParameterServer.from_state(eng.mesh, state,
+                                                eng._sspec(state),
+                                                roles=eng.app_roles())
         hooks = _make_hooks(eng.app, VarTable(server.store))
 
         def step(carry, _):
@@ -439,7 +447,11 @@ def _build_ssp(eng, num_steps: int, staleness: int,
 
 def _get_ssp_fn(eng, num_steps: int, staleness: int,
                 collect: Optional[Callable], donate: bool):
-    key = ("ssp", eng._active_spec, num_steps, staleness, collect, donate)
+    # keyed per (SchedulerSpec, Assignment): a partition move re-derives
+    # the server/cache split from the repartitioned KVStore specs at the
+    # next trace, and a swap back to a previous assignment is a cache hit
+    key = ("ssp", eng._active_spec, eng._assignment, num_steps, staleness,
+           collect, donate)
     hit = eng._scan_cache.get(key)
     if hit is None:
         info: dict = {}

@@ -1,0 +1,156 @@
+"""`core/kvstore` edge cases: VarSpec role validation,
+``specs_from_tree``/``store_from_tree``/``place_tree`` mismatch
+handling, replicated↔sharded round-trips through
+``nbytes_per_device``/``repartition``, and VarTable role derivation for
+nested pytrees."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import single_device_mesh
+from repro.core.kvstore import (VarSpec, VarTable, is_replicated,
+                                specs_from_tree, store_from_tree)
+from repro.part import contiguous_assignment
+
+
+# ---------------------------------------------------------------------------
+# VarSpec
+# ---------------------------------------------------------------------------
+
+def test_varspec_role_validated_at_construction():
+    VarSpec((4,), jnp.float32, P(), role="model")
+    VarSpec((4,), jnp.float32, P(), role="priority")
+    with pytest.raises(ValueError, match="'model' or 'priority'|model"):
+        VarSpec((4,), jnp.float32, P(), role="prio")
+    with pytest.raises(ValueError, match="role"):
+        VarSpec((4,), jnp.float32, P(), role="")
+
+
+def test_varspec_nbytes_replicated_vs_sharded_roundtrip():
+    mesh = single_device_mesh()          # 1-wide 'data' axis
+    rep = VarSpec((8, 4), jnp.float32, P())
+    shd = VarSpec((8, 4), jnp.float32, P("data"))
+    assert rep.nbytes() == shd.nbytes() == 8 * 4 * 4
+    # per-device bytes: replicated = full; sharded = full / mesh width
+    U = mesh.shape["data"]
+    assert rep.nbytes_per_device(mesh) == rep.nbytes()
+    assert shd.nbytes_per_device(mesh) == shd.nbytes() // U
+    assert is_replicated(rep.spec) and not is_replicated(shd.spec)
+
+
+# ---------------------------------------------------------------------------
+# specs_from_tree / store_from_tree / place_tree
+# ---------------------------------------------------------------------------
+
+def _nested_state():
+    return {"model": {"w": jnp.zeros((4, 2)), "p": jnp.zeros((4,))},
+            "r": jnp.zeros((6,))}
+
+
+def _nested_specs():
+    return {"model": {"w": P(), "p": P()}, "r": P("data")}
+
+
+def test_specs_from_tree_nested_paths_and_roles():
+    specs = specs_from_tree(_nested_state(), _nested_specs(),
+                            roles={"model/p": "priority"})
+    assert set(specs) == {"model/w", "model/p", "r"}
+    assert specs["model/p"].role == "priority"
+    assert specs["model/w"].role == "model"
+    assert specs["r"].spec == P("data")
+
+
+def test_specs_from_tree_rejects_mismatches():
+    state = _nested_state()
+    # leaf-count mismatch
+    with pytest.raises(ValueError, match="leaves"):
+        specs_from_tree(state, {"model": {"w": P()}, "r": P("data")})
+    # unknown role path
+    with pytest.raises(ValueError, match="unknown state leaves"):
+        specs_from_tree(state, _nested_specs(), roles={"nope": "priority"})
+    # an invalid role name surfaces the VarSpec validation
+    with pytest.raises(ValueError, match="role"):
+        specs_from_tree(state, _nested_specs(),
+                        roles={"model/p": "hot"})
+
+
+def test_place_tree_roundtrips_values_and_rejects_unknown_leaves():
+    mesh = single_device_mesh()
+    state = {"a": jnp.arange(4.0), "b": jnp.ones((2, 2))}
+    store = store_from_tree(mesh, state, {"a": P(), "b": P("data")})
+    placed = store.place_tree(state)
+    for k in state:
+        assert (np.asarray(placed[k]) == np.asarray(state[k])).all()
+    # a tree with a leaf the store never declared cannot be placed
+    with pytest.raises(KeyError):
+        store.place_tree({"a": jnp.arange(4.0), "c": jnp.ones((2,))})
+
+
+def test_store_accounting_follows_repartition():
+    mesh = single_device_mesh()
+    state = {"a": jnp.zeros((8, 4)), "b": jnp.zeros((8,))}
+    store = store_from_tree(mesh, state, {"a": P(), "b": P("data")})
+    total = store.total_bytes()
+    assert total == 8 * 4 * 4 + 8 * 4
+    before = store.bytes_per_device()
+    asgn = contiguous_assignment(8, 1)
+    # sharded → replicated round-trip through repartition: the spec is
+    # re-derived and the accounting moves with it (on a 1-wide mesh the
+    # byte numbers coincide; the spec change is what must stick)
+    state2 = store.repartition(asgn, state, leaf_specs={"b": P()})
+    assert store.specs["b"].spec == P()
+    assert store.assignment is asgn
+    assert store.bytes_per_device() == before     # 1-device: same bytes
+    assert (np.asarray(state2["b"]) == np.asarray(state["b"])).all()
+    # ... and back
+    store.repartition(asgn, leaf_specs={"b": P("data")})
+    assert store.specs["b"].spec == P("data")
+    assert store.partition_specs()["b"] == P("data")
+
+
+# ---------------------------------------------------------------------------
+# VarTable role derivation (nested pytrees)
+# ---------------------------------------------------------------------------
+
+def test_vartable_derives_nested_commit_and_priority_sets():
+    mesh = single_device_mesh()
+    state = _nested_state()
+    store = store_from_tree(mesh, state, _nested_specs(),
+                            roles={"model/p": "priority"})
+    table = VarTable(store)
+    assert table.worker_resident == {"r"}
+    assert table.priority_names == {"model/p"}
+
+    # commit-through: a nested `local` whose path names the sharded leaf
+    local = {"r": jnp.full((6,), 7.0), "z": jnp.ones((3,))}
+    committed = table.commit_local(state, local, phase=0)
+    assert (np.asarray(committed["r"]) == 7.0).all()
+    assert (np.asarray(committed["model"]["w"]) == 0.0).all()
+    deferred = table.defer_local(local, phase=0)
+    assert set(deferred) == {"z"}
+    rebuilt = table.rebuild_local(committed, deferred, phase=0)
+    assert (np.asarray(rebuilt["r"]) == 7.0).all()
+    assert (np.asarray(rebuilt["z"]) == 1.0).all()
+
+    # in-flight exclusion zeroes only the nested priority leaf
+    view = {"model": {"w": jnp.ones((4, 2)), "p": jnp.ones((4,))},
+            "r": jnp.ones((6,))}
+    marked = table.mark_scheduled(view, jnp.array([1, 3]))
+    assert list(np.asarray(marked["model"]["p"])) == [1.0, 0.0, 1.0, 0.0]
+    assert (np.asarray(marked["model"]["w"]) == 1.0).all()
+    with pytest.raises(TypeError, match="integer"):
+        table.mark_scheduled(view, jnp.array([0.5, 1.5]))
+
+
+def test_vartable_rejects_structure_drift():
+    mesh = single_device_mesh()
+    state = _nested_state()
+    store = store_from_tree(mesh, state, _nested_specs())
+    table = VarTable(store)
+    table.commit_local(state, {"r": jnp.zeros((6,))}, phase=0)
+    with pytest.raises(ValueError, match="different"):
+        table.commit_local(state, {"z": jnp.zeros((3,))}, phase=0)
+    with pytest.raises(ValueError, match="defer_local"):
+        table.rebuild_local(state, {}, phase=5)
