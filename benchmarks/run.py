@@ -12,9 +12,9 @@ import argparse
 import sys
 import traceback
 
-from . import (bench_lasso, bench_lda, bench_memory, bench_mf,
-               bench_part, bench_pipeline, bench_scaling, bench_sched,
-               bench_ssp)
+from . import (bench_kernels, bench_lasso, bench_lda, bench_memory,
+               bench_mf, bench_part, bench_pipeline, bench_scaling,
+               bench_sched, bench_ssp)
 
 BENCHES = {
     "lasso": bench_lasso,       # Fig 8/9 right
@@ -26,6 +26,7 @@ BENCHES = {
     "ssp": bench_ssp,           # bounded staleness vs BSP (repro.ps)
     "sched": bench_sched,       # scheduler-policy ρ × U′ sweep (repro.sched)
     "part": bench_part,         # partition-policy static vs load_balanced
+    "kernels": bench_kernels,   # kernel backend reference vs pallas
 }
 
 
@@ -54,6 +55,11 @@ def main(argv=None) -> None:
             out = mod.run(quick=not args.full)
             for row in mod.rows(out):
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")
+            # benches may expose extra summary lines (e.g. the resolved
+            # KernelSpec/backend dicts from bench_kernels)
+            if hasattr(mod, "summary"):
+                for line in mod.summary(out):
+                    print(line)
         except Exception:
             traceback.print_exc()
             failed.append(name)

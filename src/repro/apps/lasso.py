@@ -26,6 +26,14 @@ declares its default ``SchedulerSpec`` (from ``cfg.scheduler``) and
 consumes whatever the plan resolves — swapping ρ/U′/kind is a plan edit,
 not an app change.  The Δβ priority history is the engine-owned scheduler
 carry (``EngineCarry.sched_carry``), no longer a state leaf.
+
+The compute hot-spots follow the same contract (kernel-injection): the
+push partials and the ρ-filter Gram block dispatch through
+``self.kernels`` — the backend the engine resolves from
+``plan.kernels`` (a :class:`~repro.kernels.spec.KernelSpec`) — so
+swapping the reference jnp oracles for the fused Pallas kernels is a
+plan edit too.  ``cfg.kernel_backend`` survives as the *default* the
+app declares when the plan leaves ``kernels=None``.
 """
 from __future__ import annotations
 
@@ -39,7 +47,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import StradsAppBase, StradsEngine
 from repro.core.compat import shard_map
-from repro.kernels import ops
+from repro.kernels import KernelSpec, build_kernels
 from repro.part import PartitionerSpec
 from repro.sched import SchedulerSpec
 
@@ -60,7 +68,10 @@ class LassoConfig:
     rho: float = 0.3             # ρ  — dependency threshold (STRADS only)
     eta: float = 1e-6            # η  — priority floor
     scheduler: str = "strads"    # "strads" | "rr" (random) | "cyclic"
-    kernel_backend: str = "auto"  # hot-spot kernels: auto|ref|interpret|pallas
+    # Default hot-spot kernel backend when the plan leaves kernels=None
+    # ("auto" = pallas on TPU, reference elsewhere); a plan-level
+    # KernelSpec always wins.
+    kernel_backend: str = "auto"  # auto | ref | interpret | pallas
 
 
 class StradsLasso(StradsAppBase):
@@ -70,6 +81,7 @@ class StradsLasso(StradsAppBase):
 
     supported_scheduler_kinds = ("dynamic_priority", "random",
                                  "round_robin")
+    supported_kernel_kinds = ("reference", "pallas")
 
     def __init__(self, cfg: LassoConfig):
         self.cfg = cfg
@@ -93,6 +105,31 @@ class StradsLasso(StradsAppBase):
 
     def num_schedulable(self) -> int:
         return self.cfg.num_features
+
+    # -- kernel injection ----------------------------------------------------
+
+    def default_kernel_spec(self) -> KernelSpec:
+        kb = self.cfg.kernel_backend
+        if kb == "auto":
+            if jax.default_backend() == "tpu":
+                return KernelSpec.default_for("pallas")
+            return KernelSpec(kind="reference")
+        if kb == "ref":
+            return KernelSpec(kind="reference")
+        if kb in ("pallas", "interpret"):
+            # build_kernels flips interpret mode from the live platform,
+            # so both legacy names resolve to the same spec.
+            return KernelSpec.default_for("pallas")
+        raise ValueError(f"LassoConfig.kernel_backend must be 'auto', "
+                         f"'ref', 'interpret' or 'pallas'; got {kb!r}")
+
+    def _kernels(self):
+        # Engine-less direct calls (tests poking push/schedule_stats)
+        # lazily self-inject the config default; under an engine the
+        # resolved plan backend is already installed via use_kernels.
+        if self.kernels is None:
+            self.kernels = build_kernels(self.default_kernel_spec())
+        return self.kernels
 
     # -- partition injection -------------------------------------------------
     # Coefficients are interchangeable, so every partition kind applies:
@@ -141,9 +178,9 @@ class StradsLasso(StradsAppBase):
 
     def schedule_stats(self, data, state, candidates, phase):
         # Candidate Gram block over this worker's rows: (X_C^p)ᵀ X_C^p —
-        # the ρ-filter hot-spot, served by the gram_block Pallas kernel.
+        # the ρ-filter hot-spot, served by the injected gram_block kernel.
         Xc = jnp.take(data["X"], candidates, axis=1)
-        return ops.gram_block(Xc, backend=self.cfg.kernel_backend)
+        return self._kernels().gram_block(Xc)
 
     def schedule(self, state, carry, candidates, stats, rng, t, phase):
         idx, mask = self.scheduler.finalize(candidates, stats)
@@ -162,10 +199,9 @@ class StradsLasso(StradsAppBase):
 
     def push(self, data, state, sched, phase):
         # z_{j,p} = (x_j^p)ᵀ r^p for each scheduled j (paper f₃) — the
-        # push hot-spot, served by the lasso_partial Pallas kernel.
+        # push hot-spot, served by the injected lasso_partial kernel.
         Xb = jnp.take(data["X"], sched["idx"], axis=1)   # (n_p, U)
-        z = ops.lasso_partial(Xb, state["r"],
-                              backend=self.cfg.kernel_backend)
+        z = self._kernels().lasso_partial(Xb, state["r"])
         return z, None
 
     def pull(self, state, sched, z, local, data, phase):

@@ -109,6 +109,9 @@ class StradsLDA(StradsAppBase):
     """Word-rotation model-parallel collapsed Gibbs on STRADS primitives."""
 
     supported_scheduler_kinds = ("rotation",)
+    # Gibbs sampling is gather/scan-bound, not matmul-bound: no Pallas
+    # hot-spot exists, so a plan asking for one is rejected at injection.
+    supported_kernel_kinds = ("reference",)
 
     def __init__(self, cfg: LDAConfig):
         self.cfg = cfg

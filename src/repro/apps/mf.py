@@ -59,6 +59,9 @@ class StradsMF(StradsAppBase):
     # rank blocks are mutually independent given the other factor — no
     # dependency filter applies, so only the stateless dispatch kinds
     supported_scheduler_kinds = ("round_robin", "random")
+    # rank-1 outer-product updates have no fused Pallas kernel yet —
+    # only the reference backend applies, enforced at injection time
+    supported_kernel_kinds = ("reference",)
 
     def __init__(self, cfg: MFConfig):
         self.cfg = cfg

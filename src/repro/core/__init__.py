@@ -7,9 +7,13 @@ names are re-exported here for compatibility, and the old
 remain as deprecation shims.  Partition policy mirrors it in
 :mod:`repro.part` (``PartitionerSpec`` + the ``Partitioner`` protocol +
 the variable→worker ``Assignment``), completing the paper's primitive
-pair: ``ExecutionPlan`` swaps both without touching app code.
+pair: ``ExecutionPlan`` swaps both without touching app code.  Kernel
+backends follow in :mod:`repro.kernels` (``KernelSpec`` +
+``build_kernels``): the round body's compute hot-spots are the third
+leg of the same declarative surface.
 """
 from .primitives import (RoundResult, StradsApp, StradsAppBase, tree_psum)
+from ..kernels import KERNEL_KINDS, KernelSpec, build_kernels
 from ..part import (PARTITIONER_KINDS, Assignment, Partitioner,
                     PartitionerSpec, build_partitioner,
                     contiguous_assignment)
@@ -27,6 +31,7 @@ from .plan import EXECUTORS, ExecutionPlan, ExecutionReport
 
 __all__ = [
     "RoundResult", "StradsApp", "StradsAppBase", "tree_psum",
+    "KERNEL_KINDS", "KernelSpec", "build_kernels",
     "PARTITIONER_KINDS", "Assignment", "Partitioner", "PartitionerSpec",
     "build_partitioner", "contiguous_assignment",
     "SCHEDULER_KINDS", "Scheduler", "SchedulerSpec",

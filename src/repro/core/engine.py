@@ -65,9 +65,19 @@ Partition policy is injected the same way (the partitioning contract,
 checks run host-side at the ``checkpoint_every`` chunk boundaries of
 :meth:`StradsEngine.execute` (state is synced there, so a move is a
 ``KVStore.repartition`` re-placement); compiled-program caches are keyed
-per (SchedulerSpec, Assignment), and the assignment + activity stats
-ride the ``{"state", "carry", "assignment"}`` checkpoint payload
-(resumed via ``execute(..., partition=...)``).
+per (SchedulerSpec, Assignment, KernelSpec), and the assignment +
+activity stats ride the ``{"state", "carry", "assignment"}`` checkpoint
+payload (resumed via ``execute(..., partition=...)``).
+
+Kernel backends complete the injection triple (the kernel-injection
+contract, :mod:`repro.core.primitives`): ``plan.kernels`` — or the app's
+``default_kernel_spec()``, falling back to ``kind="reference"`` —
+resolves via ``repro.kernels.build_kernels`` into a backend object the
+app's ``push``/``schedule_stats`` dispatch their hot-spots through
+(``self.kernels.lasso_partial`` / ``.gram_block``).  The backend is
+stateless (no carry, no checkpoint payload); it only changes what the
+traced round lowers to — fused Pallas kernels on TPU, interpret-mode
+automatically elsewhere, the pure-jnp oracles for ``"reference"``.
 
 The engine runs identically on a single device (unit tests, laptop-scale
 experiments) and on multi-chip meshes; the production 256/512-chip
@@ -86,6 +96,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..kernels import KernelSpec, build_kernels
 from ..part import Assignment, PartitionerSpec, build_partitioner
 from ..sched import SchedulerSpec, build_scheduler
 from .compat import make_mesh, shard_map
@@ -135,12 +146,16 @@ class StradsEngine:
     partitioner: optional :class:`~repro.part.spec.PartitionerSpec`
                  overriding the app's ``default_partitioner_spec()``
                  the same way (plan > constructor > app).
+    kernels:     optional :class:`~repro.kernels.spec.KernelSpec`
+                 overriding the app's ``default_kernel_spec()`` the same
+                 way (plan > constructor > app > ``reference``).
     """
 
     def __init__(self, app: StradsApp, mesh: Mesh, data_specs: Any,
                  state_specs: Any = None,
                  scheduler: Optional[SchedulerSpec] = None,
-                 partitioner: Optional[PartitionerSpec] = None):
+                 partitioner: Optional[PartitionerSpec] = None,
+                 kernels: Optional[KernelSpec] = None):
         self.app = app
         self.mesh = mesh
         self.data_specs = data_specs
@@ -152,10 +167,13 @@ class StradsEngine:
         # leaves its scheduler field None (plan > constructor > app)
         self._spec_override = scheduler
         self._part_override = partitioner
+        self._kern_override = kernels
         self._active_part_spec: Optional[PartitionerSpec] = None
+        self._active_kern_spec: Optional[KernelSpec] = None
         self.partitioner = None
         self._assignment: Optional[Assignment] = None
         self._part_stats = None
+        self.set_kernels(None)    # before set_scheduler's first round-bind
         self.set_scheduler(None)
         self.set_partitioner(None)
         self.kvstore: Optional[KVStore] = None   # built by place_state
@@ -208,10 +226,11 @@ class StradsEngine:
 
     def _rebind_round(self):
         """(Re)fetch the traced round program for the active
-        (SchedulerSpec, Assignment) pair — called whenever either
-        changes, so a stale program can never serve a new policy or a
-        moved partition."""
-        key = ("round", self._active_spec, self._assignment)
+        (SchedulerSpec, Assignment, KernelSpec) triple — called whenever
+        any of them changes, so a stale program can never serve a new
+        policy, a moved partition, or a swapped kernel backend."""
+        key = ("round", self._active_spec, self._assignment,
+               self._active_kern_spec)
         self._round = self._scan_cache.get(key)
         if self._round is None:
             self._round = self._build_round()
@@ -448,6 +467,63 @@ class StradsEngine:
                 state = self.apply_assignment(new, state)
         return state, sig_after
 
+    # -- kernel injection (the kernel-injection contract) --------------------
+
+    def set_kernels(self, spec: Optional[KernelSpec] = None):
+        """Resolve a :class:`~repro.kernels.spec.KernelSpec` (``None``
+        → the engine's constructor spec, else the app's
+        ``default_kernel_spec()``, else ``kind="reference"`` — the
+        bit-identical pre-KernelSpec round body) into an executable
+        backend (``repro.kernels.build_kernels``: Pallas for Mosaic on
+        TPU, interpret-mode automatically elsewhere), inject it into the
+        app, and rebind the traced round programs.  Idempotent for an
+        unchanged spec, and compiled programs are cached per spec, so a
+        reference↔pallas sweep never recompiles.  Returns the active
+        backend."""
+        if spec is None:
+            spec = self._kern_override
+        resolved = spec if spec is not None else self._default_kern_spec()
+        if resolved is None:
+            resolved = KernelSpec(kind="reference")
+        if resolved == self._active_kern_spec and self._round is not None:
+            return self.kernels
+        kinds = getattr(self.app, "supported_kernel_kinds", None)
+        if kinds is not None and resolved.kind not in kinds:
+            raise ValueError(
+                f"{type(self.app).__name__} cannot dispatch a "
+                f"{resolved.kind!r} kernel backend (it supports "
+                f"{sorted(kinds)}); fix the plan's KernelSpec")
+        backend = build_kernels(resolved)
+        if hasattr(self.app, "use_kernels"):
+            self.app.use_kernels(backend)
+        else:
+            # protocol-only apps: assign directly, mirroring the
+            # scheduler fallback
+            self.app.kernels = backend
+        self._active_kern_spec = resolved
+        # The very first round-bind belongs to set_scheduler (it also
+        # derives _needs_stats); during __init__ this runs before the
+        # scheduler exists, so only REbind here.
+        if self._round is not None:
+            self._rebind_round()
+        return backend
+
+    def _default_kern_spec(self) -> Optional[KernelSpec]:
+        fn = getattr(self.app, "default_kernel_spec", None)
+        return fn() if callable(fn) else None
+
+    @property
+    def kernels(self):
+        """The injected kernel backend (never ``None`` once the engine
+        is constructed — ``reference`` is the floor)."""
+        return getattr(self.app, "kernels", None)
+
+    @property
+    def kernel_spec(self) -> Optional[KernelSpec]:
+        """The resolved spec of the active kernel backend (for
+        artifacts)."""
+        return self._active_kern_spec
+
     # -- traced round pieces (shared by every executor) ---------------------
 
     @property
@@ -576,10 +652,12 @@ class StradsEngine:
             return state
         plan = ExecutionPlan(executor="loop", rounds=num_rounds)
         # execute-equivalence includes the policies: re-resolve the
-        # default specs so a scheduler or partitioner swept in by a
-        # previous execute(plan.…=...) cannot leak into this run
+        # default specs so a scheduler, partitioner, or kernel backend
+        # swept in by a previous execute(plan.…=...) cannot leak into
+        # this run
         self.set_scheduler(None)
         self.set_partitioner(None)
+        self.set_kernels(None)
         self.reset_partition()
         return self._execute_span(state, data, rng, plan, num_rounds, 0,
                                   None, None, callback).state
@@ -801,6 +879,7 @@ class StradsEngine:
                              f"executor='loop' (got {plan.executor!r})")
         self.set_scheduler(plan.scheduler)
         self.set_partitioner(plan.partitioner)
+        self.set_kernels(plan.kernels)
         if partition is not None:
             self.restore_partition(partition)
         elif carry is None:
@@ -1015,7 +1094,8 @@ class StradsEngine:
     def _get_scan_fn(self, num_steps: int, depth: int,
                      collect: Optional[Callable], donate: bool,
                      unroll: int = 1, with_sched0: bool = False):
-        key = (self._active_spec, self._assignment, num_steps, depth,
+        key = (self._active_spec, self._assignment,
+               self._active_kern_spec, num_steps, depth,
                collect, donate, unroll, with_sched0)
         fn = self._scan_cache.get(key)
         if fn is None:
@@ -1103,21 +1183,24 @@ class StradsEngine:
 
 class _SpecBoundFn:
     """A compiled-program handle pinned to the (SchedulerSpec,
-    Assignment) pair it was requested under.  The underlying jit fn
-    traces lazily (at first call/lower) against whatever scheduler and
-    partition assignment are then installed on the app, so a handle
-    obtained before a ``set_scheduler`` swap or an ``apply_assignment``
+    Assignment, KernelSpec) triple it was requested under.  The
+    underlying jit fn traces lazily (at first call/lower) against
+    whatever scheduler, partition assignment, and kernel backend are
+    then installed on the app, so a handle obtained before a
+    ``set_scheduler``/``set_kernels`` swap or an ``apply_assignment``
     move would otherwise silently bake the *wrong* configuration into
-    the per-key cache; this wrapper reinstalls its owning pair first (a
-    cheap no-op when both are already active)."""
+    the per-key cache; this wrapper reinstalls its owning triple first
+    (a cheap no-op when all are already active)."""
 
     def __init__(self, eng: "StradsEngine", spec, fn):
         self._eng, self._spec, self._fn = eng, spec, fn
         self._assignment = eng._assignment
         self._part_spec = eng._active_part_spec
+        self._kern_spec = eng._active_kern_spec
 
     def _bind(self):
         self._eng.set_scheduler(self._spec)
+        self._eng.set_kernels(self._kern_spec)
         if self._eng._active_part_spec != self._part_spec:
             # reinstalling the pinned assignment under a different
             # partitioner (or none) would desync assignment/stats/spec;

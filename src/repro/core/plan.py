@@ -31,6 +31,7 @@ import dataclasses
 import json
 from typing import Any, Optional
 
+from ..kernels.spec import KernelSpec
 from ..part.spec import PartitionerSpec
 from ..sched.spec import SchedulerSpec
 
@@ -96,6 +97,18 @@ class ExecutionPlan:
                      ``checkpoint_every`` chunk boundaries — the other
                      half of the paper's primitive pair, swappable from
                      the plan exactly like the scheduler.
+    kernels:         the compute backend serving the round body's
+                     hot-spots, as a declarative
+                     :class:`~repro.kernels.spec.KernelSpec` (kind ∈
+                     reference | pallas plus tile knobs).  ``None`` =
+                     the app's ``default_kernel_spec()`` (falling back
+                     to ``reference`` — the bit-identical
+                     pre-KernelSpec behavior); a value is resolved via
+                     ``repro.kernels.build_kernels`` and injected by
+                     ``StradsEngine.execute``, with the Pallas kind
+                     automatically running in interpret mode off-TPU —
+                     the third leg of the "everything is a plan edit"
+                     surface.
     """
 
     executor: str = "scan"
@@ -110,6 +123,7 @@ class ExecutionPlan:
     workers: Optional[int] = None
     scheduler: Optional[SchedulerSpec] = None
     partitioner: Optional[PartitionerSpec] = None
+    kernels: Optional[KernelSpec] = None
 
     def __post_init__(self):
         if self.executor not in EXECUTORS:
@@ -168,6 +182,12 @@ class ExecutionPlan:
                 f"partitioner must be None or a repro.part.PartitionerSpec "
                 f"(its own __post_init__ validates the policy); got "
                 f"{type(self.partitioner).__name__}")
+        if self.kernels is not None \
+                and not isinstance(self.kernels, KernelSpec):
+            raise ValueError(
+                f"kernels must be None or a repro.kernels.KernelSpec "
+                f"(its own __post_init__ validates the backend); got "
+                f"{type(self.kernels).__name__}")
 
     # -- derived views -------------------------------------------------------
 
@@ -205,6 +225,8 @@ class ExecutionPlan:
         if isinstance(obj.get("partitioner"), dict):
             obj = dict(obj, partitioner=PartitionerSpec.from_json(
                 obj["partitioner"]))
+        if isinstance(obj.get("kernels"), dict):
+            obj = dict(obj, kernels=KernelSpec.from_json(obj["kernels"]))
         return cls(**obj)
 
 

@@ -111,6 +111,36 @@ scheduler-carry pattern one level up:
   rejects a plan naming an unlisted kind at injection time, never at
   trace time, exactly like ``supported_scheduler_kinds``.
 
+The kernel-injection contract
+-----------------------------
+
+The round body's compute hot-spots (the push partials, the dynamic
+scheduler's Gram block) are served by an injected **kernel backend**,
+declared as a :class:`~repro.kernels.spec.KernelSpec` on the
+:class:`~repro.core.plan.ExecutionPlan` (or the app's
+``default_kernel_spec()`` when the plan leaves it ``None``; the engine
+falls back to ``kind="reference"`` — the pure-jnp oracles, bit-identical
+to the pre-KernelSpec round body).  The engine resolves the spec into a
+backend object (``repro.kernels.build_kernels`` — Pallas kernels
+compiled for Mosaic on TPU, automatically interpret-mode elsewhere) and
+injects it via ``use_kernels()`` before tracing; apps call
+``self.kernels.lasso_partial(...)`` / ``self.kernels.gram_block(...)``
+inside ``push``/``schedule_stats`` and never branch on the backend
+themselves.
+
+Unlike the scheduler and partitioner, a kernel backend is **stateless**
+— no carry, no checkpoint payload; the injection only changes what the
+traced round lowers to.  The discipline it shares with the other two:
+
+* apps declare which kinds they can dispatch via
+  ``supported_kernel_kinds`` (e.g. LDA/MF have no Pallas hot-spot
+  kernels yet, so only ``"reference"`` applies) — the engine rejects a
+  plan naming an unlisted kind at injection time, never at trace time;
+* compiled-program caches are keyed per (SchedulerSpec, Assignment,
+  KernelSpec), so a backend sweep — ``BENCH_kernels``'s reference vs
+  pallas arms — reuses each configuration's programs instead of
+  retracing on every swap.
+
 The v2 write contract (VarTable-mediated push/pull)
 ---------------------------------------------------
 
@@ -229,6 +259,15 @@ class StradsAppBase:
     #: injection-time rejection rule as supported_scheduler_kinds)
     supported_partitioner_kinds = None
 
+    #: the injected kernel backend (set by the engine; None until an
+    #: engine resolves a spec — apps with kernel hot-spots should fall
+    #: back to the reference oracles for engine-less direct calls)
+    kernels = None
+
+    #: which KernelSpec kinds this app can dispatch (None = any; same
+    #: injection-time rejection rule as supported_scheduler_kinds)
+    supported_kernel_kinds = None
+
     def static_phase(self, t: int) -> int:
         return 0
 
@@ -266,6 +305,20 @@ class StradsAppBase:
         :class:`~repro.part.assignment.Assignment` (``None`` clears
         it)."""
         self.assignment = assignment
+
+    # -- kernel injection ----------------------------------------------------
+
+    def default_kernel_spec(self) -> Optional[Any]:
+        """The kernel backend this app runs when the plan names none
+        (a :class:`~repro.kernels.spec.KernelSpec` or ``None`` to take
+        the engine fallback, ``kind="reference"``)."""
+        return None
+
+    def use_kernels(self, kernels) -> None:
+        """Receive the engine-resolved kernel backend
+        (``repro.kernels.build_kernels`` output; never ``None`` — the
+        engine always resolves at least the reference backend)."""
+        self.kernels = kernels
 
     def partition_signal(self, state):
         """A ``(num_schedulable(),)`` per-variable statistic whose |Δ|

@@ -1,0 +1,91 @@
+"""Kernel backends: what a resolved :class:`~repro.kernels.spec.KernelSpec`
+actually executes.
+
+A backend is a frozen value object exposing the round body's two
+compute hot-spots with oracle-identical signatures:
+
+    lasso_partial(Xb, r)  ->  (U,)  f32     z_j = x_jᵀ r    (push, f₃)
+    gram_block(Xc)        ->  (U′,U′) f32   G = X_CᵀX_C     (ρ-filter)
+
+``build_kernels(spec)`` is the registry entry point — the kernel-side
+twin of ``repro.sched.build_scheduler`` / ``repro.part.
+build_partitioner``.  The engine calls it at injection time
+(``StradsEngine.set_kernels``) and hands the result to the app via
+``use_kernels``; apps call ``self.kernels.lasso_partial(...)`` inside
+their traced primitives and never branch on the backend themselves.
+
+Platform resolution happens HERE, not in the spec: ``kind="pallas"``
+lowers ``pl.pallas_call`` for Mosaic when the live jax platform is TPU
+and automatically flips to interpret mode elsewhere (the CPU CI
+container), so one plan file drives both targets and tier-1 stays green
+on forced host devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import jax
+
+from . import lasso_cd as _lc
+from . import ref
+from .spec import _KIND_MSG, KernelSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ReferenceKernels:
+    """The pure-jnp oracle path (``repro.kernels.ref``) — the semantics
+    contract and the bit-identical pre-KernelSpec behavior."""
+
+    spec: KernelSpec
+
+    def lasso_partial(self, Xb: jax.Array, r: jax.Array) -> jax.Array:
+        return ref.lasso_partial_ref(Xb, r)
+
+    def gram_block(self, Xc: jax.Array) -> jax.Array:
+        return ref.gram_ref(Xc)
+
+
+@dataclasses.dataclass(frozen=True)
+class PallasKernels:
+    """The fused VMEM-tiled kernels (``repro.kernels.lasso_cd``),
+    row-tiled at ``spec.block_n``.  ``interpret=True`` executes the same
+    grid program with lax ops — the automatic CPU fallback."""
+
+    spec: KernelSpec
+    interpret: bool
+
+    def lasso_partial(self, Xb: jax.Array, r: jax.Array) -> jax.Array:
+        return _lc.lasso_partial(Xb, r, block_n=self.spec.block_n,
+                                 interpret=self.interpret)
+
+    def gram_block(self, Xc: jax.Array) -> jax.Array:
+        return _lc.gram_block(Xc, block_n=self.spec.block_n,
+                              interpret=self.interpret)
+
+
+# kind → factory(spec, interpret).  A new backend kind registers a
+# factory here (and its kind/fields in spec.py) — nothing else changes.
+KERNEL_BACKENDS: Dict[str, Callable] = {
+    "reference": lambda spec, interpret: ReferenceKernels(spec=spec),
+    "pallas": lambda spec, interpret: PallasKernels(spec=spec,
+                                                    interpret=interpret),
+}
+
+
+def build_kernels(spec: KernelSpec, *, platform: str | None = None):
+    """Resolve a :class:`KernelSpec` into an executable backend.
+
+    ``platform`` defaults to the live ``jax.default_backend()``; the
+    Pallas kind compiles for Mosaic on ``"tpu"`` and runs in interpret
+    mode on anything else, so the same spec is valid on every target.
+    """
+    if not isinstance(spec, KernelSpec):
+        raise TypeError(f"build_kernels wants a repro.kernels.KernelSpec; "
+                        f"got {type(spec).__name__}")
+    factory = KERNEL_BACKENDS.get(spec.kind)
+    if factory is None:                                 # pragma: no cover
+        raise ValueError(_KIND_MSG.format(spec.kind))
+    if platform is None:
+        platform = jax.default_backend()
+    return factory(spec, platform != "tpu")

@@ -24,10 +24,15 @@ collectives) instead of the BSP scan:
     PYTHONPATH=src python -m repro.launch.dryrun --engine lda \
         --workers 16 --rounds 16 --staleness 2
 
-``--scheduler``/``--rho`` and ``--partitioner`` override the app's
-default scheduling/partitioning policies from flags; the resolved
-``SchedulerSpec``/``PartitionerSpec`` dicts (and the initial
-variable→worker assignment's shape) are recorded in the artifact.
+``--scheduler``/``--rho``, ``--partitioner`` and ``--kernels`` override
+the app's default scheduling/partitioning/kernel-backend policies from
+flags; the resolved ``SchedulerSpec``/``PartitionerSpec``/``KernelSpec``
+dicts (and the initial variable→worker assignment's shape) are recorded
+in the artifact, along with the trip-count-aware HLO analysis and the
+roofline terms (``launch/roofline.py`` renders/checks them):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --engine lasso \
+        --workers 16 --rounds 16 --kernels pallas
 
 ``--plan plan.json`` (with ``--engine``) AOT-lowers a declarative
 :class:`repro.core.ExecutionPlan` instead of the per-flag form — the
@@ -214,7 +219,8 @@ def engine_rounds(engine: str, workers: int, rounds: int,
 def run_engine(engine: str, workers: int, rounds: int, depth: int,
                staleness=None, unroll: int = 1, scheduler=None,
                sched_kind: str = "", rho=None, partitioner=None,
-               part_kind: str = "") -> dict:
+               part_kind: str = "", kernels=None,
+               kern_kind: str = "") -> dict:
     """Lower + compile the scanned (or, with ``staleness``, the SSP)
     STRADS executor on a ``workers``-wide data mesh (a slice of the
     forced-512 topology).  ``rounds`` must already be step-aligned
@@ -224,9 +230,11 @@ def run_engine(engine: str, workers: int, rounds: int, depth: int,
     own ``default_scheduler_spec()`` (so ``--rho`` alone moves only the
     threshold).  ``partitioner``/``part_kind`` do the same for the
     :class:`repro.part.PartitionerSpec` (flag form built by
-    ``PartitionerSpec.default_for``).  The resolved spec dicts — and the
-    initial variable→worker assignment's shape — are recorded in the
-    result."""
+    ``PartitionerSpec.default_for``), and ``kernels``/``kern_kind`` for
+    the :class:`repro.kernels.KernelSpec` serving the round body's
+    hot-spots.  The resolved spec dicts — and the initial
+    variable→worker assignment's shape — are recorded in the result,
+    plus the trip-count-aware HLO analysis and roofline terms."""
     import numpy as np
     from jax.sharding import Mesh
 
@@ -240,6 +248,10 @@ def run_engine(engine: str, workers: int, rounds: int, depth: int,
         from ..part import PartitionerSpec
         partitioner = PartitionerSpec.default_for(part_kind)
     eng.set_partitioner(partitioner)           # None → app default
+    if kernels is None and kern_kind:
+        from ..kernels import KernelSpec
+        kernels = KernelSpec.default_for(kern_kind)
+    eng.set_kernels(kernels)                   # None → app default → reference
 
     out = {"engine": engine, "workers": workers, "rounds": rounds,
            "pipeline_depth": depth, **meta}
@@ -251,6 +263,8 @@ def run_engine(engine: str, workers: int, rounds: int, depth: int,
         out["assignment"] = {"num_vars": asgn.num_vars,
                              "num_workers": asgn.num_workers,
                              "version": asgn.version}
+    if eng.kernel_spec is not None:
+        out["kernels"] = eng.kernel_spec.to_json()
     if unroll != 1:
         out["phase_unroll"] = unroll
     import jax.numpy as jnp
@@ -286,6 +300,17 @@ def run_engine(engine: str, workers: int, rounds: int, depth: int,
                        "bytes": float(ca.get("bytes accessed", 0.0))}
     except Exception as e:                                # pragma: no cover
         out["cost"] = {"error": repr(e)}
+    # Trip-count-aware HLO analysis + roofline terms, same as run_one:
+    # the R-round scan lowers to a while loop whose body XLA:CPU
+    # cost_analysis counts once — analyze_hlo charges it R times, and
+    # the psum collectives give the ring-model t_collective term that
+    # `python -m repro.launch.roofline --check` asserts nonzero.
+    hlo = compiled.as_text()
+    out["hlo_bytes"] = len(hlo)
+    ana = RL.analyze_hlo(hlo, workers)
+    out["hlo_analysis"] = ana.to_json()
+    out["roofline"] = RL.roofline_terms(ana.flops, ana.bytes,
+                                        ana.wire_bytes)
     return out
 
 
@@ -353,16 +378,21 @@ def main():
                     help="with --engine: PartitionerSpec kind overriding "
                          "the app's default partition policy (static|"
                          "size_balanced|load_balanced)")
+    ap.add_argument("--kernels", default="",
+                    choices=("", "reference", "pallas"),
+                    help="with --engine: KernelSpec kind overriding the "
+                         "app's default hot-spot backend (flag form "
+                         "built by KernelSpec.default_for)")
     args = ap.parse_args()
     if args.plan and not args.engine:
         ap.error("--plan requires --engine (plans drive the STRADS "
                  "executor lowering, not the arch × shape specs)")
     if args.plan and (args.scheduler or args.rho is not None
-                      or args.partitioner):
-        ap.error("--scheduler/--rho/--partitioner conflict with --plan "
-                 "(the plan's scheduler/partitioner fields — possibly "
-                 "null = app default — are authoritative); edit the "
-                 "plan file instead")
+                      or args.partitioner or args.kernels):
+        ap.error("--scheduler/--rho/--partitioner/--kernels conflict "
+                 "with --plan (the plan's scheduler/partitioner/kernels "
+                 "fields — possibly null = app default — are "
+                 "authoritative); edit the plan file instead")
 
     os.makedirs(RESULTS_DIR, exist_ok=True)
 
@@ -373,6 +403,7 @@ def main():
         depth, staleness, unroll = args.pipeline_depth, args.staleness, 1
         spec = None
         part_spec = None
+        kern_spec = None
         if args.plan:
             from ..core import ExecutionPlan
             with open(args.plan) as f:
@@ -387,6 +418,7 @@ def main():
             unroll = plan.phase_unroll
             spec = plan.scheduler         # None → the app's default policy
             part_spec = plan.partitioner  # None → the app's default
+            kern_spec = plan.kernels      # None → app default → reference
         variant = (f"s{staleness}" if staleness is not None
                    else f"d{depth}")
         if spec is not None:
@@ -401,6 +433,10 @@ def main():
             variant += f"__part-{part_spec.kind}"
         elif args.partitioner:
             variant += f"__part-{args.partitioner}"
+        if kern_spec is not None:
+            variant += f"__k-{kern_spec.kind}"
+        elif args.kernels:
+            variant += f"__k-{args.kernels}"
         rounds = engine_rounds(args.engine, workers, rounds_req, staleness,
                                unroll)
         if rounds != rounds_req:
@@ -418,7 +454,9 @@ def main():
                          sched_kind="" if args.plan else args.scheduler,
                          rho=None if args.plan else args.rho,
                          partitioner=part_spec,
-                         part_kind="" if args.plan else args.partitioner)
+                         part_kind="" if args.plan else args.partitioner,
+                         kernels=kern_spec,
+                         kern_kind="" if args.plan else args.kernels)
         if plan is not None:
             # record what actually ran: engine_rounds may have aligned
             # the round count to whole SSP steps
@@ -429,6 +467,11 @@ def main():
         print(f"  lower {res['lower_s']}s compile {res['compile_s']}s"
               f"  args {res['memory'].get('argument_size_in_bytes', -1)}B"
               f"  temp {res['memory'].get('temp_size_in_bytes', -1)}B")
+        r = res["roofline"]
+        print(f"  kernels {res.get('kernels', {}).get('kind', '?')}"
+              f"  Tc {r['t_compute']*1e3:.2f}ms"
+              f"  Tm {r['t_memory']*1e3:.2f}ms"
+              f"  Tx {r['t_collective']*1e3:.2f}ms → {r['dominant']}")
         return
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
     pairs = ([(a, s) for a in ARCHS for s in INPUT_SHAPES]

@@ -17,6 +17,19 @@ model per op:
     all-reduce        2·F·(n−1)/n
     all-to-all        F·(n−1)/n
     collective-permute F
+
+Also usable as a CLI over saved dry-run artifacts (the ``--engine``
+records carry the same ``hlo_analysis``/``roofline`` keys as the
+arch × shape ones):
+
+    PYTHONPATH=src python -m repro.launch.roofline \
+        benchmarks/results/engine/strads-lasso__U16__R16__d1.json --check
+
+prints the three terms per artifact and, with ``--check``, exits
+nonzero unless every artifact's t_compute / t_memory / t_collective
+are finite and nonzero — the CI smoke that the cost model never
+silently degenerates (a zero t_collective means the psum collectives
+vanished from the lowering or the parser lost them).
 """
 from __future__ import annotations
 
@@ -465,3 +478,96 @@ def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
     return {"t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
             "dominant": dom[1],
             "bound_s": max(t_c, t_m, t_x)}
+
+
+# Ridge point of the v5e roofline: the arithmetic intensity (FLOPs per
+# HBM byte) above which a kernel is compute-bound.  bench_kernels
+# reports each kernel's measured intensity against this peak ratio.
+RIDGE_INTENSITY = PEAK_FLOPS / HBM_BW
+
+
+def arithmetic_intensity(flops: float, bytes_accessed: float) -> float:
+    """Measured FLOPs-per-byte; 0.0 for a byte-free (degenerate) record."""
+    return flops / bytes_accessed if bytes_accessed else 0.0
+
+
+# ---------------------------------------------------------------------------
+# CLI: render/check saved dry-run artifacts
+# ---------------------------------------------------------------------------
+
+_TERMS = ("t_compute", "t_memory", "t_collective")
+
+
+def check_terms(r: Dict[str, float]) -> bool:
+    """True iff all three roofline terms are finite and nonzero."""
+    import math
+    return all(isinstance(r.get(k), (int, float))
+               and math.isfinite(r[k]) and r[k] > 0.0 for k in _TERMS)
+
+
+def main(argv=None) -> int:
+    import argparse
+    import glob as _glob
+    import json
+    import os
+
+    ap = argparse.ArgumentParser(
+        description="Print (and --check) the roofline terms recorded in "
+                    "dry-run artifact JSON files.")
+    ap.add_argument("paths", nargs="+",
+                    help="artifact JSON paths or globs (e.g. "
+                         "benchmarks/results/engine/*.json)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless every artifact's t_compute/"
+                         "t_memory/t_collective are finite and nonzero")
+    args = ap.parse_args(argv)
+
+    files: List[str] = []
+    for p in args.paths:
+        hits = sorted(_glob.glob(p))
+        files.extend(hits if hits else [p])
+
+    bad: List[str] = []
+    for path in files:
+        name = os.path.basename(path)
+        try:
+            with open(path) as f:
+                rec = json.load(f)
+        except OSError as e:
+            print(f"{name}: unreadable ({e})")
+            bad.append(name)
+            continue
+        r = rec.get("roofline")
+        if r is None and isinstance(rec.get("hlo_analysis"), dict):
+            ana = rec["hlo_analysis"]
+            r = roofline_terms(ana.get("flops", 0.0),
+                               ana.get("bytes", 0.0),
+                               ana.get("wire_bytes", 0.0))
+        if r is None:
+            print(f"{name}: no roofline/hlo_analysis recorded")
+            bad.append(name)
+            continue
+        ok = check_terms(r)
+        ana = rec.get("hlo_analysis", {})
+        ai = arithmetic_intensity(ana.get("flops", 0.0),
+                                  ana.get("bytes", 0.0))
+        print(f"{name}: Tc {r['t_compute']*1e3:.3f}ms "
+              f"Tm {r['t_memory']*1e3:.3f}ms "
+              f"Tx {r['t_collective']*1e3:.3f}ms "
+              f"→ {r['dominant']}  AI {ai:.2f} flop/B "
+              f"(ridge {RIDGE_INTENSITY:.0f})  "
+              f"[{'ok' if ok else 'DEGENERATE'}]")
+        if not ok:
+            bad.append(name)
+    if not files:
+        print("no artifacts matched")
+        return 1
+    if args.check and bad:
+        print(f"--check failed: {len(bad)}/{len(files)} artifact(s) with "
+              f"missing or degenerate roofline terms: {bad}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -111,7 +111,10 @@ def main(argv=None):
                         # block-coordinate training has no variable-
                         # ownership store to repartition — only the
                         # paper apps consume plan.partitioner
-                        ("partitioner", plan.partitioner)) if v]
+                        ("partitioner", plan.partitioner),
+                        # ...and no lasso_partial/gram_block hot-spots
+                        # either: plan.kernels only drives the paper apps
+                        ("kernels", plan.kernels)) if v]
         if unsupported:
             ap.error(f"--plan fields the trainer has no surface for "
                      f"(they would be silently dropped): {unsupported}")

@@ -205,8 +205,11 @@ class DynamicPriorityScheduler(SchedulerBase):
 
     ``propose`` samples U′ candidates ∝ the carry (the Δx history); the
     application computes the candidate Gram block (a distributed psum
-    over data shards — its ``schedule_stats``); ``finalize`` applies the
-    ρ filter and returns ``(indices, mask)`` — a static-size schedule.
+    over data shards — its ``schedule_stats``, dispatched through the
+    plan-resolved kernel backend, so ``plan.kernels`` decides whether
+    the X_CᵀX_C hot-spot runs the reference jnp oracle or the fused
+    Pallas ``gram_block``); ``finalize`` applies the ρ filter and
+    returns ``(indices, mask)`` — a static-size schedule.
     """
     num_vars: int
     num_candidates: int      # U'

@@ -1,13 +1,23 @@
 """Per-kernel validation: shape/dtype sweeps asserting allclose against the
-ref.py pure-jnp oracles, in Pallas interpret mode (CPU container)."""
+ref.py pure-jnp oracles, in Pallas interpret mode (CPU container) — plus
+the declarative KernelSpec surface (validation, JSON round-trip, the
+build_kernels registry) and the plan-level contract: ``kernels=None``
+resolves to the reference backend bit-identically on all four executors,
+and a pallas plan agrees numerically end-to-end."""
+import json
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels import ops, ref
+from repro.apps import lasso
+from repro.core import ExecutionPlan, single_device_mesh
+from repro.kernels import (KERNEL_KINDS, KernelSpec, PallasKernels,
+                           ReferenceKernels, build_kernels, ops, ref)
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.lasso_cd import gram_block, lasso_partial
+from repro.kernels.lasso_cd import DEFAULT_BLOCK_N, gram_block, lasso_partial
 from repro.kernels.moe_gating import topk_gating
 from repro.kernels.ssm_scan import ssm_scan
 
@@ -237,3 +247,233 @@ def test_ops_auto_resolves_to_ref_on_cpu():
     q = randn(1, 8, 1, 4)
     out = ops.attention(q, q, q)     # backend="auto" on CPU → ref path
     assert out.shape == (1, 8, 1, 4)
+
+
+# ---------------------------------------------------------------------------
+# KernelSpec: validation, JSON round-trip, defaults table
+# ---------------------------------------------------------------------------
+
+def test_kernel_spec_is_hashable_value():
+    a = KernelSpec(kind="pallas", block_n=128)
+    b = KernelSpec(kind="pallas", block_n=128)
+    assert a == b and hash(a) == hash(b)
+    assert len({a, b}) == 1
+    with pytest.raises(Exception):       # frozen
+        a.kind = "reference"
+
+
+def test_kernel_spec_rejects_unknown_kind():
+    with pytest.raises(ValueError,
+                       match="kernel kind must be 'reference' or 'pallas'"):
+        KernelSpec(kind="mosaic")
+
+
+def test_kernel_spec_rejects_unused_fields_per_kind():
+    # reference consumes no knobs — a nonzero block_n would be silently
+    # ignored, so it raises instead
+    with pytest.raises(ValueError, match="does not apply to kind="):
+        KernelSpec(kind="reference", block_n=64)
+
+
+@pytest.mark.parametrize("bad", [0, -1, 2.5, True, "256"])
+def test_kernel_spec_pallas_needs_positive_int_block_n(bad):
+    with pytest.raises(ValueError):
+        KernelSpec(kind="pallas", block_n=bad)
+
+
+def test_kernel_spec_json_round_trip_exact():
+    for spec in (KernelSpec(kind="reference"),
+                 KernelSpec(kind="pallas", block_n=64)):
+        d = spec.to_json()
+        assert KernelSpec.from_json(d) == spec
+        assert KernelSpec.from_json(json.dumps(d)) == spec
+        # every field present, defaults included
+        assert set(d) == {"kind", "block_n"}
+
+
+def test_kernel_spec_from_json_rejects_unknown_keys():
+    with pytest.raises(ValueError, match="unknown KernelSpec field"):
+        KernelSpec.from_json({"kind": "pallas", "block_n": 64,
+                              "tile_m": 8})
+    with pytest.raises(TypeError):
+        KernelSpec.from_json([1, 2])
+
+
+def test_kernel_spec_default_for():
+    assert KernelSpec.default_for("reference") == KernelSpec(
+        kind="reference")
+    assert KernelSpec.default_for("pallas") == KernelSpec(
+        kind="pallas", block_n=DEFAULT_BLOCK_N)
+    assert KernelSpec.default_for("pallas", block_n=32).block_n == 32
+    with pytest.raises(ValueError, match="kernel kind must be"):
+        KernelSpec.default_for("mosaic")
+    assert set(KERNEL_KINDS) == {"reference", "pallas"}
+
+
+# ---------------------------------------------------------------------------
+# build_kernels registry + backend agreement
+# ---------------------------------------------------------------------------
+
+def test_build_kernels_resolves_kinds_and_platform():
+    rb = build_kernels(KernelSpec(kind="reference"))
+    assert isinstance(rb, ReferenceKernels)
+    pb = build_kernels(KernelSpec.default_for("pallas"), platform="cpu")
+    assert isinstance(pb, PallasKernels) and pb.interpret
+    pt = build_kernels(KernelSpec.default_for("pallas"), platform="tpu")
+    assert not pt.interpret
+    with pytest.raises(TypeError, match="wants a repro.kernels.KernelSpec"):
+        build_kernels({"kind": "reference"})
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from([1, 7, 100, 127, 128, 129, 255, 300]),
+       st.integers(1, 16), st.sampled_from([8, 128, DEFAULT_BLOCK_N]))
+def test_backends_agree_lasso_partial(n, u, bn):
+    """Pallas ≡ reference through the backend objects, including the
+    128-lane padding edges (n ∈ {127, 128, 129})."""
+    spec = KernelSpec(kind="pallas", block_n=bn)
+    pb = build_kernels(spec, platform="cpu")
+    rb = build_kernels(KernelSpec(kind="reference"))
+    X, r = randn(n, u), randn(n)
+    np.testing.assert_allclose(np.asarray(pb.lasso_partial(X, r)),
+                               np.asarray(rb.lasso_partial(X, r)),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from([1, 9, 100, 127, 128, 129, 300]),
+       st.integers(1, 12), st.sampled_from([8, 128, DEFAULT_BLOCK_N]))
+def test_backends_agree_gram_block(n, c, bn):
+    spec = KernelSpec(kind="pallas", block_n=bn)
+    pb = build_kernels(spec, platform="cpu")
+    rb = build_kernels(KernelSpec(kind="reference"))
+    X = randn(n, c)
+    np.testing.assert_allclose(np.asarray(pb.gram_block(X)),
+                               np.asarray(rb.gram_block(X)),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# plan-level contract: kernels on the ExecutionPlan
+# ---------------------------------------------------------------------------
+
+def _bit_identical(a_state, b_state):
+    assert set(a_state) == set(b_state)
+    for k in a_state:
+        a, b = np.asarray(a_state[k]), np.asarray(b_state[k])
+        assert (a == b).all(), (k, np.max(np.abs(a - b)))
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return single_device_mesh()
+
+
+@pytest.fixture(scope="module")
+def lasso_setup():
+    rng = np.random.default_rng(7)
+    X, y, _ = lasso.synthetic_correlated(rng, n=40, J=20, k_true=3)
+    cfg = lasso.LassoConfig(num_features=20, lam=0.02, block_size=4,
+                            num_candidates=8, rho=0.3)
+    return cfg, X, y
+
+
+_EXEC_CASES = [("loop", 0), ("scan", 0), ("pipelined", 0), ("ssp", 1)]
+
+
+@pytest.mark.parametrize("executor,staleness", _EXEC_CASES)
+def test_plan_kernels_none_is_bit_identical_to_reference(
+        mesh, lasso_setup, executor, staleness):
+    """kernels=None resolves (app default → reference on CPU) to the
+    exact pre-KernelSpec round body — bit-identical on every executor."""
+    cfg, X, y = lasso_setup
+
+    def run(spec):
+        plan = ExecutionPlan(executor=executor, rounds=4,
+                             staleness=staleness, kernels=spec)
+        state, _ = lasso.fit(cfg, X, y, mesh, plan=plan)
+        return state
+
+    _bit_identical(run(None), run(KernelSpec(kind="reference")))
+
+
+@pytest.mark.parametrize("executor,staleness", _EXEC_CASES)
+def test_plan_kernels_pallas_agrees_on_every_executor(
+        mesh, lasso_setup, executor, staleness):
+    cfg, X, y = lasso_setup
+
+    def run(spec):
+        plan = ExecutionPlan(executor=executor, rounds=4,
+                             staleness=staleness, kernels=spec)
+        state, _ = lasso.fit(cfg, X, y, mesh, plan=plan)
+        return state
+
+    a = run(KernelSpec(kind="reference"))
+    b = run(KernelSpec.default_for("pallas"))
+    for k in a:
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_plan_validates_kernels_field():
+    with pytest.raises(ValueError,
+                       match="kernels must be None or a "
+                             "repro.kernels.KernelSpec"):
+        ExecutionPlan(executor="scan", rounds=2,
+                      kernels={"kind": "reference"})
+    p = ExecutionPlan(executor="scan", rounds=2,
+                      kernels=KernelSpec.default_for("pallas"))
+    assert ExecutionPlan.from_json(p.to_json()) == p
+    assert ExecutionPlan.from_json(p.to_json()).kernels.block_n \
+        == DEFAULT_BLOCK_N
+
+
+def test_engine_installs_resolved_backend(mesh, lasso_setup):
+    cfg, X, y = lasso_setup
+    eng = lasso.make_engine(cfg, mesh)
+    data = eng.shard_data({"X": jnp.asarray(X), "y": jnp.asarray(y)})
+    state = eng.init_state(jax.random.key(0), y=y)
+    plan = ExecutionPlan(executor="scan", rounds=2,
+                         kernels=KernelSpec.default_for("pallas"))
+    eng.execute(state, data, jax.random.key(1), plan)
+    assert isinstance(eng.kernels, PallasKernels)
+    assert eng.kernel_spec == KernelSpec.default_for("pallas")
+    # back to a plan without kernels: the app default (reference on this
+    # CPU container) is re-resolved, not left stale
+    plan2 = ExecutionPlan(executor="scan", rounds=2)
+    state = eng.init_state(jax.random.key(0), y=y)
+    eng.execute(state, data, jax.random.key(1), plan2)
+    assert isinstance(eng.kernels, ReferenceKernels)
+    assert eng.kernel_spec == KernelSpec(kind="reference")
+
+
+def test_apps_without_pallas_hotspots_reject_the_kind(mesh):
+    """supported_kernel_kinds gates injection: LDA/MF have no Pallas
+    hot-spot, so a pallas plan fails loudly at set time."""
+    from repro.apps import mf
+    cfg = mf.MFConfig(num_rows=8, num_cols=8, rank=4)
+    eng = mf.make_engine(cfg, mesh)
+    with pytest.raises(ValueError, match="cannot dispatch a 'pallas'"):
+        eng.set_kernels(KernelSpec.default_for("pallas"))
+    # the reference kind still installs fine
+    assert isinstance(eng.set_kernels(KernelSpec(kind="reference")),
+                      ReferenceKernels)
+
+
+def test_lasso_default_kernel_spec_maps_legacy_backend_names():
+    assert lasso.StradsLasso(
+        lasso.LassoConfig(num_features=8, kernel_backend="ref")
+    ).default_kernel_spec() == KernelSpec(kind="reference")
+    for legacy in ("pallas", "interpret"):
+        assert lasso.StradsLasso(
+            lasso.LassoConfig(num_features=8, kernel_backend=legacy)
+        ).default_kernel_spec() == KernelSpec.default_for("pallas")
+    # "auto" picks by live platform — reference on this CPU container
+    auto = lasso.StradsLasso(
+        lasso.LassoConfig(num_features=8)).default_kernel_spec()
+    assert auto.kind == ("pallas" if jax.default_backend() == "tpu"
+                         else "reference")
+    with pytest.raises(ValueError, match="kernel_backend must be"):
+        lasso.StradsLasso(
+            lasso.LassoConfig(num_features=8, kernel_backend="cuda")
+        ).default_kernel_spec()
