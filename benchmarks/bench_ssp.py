@@ -32,6 +32,7 @@ import numpy as np
 import jax, jax.numpy as jnp
 from repro.apps import lasso
 from repro.core import ExecutionPlan, worker_mesh
+from repro.obs import TelemetrySpec
 
 U, R = {workers}, {rounds}
 rng = np.random.default_rng(0)
@@ -68,7 +69,8 @@ out = {{"scan": best["scan"], "ssp": {{}},
        "plans": {{n: p.to_json() for n, p in plans.items()}}}}
 for s in (0, 1, 2, 4):
     plan = ExecutionPlan(executor="ssp", rounds=R, staleness=s,
-                         collect_every=1, telemetry=True)
+                         collect_every=1,
+                         telemetry=TelemetrySpec(kind="counters"))
     rep = eng.execute(init(), data, jax.random.key(1), plan,
                       collect=collect)
     obj = np.asarray(rep.trace)

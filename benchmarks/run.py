@@ -13,8 +13,8 @@ import sys
 import traceback
 
 from . import (bench_kernels, bench_lasso, bench_lda, bench_memory,
-               bench_mf, bench_part, bench_pipeline, bench_scaling,
-               bench_sched, bench_ssp)
+               bench_mf, bench_obs, bench_part, bench_pipeline,
+               bench_scaling, bench_sched, bench_ssp)
 
 BENCHES = {
     "lasso": bench_lasso,       # Fig 8/9 right
@@ -27,6 +27,7 @@ BENCHES = {
     "sched": bench_sched,       # scheduler-policy ρ × U′ sweep (repro.sched)
     "part": bench_part,         # partition-policy static vs load_balanced
     "kernels": bench_kernels,   # kernel backend reference vs pallas
+    "obs": bench_obs,           # telemetry overhead off/counters/trace
 }
 
 

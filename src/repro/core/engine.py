@@ -86,6 +86,7 @@ executor).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import warnings
 from functools import partial
@@ -97,6 +98,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..kernels import KernelSpec, build_kernels
+from ..obs import RunReport, counters as obs_counters
+from ..obs.events import Recorder
 from ..part import Assignment, PartitionerSpec, build_partitioner
 from ..sched import SchedulerSpec, build_scheduler
 from .compat import make_mesh, shard_map
@@ -107,6 +110,7 @@ from .primitives import RoundResult, StradsApp, StradsAppBase, tree_psum
 DATA_AXIS = "data"
 
 _UNSET = object()
+_NULL_CTX = contextlib.nullcontext()   # reusable no-op span
 
 
 def _replicate_spec(tree: Any) -> Any:
@@ -118,14 +122,20 @@ def _replicate_spec(tree: Any) -> Any:
 class EngineCarry:
     """Resumable carry of the loop/scanned executors: PRNG stream, next
     round index, the engine-owned scheduler carry (e.g. the Δx priority
-    history; ``None`` for stateless policies), and (pipelined only) the
-    in-flight prefetched schedule.  The SSP twin (with vector clocks) is
+    history; ``None`` for stateless policies), (pipelined only) the
+    in-flight prefetched schedule, and — under a plan-level
+    :class:`~repro.obs.spec.TelemetrySpec` — the device telemetry
+    counters (:mod:`repro.obs.counters`; ``None`` uninstrumented, so an
+    instrumented carry checkpoints/resumes the counters bit-exactly
+    through ``checkpoint_every`` chunking while old checkpoints restore
+    unchanged).  The SSP twin (with vector clocks) is
     :class:`repro.ps.ssp.SSPCarry`; both round-trip through
     ``checkpoint/npz``."""
     rng: jax.Array
     t: jax.Array                  # int32: next round index
     sched: Any = None             # depth-1 prefetched schedule (else None)
     sched_carry: Any = None       # scheduler carry (Δx history, …)
+    obs: Any = None               # device telemetry counters (or None)
 
 
 class StradsEngine:
@@ -173,10 +183,32 @@ class StradsEngine:
         self.partitioner = None
         self._assignment: Optional[Assignment] = None
         self._part_stats = None
+        self._recorder: Optional[Recorder] = None   # live during execute
         self.set_kernels(None)    # before set_scheduler's first round-bind
         self.set_scheduler(None)
         self.set_partitioner(None)
         self.kvstore: Optional[KVStore] = None   # built by place_state
+
+    # -- observability hooks (the telemetry-injection contract) --------------
+
+    def _obs_event(self, name: str, **args):
+        """Record a host event when a Recorder is live (``kind="trace"``
+        during ``execute``) — a no-op otherwise, so event sites cost
+        nothing uninstrumented."""
+        if self._recorder is not None:
+            self._recorder.instant(name, **args)
+
+    def _obs_span(self, name: str, **args):
+        """A wall-clock phase span under a live Recorder, else a
+        null context."""
+        if self._recorder is not None:
+            return self._recorder.span(name, **args)
+        return _NULL_CTX
+
+    def _obs_num_candidates(self) -> int:
+        """The active scheduler's static proposal-pool size U′ (0 for
+        policies without one) — the ρ-filter ledger's 'proposed' term."""
+        return int(getattr(self.scheduler, "num_candidates", 0) or 0)
 
     # -- scheduler injection (the v2 contract) -------------------------------
 
@@ -233,8 +265,23 @@ class StradsEngine:
                self._active_kern_spec)
         self._round = self._scan_cache.get(key)
         if self._round is None:
+            self._obs_event("cache_miss", program="round",
+                            **self._cache_key_args())
             self._round = self._build_round()
             self._scan_cache[key] = self._round
+
+    def _cache_key_args(self) -> dict:
+        """The (SchedulerSpec, Assignment, KernelSpec) compiled-program
+        cache key, JSON-safe — what cache-miss events carry."""
+        asgn = self._assignment
+        return {
+            "scheduler": (self._active_spec.kind
+                          if self._active_spec is not None else None),
+            "assignment_version": (asgn.version if asgn is not None
+                                   else None),
+            "kernels": (self._active_kern_spec.kind
+                        if self._active_kern_spec is not None else None),
+        }
 
     def _default_spec(self) -> Optional[SchedulerSpec]:
         fn = getattr(self.app, "default_scheduler_spec", None)
@@ -462,6 +509,20 @@ class StradsEngine:
             new = part.propose_assignment(self._part_stats,
                                           self._assignment)
             if new.owner != self._assignment.owner:
+                # the rebalance event carries the measured before/after
+                # load spreads (the imbalance the move was for)
+                weights = (self._part_stats.get("ema")
+                           if isinstance(self._part_stats, dict)
+                           else None)
+                if weights is not None:
+                    self._obs_event(
+                        "rebalance", t=t,
+                        spread_before=self._assignment.spread(weights),
+                        spread_after=new.spread(weights),
+                        version=new.version)
+                else:
+                    self._obs_event("rebalance", t=t,
+                                    version=new.version)
                 # re-placement keeps leaf values, so sig_after stays a
                 # valid baseline for the next chunk
                 state = self.apply_assignment(new, state)
@@ -669,7 +730,7 @@ class StradsEngine:
                     collect: Optional[Callable[[Any], Any]] = None,
                     donate: bool = True, unroll: int = 1,
                     t0: int = 0, sched0: Any = None,
-                    sched_carry0: Any = _UNSET,
+                    sched_carry0: Any = _UNSET, obs0: Any = None,
                     return_carry: bool = False):
         """Execute ``num_rounds`` rounds as one XLA program.
 
@@ -701,8 +762,11 @@ class StradsEngine:
         depth 1 where it is the prefetched in-flight schedule, and
         ``sched_carry0`` is the scheduler carry — omitted, a fresh
         ``scheduler.init_carry()`` is used, which is only correct at
-        ``t0=0``).  ``return_carry=True`` appends the final carry to the
-        return value.
+        ``t0=0``).  ``obs0`` threads the device telemetry counters
+        (:func:`repro.obs.counters.init_counters`, or the previous
+        carry's ``obs``) through the scan; ``None`` runs
+        uninstrumented.  ``return_carry=True`` appends the final carry
+        to the return value.
 
         Returns ``state`` (plus ``trace`` when collecting, plus ``carry``
         when requested).
@@ -742,23 +806,28 @@ class StradsEngine:
         traces = []
         sched_c = sched0
         sc = sched_carry0
+        obs = obs0
         if num_steps:
             fn = self._get_scan_fn(num_steps, pipeline_depth, collect,
                                    donate, unroll, sched0 is not None)
-            args = (state, data, rng, jnp.int32(t0), sc)
+            args = (state, data, rng, jnp.int32(t0), sc, obs)
             if sched0 is not None:
                 args += (sched0,)
-            state, rng, sched_c, sc, ys = fn(*args)
+            state, rng, sched_c, sc, obs, ys = fn(*args)
             if collect is not None:
                 traces.append(ys)
 
         # Remainder rounds (num_rounds % (period × unroll)) fall back to
         # the host loop with fresh schedules — only reachable at depth 0.
+        num_cand = self._obs_num_candidates()
         for k in range(tail):
             t = t0 + num_steps * L + k
             rng, sub = jax.random.split(rng)
             out = self.run_round(state, data, sub, t, sched_carry=sc)
             state, sc = out.state, out.sched_carry
+            if obs is not None:
+                obs = obs_counters.observe_round(obs, out.sched,
+                                                 t % period, num_cand)
             if collect is not None:
                 traces.append(jax.tree.map(
                     lambda x: jnp.asarray(x)[None], collect(state)))
@@ -770,17 +839,20 @@ class StradsEngine:
                        if len(traces) > 1 else traces[0])
         if return_carry:
             ret.append(EngineCarry(rng=rng, t=jnp.int32(t0 + num_rounds),
-                                   sched=sched_c, sched_carry=sc))
+                                   sched=sched_c, sched_carry=sc,
+                                   obs=obs))
         return ret[0] if len(ret) == 1 else tuple(ret)
 
     def scanned_fn(self, num_rounds: int, *, pipeline_depth: int = 0,
                    collect: Optional[Callable] = None,
                    donate: bool = True, unroll: int = 1):
-        """The jitted ``(state, data, rng, t0, sched_carry) → (state, rng,
-        sched, sched_carry, trace)`` multi-round program, exposed for AOT
-        ``.lower().compile()`` (the production-mesh dry-run in
-        ``launch/dryrun.py``; pass ``engine.init_sched_carry()`` for a
-        fresh run).  ``num_rounds`` must be a multiple of ``phase_period
+        """The jitted ``(state, data, rng, t0, sched_carry, obs) →
+        (state, rng, sched, sched_carry, obs, trace)`` multi-round
+        program, exposed for AOT ``.lower().compile()`` (the
+        production-mesh dry-run in ``launch/dryrun.py``; pass
+        ``engine.init_sched_carry()`` for a fresh run and ``None`` —
+        or ``repro.obs.init_counters(engine.phase_period)`` — for
+        ``obs``).  ``num_rounds`` must be a multiple of ``phase_period
         × unroll``."""
         num_steps, tail = divmod(num_rounds, self.phase_period * unroll)
         if tail or num_steps == 0:
@@ -938,6 +1010,49 @@ class StradsEngine:
                 f"must be a multiple of plan.checkpoint_every={chunk} — "
                 f"repartition checks only run at chunk boundaries, so a "
                 f"misaligned cadence would silently (almost) never fire")
+        # telemetry (the telemetry-injection contract): the resolved
+        # TelemetrySpec turns on device counters for every executor;
+        # kind="trace" additionally opens a host Recorder for the span
+        # of this execute (cache misses, rebalances, checkpoints, phase
+        # spans).  The final report's .telemetry is a uniform RunReport.
+        tspec = plan.telemetry or None
+        rec = (Recorder(profiler=tspec.profiler)
+               if tspec is not None and tspec.events else None)
+        self._recorder = rec
+        try:
+            with (rec.span("execute", executor=plan.executor,
+                           rounds=plan.rounds) if rec is not None
+                  else _NULL_CTX):
+                rep = self._execute_plan(state, data, rng, plan, t_done,
+                                         carry, collect, callback, chunk,
+                                         pspec, ckpt_dir)
+        finally:
+            self._recorder = None
+        if tspec is not None:
+            ssp_parts = rep.telemetry if isinstance(rep.telemetry, list) \
+                else ([rep.telemetry] if rep.telemetry is not None
+                      else [])
+            if len(ssp_parts) > 1:
+                from ..ps.telemetry import merge_summaries
+                ssp = merge_summaries(ssp_parts)
+            else:
+                ssp = ssp_parts[0] if ssp_parts else None
+            rep.telemetry = RunReport.build(
+                tspec, plan.executor, int(rep.carry.t),
+                device_counters=getattr(rep.carry, "obs", None),
+                recorder=rec, ssp=ssp)
+        else:
+            rep.telemetry = None
+        return rep
+
+    def _execute_plan(self, state, data, rng, plan: ExecutionPlan,
+                      t_done: int, carry, collect, callback, chunk: int,
+                      pspec, ckpt_dir) -> ExecutionReport:
+        """The executor dispatch of :meth:`execute` — whole-plan, or the
+        ``checkpoint_every``-chunked loop.  Under an ssp plan the
+        returned report's ``telemetry`` holds the raw per-chunk
+        :class:`~repro.ps.telemetry.SSPTelemetry` (a list when chunked);
+        ``execute`` merges it into the final :class:`RunReport`."""
         if not chunk:
             if pspec is not None and pspec.kind == "load_balanced":
                 warnings.warn(
@@ -945,14 +1060,10 @@ class StradsEngine:
                     "checkpoint chunk boundaries; without plan."
                     "checkpoint_every + ckpt_dir the assignment stays "
                     "at its initial (static) value for the whole run",
-                    UserWarning, stacklevel=2)
+                    UserWarning, stacklevel=3)
             return self._execute_span(state, data, rng, plan,
                                       plan.rounds - t_done, t_done, carry,
                                       collect, callback)
-        if plan.telemetry:
-            raise ValueError("telemetry summaries are per-program; combine "
-                             "plan.telemetry with checkpoint chunking by "
-                             "resuming spans manually")
         step_len = self._step_length(plan)
         if chunk % step_len:
             raise ValueError(
@@ -977,6 +1088,7 @@ class StradsEngine:
                     stops.append(t)
                 return r
         traces = []
+        ssp_parts: list = []          # per-chunk SSPTelemetry summaries
         t = t_done
         # the activity baseline is only worth a host sync when a
         # stateful policy will consume it (static/size_balanced measure
@@ -992,6 +1104,8 @@ class StradsEngine:
             rng = carry.rng
             if rep.trace is not None:
                 traces.append(rep.trace)
+            if rep.telemetry is not None:
+                ssp_parts.append(rep.telemetry)
             t = int(carry.t)
             if self.partitioner is not None:
                 # the repartition check rides the chunk boundary: state
@@ -1004,12 +1118,14 @@ class StradsEngine:
             payload = {"state": state, "carry": carry}
             if self.partitioner is not None:
                 payload["assignment"] = self.partition_payload()
-            save_checkpoint(ckpt_dir, t, payload)
+            with self._obs_span("checkpoint", t=t):
+                save_checkpoint(ckpt_dir, t, payload)
             if stops:                           # honored across chunks
                 break
         trace = (jax.tree.map(lambda *xs: jnp.concatenate(xs), *traces)
                  if traces else None)
-        return ExecutionReport(state=state, trace=trace, telemetry=None,
+        return ExecutionReport(state=state, trace=trace,
+                               telemetry=ssp_parts or None,
                                carry=carry, plan=plan)
 
     def _step_length(self, plan: ExecutionPlan) -> int:
@@ -1032,6 +1148,12 @@ class StradsEngine:
         checkpoint chunk), dispatched to the executor it names."""
         sc0 = (prev_carry.sched_carry if prev_carry is not None
                else self.init_sched_carry())
+        # device counters: resume the previous chunk's (bit-exact through
+        # checkpoint_every chunking), else start fresh when the plan is
+        # instrumented; None runs uninstrumented
+        obs0 = getattr(prev_carry, "obs", None)
+        if obs0 is None and plan.telemetry:
+            obs0 = obs_counters.init_counters(self.phase_period)
         if plan.executor == "loop":
             cfn = None
             if collect is not None:
@@ -1044,30 +1166,39 @@ class StradsEngine:
             ys: list = []
             executed = 0
             sc = sc0
-            for k in range(rounds):
-                t = t0 + k
-                rng, sub = jax.random.split(rng)
-                out = self.run_round(state, data, sub, t, sched_carry=sc)
-                state, sc = out.state, out.sched_carry
-                executed = k + 1
-                if cfn is not None:
-                    ys.append(cfn(state))
-                if callback is not None and callback(t, state, out):
-                    break
+            obs = obs0
+            num_cand = self._obs_num_candidates()
+            period = self.phase_period
+            with self._obs_span("loop", t0=t0, rounds=rounds):
+                for k in range(rounds):
+                    t = t0 + k
+                    rng, sub = jax.random.split(rng)
+                    out = self.run_round(state, data, sub, t,
+                                         sched_carry=sc)
+                    state, sc = out.state, out.sched_carry
+                    if obs is not None:
+                        obs = obs_counters.observe_round(
+                            obs, out.sched, t % period, num_cand)
+                    executed = k + 1
+                    if cfn is not None:
+                        ys.append(cfn(state))
+                    if callback is not None and callback(t, state, out):
+                        break
             trace = (jax.tree.map(lambda *xs: jnp.stack(xs), *ys)
                      if ys else None)
             carry = EngineCarry(rng=rng, t=jnp.int32(t0 + executed),
-                                sched_carry=sc)
+                                sched_carry=sc, obs=obs)
             return ExecutionReport(state=state, trace=trace,
                                    carry=carry, plan=plan)
 
         if plan.executor in ("scan", "pipelined"):
             sched0 = getattr(prev_carry, "sched", None)
-            out = self.run_scanned(
-                state, data, rng, rounds, pipeline_depth=plan.depth,
-                collect=collect, donate=plan.donate,
-                unroll=plan.phase_unroll, t0=t0, sched0=sched0,
-                sched_carry0=sc0, return_carry=True)
+            with self._obs_span(plan.executor, t0=t0, rounds=rounds):
+                out = self.run_scanned(
+                    state, data, rng, rounds, pipeline_depth=plan.depth,
+                    collect=collect, donate=plan.donate,
+                    unroll=plan.phase_unroll, t0=t0, sched0=sched0,
+                    sched_carry0=sc0, obs0=obs0, return_carry=True)
             if collect is None:
                 state, carry = out
                 trace = None
@@ -1078,11 +1209,13 @@ class StradsEngine:
 
         # executor == "ssp" (plan validation admits nothing else)
         clocks = getattr(prev_carry, "clocks", None)
-        out = self.run_ssp(
-            state, data, rng, rounds, staleness=plan.staleness,
-            collect=collect, donate=plan.donate,
-            with_telemetry=plan.telemetry, t0=t0, clocks=clocks,
-            sched_carry0=sc0, return_carry=True)
+        with self._obs_span("ssp", t0=t0, rounds=rounds,
+                            staleness=plan.staleness):
+            out = self.run_ssp(
+                state, data, rng, rounds, staleness=plan.staleness,
+                collect=collect, donate=plan.donate,
+                with_telemetry=bool(plan.telemetry), t0=t0, clocks=clocks,
+                sched_carry0=sc0, obs0=obs0, return_carry=True)
         parts = list(out if isinstance(out, tuple) else (out,))
         state = parts.pop(0)
         trace = parts.pop(0) if collect is not None else None
@@ -1099,6 +1232,9 @@ class StradsEngine:
                collect, donate, unroll, with_sched0)
         fn = self._scan_cache.get(key)
         if fn is None:
+            self._obs_event("cache_miss", program="scan",
+                            num_steps=num_steps, depth=depth,
+                            **self._cache_key_args())
             fn = self._build_scan(num_steps, depth, collect, donate,
                                   unroll, with_sched0)
             self._scan_cache[key] = fn
@@ -1109,31 +1245,41 @@ class StradsEngine:
                     unroll: int, with_sched0: bool):
         period = self.phase_period
         L = period * unroll           # rounds per scan step
+        # telemetry is injected at trace time (the telemetry-injection
+        # contract): counters observe only the schedule pytree, so the
+        # state/PRNG stream is untouched — instrumented runs stay
+        # bit-identical.  num_candidates is static per scheduler.
+        num_cand = self._obs_num_candidates()
 
-        def one_round(state, sc, data, rng, t, phase, ys):
+        def one_round(state, sc, data, rng, t, phase, obs, ys):
             # Depth-0 inner round: fresh schedule, then update — the exact
             # op/PRNG order of the host-loop round.
             sched = self._make_schedule(state, sc, data, rng, t, phase)
+            if obs is not None:
+                obs = obs_counters.observe_round(obs, sched, phase,
+                                                 num_cand)
             new_state = self._apply(state, data, sched, phase)
             sc = self._sched_update(sc, state, new_state, sched, phase)
             if collect is not None:
                 ys.append(collect(new_state))
-            return new_state, sc
+            return new_state, sc, obs
 
-        def scanned(state, data, rng, t0, sc0, *sched0):
+        def scanned(state, data, rng, t0, sc0, obs0=None, *sched0):
             if depth == 0:
                 def step(carry, _):
-                    state, rng, tc, sc = carry
+                    state, rng, tc, sc, obs = carry
                     ys: list = []
                     for i in range(L):
                         rng, sub = jax.random.split(rng)
-                        state, sc = one_round(state, sc, data, sub,
-                                              tc + i, i % period, ys)
-                    return ((state, rng, tc + L, sc),
+                        state, sc, obs = one_round(state, sc, data, sub,
+                                                   tc + i, i % period,
+                                                   obs, ys)
+                    return ((state, rng, tc + L, sc, obs),
                             _stack_rounds(ys) if collect else None)
 
-                (state, rng, _, sc), ys = jax.lax.scan(
-                    step, (state, rng, t0, sc0), None, length=num_steps)
+                (state, rng, _, sc, obs), ys = jax.lax.scan(
+                    step, (state, rng, t0, sc0, obs0), None,
+                    length=num_steps)
                 sched = None
             else:
                 # Pipelined: carry the next round's schedule.  At the top
@@ -1149,13 +1295,18 @@ class StradsEngine:
                                                 t0, 0)
 
                 def step(carry, _):
-                    state, rng, tc, sc, sched = carry
+                    state, rng, tc, sc, sched, obs = carry
                     ys: list = []
                     for i in range(L):
                         t = tc + i
                         rng, sub = jax.random.split(rng)
                         sched_next = self._make_schedule(
                             state, sc, data, sub, t + 1, (i + 1) % period)
+                        if obs is not None:
+                            # count the schedule the round EXECUTES (the
+                            # one-round-stale one), not the prefetch
+                            obs = obs_counters.observe_round(
+                                obs, sched, i % period, num_cand)
                         new_state = self._apply(state, data, sched,
                                                 i % period)
                         sc = self._sched_update(sc, state, new_state,
@@ -1164,11 +1315,11 @@ class StradsEngine:
                         sched = sched_next
                         if collect is not None:
                             ys.append(collect(state))
-                    return ((state, rng, tc + L, sc, sched),
+                    return ((state, rng, tc + L, sc, sched, obs),
                             _stack_rounds(ys) if collect else None)
 
-                (state, rng, _, sc, sched), ys = jax.lax.scan(
-                    step, (state, rng, t0, sc0, sched), None,
+                (state, rng, _, sc, sched, obs), ys = jax.lax.scan(
+                    step, (state, rng, t0, sc0, sched, obs0), None,
                     length=num_steps)
 
             if collect is not None:
@@ -1176,7 +1327,7 @@ class StradsEngine:
                 ys = jax.tree.map(
                     lambda x: x.reshape((num_steps * L,) + x.shape[2:]),
                     ys)
-            return state, rng, sched, sc, ys
+            return state, rng, sched, sc, obs, ys
 
         return jax.jit(scanned, donate_argnums=(0,) if donate else ())
 

@@ -29,9 +29,11 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any, Optional
+import warnings
+from typing import Any, Optional, Union
 
 from ..kernels.spec import KernelSpec
+from ..obs.spec import TelemetrySpec
 from ..part.spec import PartitionerSpec
 from ..sched.spec import SchedulerSpec
 
@@ -64,7 +66,18 @@ class ExecutionPlan:
                      app's ``phase_period`` (1 = one phase cycle per scan
                      step — the default and the bit-identical baseline).
                      Only meaningful for the scanned executors.
-    telemetry:       return staleness telemetry (SSP only).
+    telemetry:       the observability policy, as a declarative
+                     :class:`~repro.obs.spec.TelemetrySpec` (kind ∈
+                     counters | trace).  ``False`` (the default) runs
+                     uninstrumented; a spec makes **every** executor
+                     return a populated
+                     :class:`~repro.obs.report.RunReport` as
+                     ``ExecutionReport.telemetry`` (device counters,
+                     host events under ``kind="trace"``, and the SSP
+                     staleness/byte section for ssp plans) — final model
+                     state stays bit-identical either way.  The
+                     deprecated bool form still works: ``True`` warns
+                     and normalizes to ``TelemetrySpec(kind="counters")``.
     checkpoint_every: checkpoint cadence in rounds for
                      ``StradsEngine.execute(..., ckpt_dir=...)`` (0 = no
                      checkpointing); must tile the executor's step length.
@@ -116,7 +129,7 @@ class ExecutionPlan:
     staleness: int = 0
     pipeline_depth: Optional[int] = None
     phase_unroll: int = 1
-    telemetry: bool = False
+    telemetry: Union[bool, TelemetrySpec] = False
     checkpoint_every: int = 0
     collect_every: int = 0
     donate: bool = True
@@ -157,9 +170,27 @@ class ExecutionPlan:
             raise ValueError(
                 f"phase_unroll={self.phase_unroll} only applies to the "
                 f"scanned executors; got executor={self.executor!r}")
-        if self.telemetry and self.executor != "ssp":
-            raise ValueError("telemetry=True requires executor='ssp' "
-                             f"(got {self.executor!r})")
+        # telemetry graduated from a bool to a TelemetrySpec; True used
+        # to raise off-ssp ("telemetry=True requires executor='ssp'") —
+        # now every executor carries engine-wide counters, so the bool
+        # form only warns and normalizes onto the spec it implies.
+        if self.telemetry is None:
+            object.__setattr__(self, "telemetry", False)
+        if isinstance(self.telemetry, bool):
+            if self.telemetry:
+                warnings.warn(
+                    "plan.telemetry=True (bool) is deprecated; pass a "
+                    "repro.obs.TelemetrySpec — it no longer requires "
+                    "executor='ssp' (True maps to kind='counters', the "
+                    "engine-wide device counters, on every executor)",
+                    DeprecationWarning, stacklevel=3)
+                object.__setattr__(self, "telemetry",
+                                   TelemetrySpec(kind="counters"))
+        elif not isinstance(self.telemetry, TelemetrySpec):
+            raise ValueError(
+                f"telemetry must be a bool or a repro.obs.TelemetrySpec "
+                f"(its own __post_init__ validates the kind); got "
+                f"{type(self.telemetry).__name__}")
         for field in ("checkpoint_every", "collect_every"):
             v = getattr(self, field)
             if not isinstance(v, int) or v < 0:
@@ -227,6 +258,9 @@ class ExecutionPlan:
                 obj["partitioner"]))
         if isinstance(obj.get("kernels"), dict):
             obj = dict(obj, kernels=KernelSpec.from_json(obj["kernels"]))
+        if isinstance(obj.get("telemetry"), dict):
+            obj = dict(obj, telemetry=TelemetrySpec.from_json(
+                obj["telemetry"]))
         return cls(**obj)
 
 
@@ -239,8 +273,11 @@ class ExecutionReport:
     trace:      stacked per-round ``collect`` outputs (leading axis =
                 rounds executed this call), or ``None`` without a collect
                 fn.
-    telemetry:  :class:`repro.ps.telemetry.SSPTelemetry` when the plan
-                asked for it (SSP only).
+    telemetry:  :class:`repro.obs.report.RunReport` when the plan
+                carries a :class:`~repro.obs.spec.TelemetrySpec` — the
+                uniform per-run metrics object (device counters, host
+                events, and the SSP staleness/byte section as its
+                ``.ssp`` for ssp plans); ``None`` uninstrumented.
     carry:      resumable executor carry — :class:`repro.ps.ssp.SSPCarry`
                 for SSP, :class:`repro.core.engine.EngineCarry` for the
                 loop/scanned executors.  Round-trips through

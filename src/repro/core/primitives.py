@@ -141,6 +141,38 @@ traced round lowers to.  The discipline it shares with the other two:
   pallas arms — reuses each configuration's programs instead of
   retracing on every swap.
 
+The telemetry-injection contract
+--------------------------------
+
+Observability follows the same declarative shape: a
+:class:`~repro.obs.spec.TelemetrySpec` on the
+:class:`~repro.core.plan.ExecutionPlan` (``plan.telemetry``; the legacy
+boolean form still parses — ``True`` means ``kind="counters"`` with a
+``DeprecationWarning``).  Unlike the scheduler/partitioner/kernel
+contracts, apps implement **nothing**: instrumentation is engine-owned
+and rides *outside* the primitives, so it can never change what a round
+computes.
+
+* **Device counters** (any spec) are an extra pytree leaf threaded
+  through every executor's carry (``EngineCarry.obs`` /
+  ``SSPCarry.obs``; ``None`` when telemetry is off, so old checkpoints
+  restore unchanged).  Counters are derived *only* from the already-
+  computed schedule pytree — per-phase round counts, scheduled-block
+  widths, and the ρ-filter ledger (``proposed = accepted + killed``
+  from the keep-mask popcounts) — never from model state or the PRNG
+  stream, which is what makes the instrumented run **bit-identical**
+  to the uninstrumented one.
+* **Host events** (``kind="trace"``) come from an engine-owned
+  ``Recorder``: executor/chunk/checkpoint spans, compiled-program
+  cache misses keyed by the (SchedulerSpec, Assignment, KernelSpec)
+  triple, and rebalance decisions — all recorded at host phase
+  boundaries, never inside a traced program.
+* Every ``execute()`` returns the resolved telemetry as a uniform
+  :class:`~repro.obs.report.RunReport` in
+  ``ExecutionReport.telemetry`` (the SSP staleness summary becomes its
+  ``.ssp`` section); ``repro.launch.trace`` validates and re-exports
+  saved reports offline.
+
 The v2 write contract (VarTable-mediated push/pull)
 ---------------------------------------------------
 

@@ -220,7 +220,7 @@ def run_engine(engine: str, workers: int, rounds: int, depth: int,
                staleness=None, unroll: int = 1, scheduler=None,
                sched_kind: str = "", rho=None, partitioner=None,
                part_kind: str = "", kernels=None,
-               kern_kind: str = "") -> dict:
+               kern_kind: str = "", telemetry=None) -> dict:
     """Lower + compile the scanned (or, with ``staleness``, the SSP)
     STRADS executor on a ``workers``-wide data mesh (a slice of the
     forced-512 topology).  ``rounds`` must already be step-aligned
@@ -232,9 +232,16 @@ def run_engine(engine: str, workers: int, rounds: int, depth: int,
     :class:`repro.part.PartitionerSpec` (flag form built by
     ``PartitionerSpec.default_for``), and ``kernels``/``kern_kind`` for
     the :class:`repro.kernels.KernelSpec` serving the round body's
-    hot-spots.  The resolved spec dicts — and the initial
-    variable→worker assignment's shape — are recorded in the result,
-    plus the trip-count-aware HLO analysis and roofline terms."""
+    hot-spots.  ``telemetry`` (a :class:`repro.obs.TelemetrySpec`)
+    instruments the lowering: the device counters ride the lowered
+    program's scan carry (proving the instrumented program compiles at
+    production scale), ``kind="trace"`` times the lower/compile phases
+    with a host :class:`~repro.obs.events.Recorder`, and the resolved
+    spec + a :class:`~repro.obs.report.RunReport` land in the artifact
+    (``roofline --check``/``launch.trace`` read them back).  The
+    resolved spec dicts — and the initial variable→worker assignment's
+    shape — are recorded in the result, plus the trip-count-aware HLO
+    analysis and roofline terms."""
     import numpy as np
     from jax.sharding import Mesh
 
@@ -267,23 +274,44 @@ def run_engine(engine: str, workers: int, rounds: int, depth: int,
         out["kernels"] = eng.kernel_spec.to_json()
     if unroll != 1:
         out["phase_unroll"] = unroll
+    import contextlib
+
     import jax.numpy as jnp
+    rec = None
+    obs0 = None
+    if telemetry is not None:
+        from ..obs import Recorder, init_counters
+        out["telemetry"] = telemetry.to_json()
+        obs0 = init_counters(eng.phase_period)
+        if telemetry.events:
+            rec = Recorder(profiler=telemetry.profiler)
     sc0 = eng.init_sched_carry()
     t0 = time.time()
-    if staleness is None:
-        fn = eng.scanned_fn(rounds, pipeline_depth=depth, unroll=unroll)
-        lowered = fn.lower(state, data, jax.random.key(1), jnp.int32(0),
-                           sc0)
-    else:
-        from .. import ps
-        out["staleness"] = staleness
-        fn = eng.ssp_fn(rounds, staleness=staleness)
-        lowered = fn.lower(state, data, jax.random.key(1), jnp.int32(0),
-                           ps.init_clocks(workers), sc0)
+    with rec.span("lower") if rec is not None else contextlib.nullcontext():
+        if staleness is None:
+            fn = eng.scanned_fn(rounds, pipeline_depth=depth,
+                                unroll=unroll)
+            lowered = fn.lower(state, data, jax.random.key(1),
+                               jnp.int32(0), sc0, obs0)
+        else:
+            from .. import ps
+            out["staleness"] = staleness
+            fn = eng.ssp_fn(rounds, staleness=staleness)
+            lowered = fn.lower(state, data, jax.random.key(1),
+                               jnp.int32(0), ps.init_clocks(workers), sc0,
+                               obs0)
     out["lower_s"] = round(time.time() - t0, 2)
     t0 = time.time()
-    compiled = lowered.compile()
+    with (rec.span("compile") if rec is not None
+          else contextlib.nullcontext()):
+        compiled = lowered.compile()
     out["compile_s"] = round(time.time() - t0, 2)
+    if telemetry is not None:
+        from ..obs import RunReport
+        executor = ("ssp" if staleness is not None
+                    else ("pipelined" if depth else "scan"))
+        out["run_report"] = RunReport.build(telemetry, executor, rounds,
+                                            recorder=rec).to_json()
     try:
         ma = compiled.memory_analysis()
         out["memory"] = {k: int(getattr(ma, k)) for k in
@@ -383,16 +411,24 @@ def main():
                     help="with --engine: KernelSpec kind overriding the "
                          "app's default hot-spot backend (flag form "
                          "built by KernelSpec.default_for)")
+    ap.add_argument("--telemetry", default="",
+                    choices=("", "counters", "trace"),
+                    help="with --engine: TelemetrySpec kind instrumenting "
+                         "the lowering (device counters in the lowered "
+                         "scan carry; 'trace' also times lower/compile "
+                         "and embeds a RunReport in the artifact)")
     args = ap.parse_args()
     if args.plan and not args.engine:
         ap.error("--plan requires --engine (plans drive the STRADS "
                  "executor lowering, not the arch × shape specs)")
     if args.plan and (args.scheduler or args.rho is not None
-                      or args.partitioner or args.kernels):
-        ap.error("--scheduler/--rho/--partitioner/--kernels conflict "
-                 "with --plan (the plan's scheduler/partitioner/kernels "
-                 "fields — possibly null = app default — are "
-                 "authoritative); edit the plan file instead")
+                      or args.partitioner or args.kernels
+                      or args.telemetry):
+        ap.error("--scheduler/--rho/--partitioner/--kernels/--telemetry "
+                 "conflict with --plan (the plan's scheduler/partitioner/"
+                 "kernels/telemetry fields — possibly null/false = app "
+                 "default/off — are authoritative); edit the plan file "
+                 "instead")
 
     os.makedirs(RESULTS_DIR, exist_ok=True)
 
@@ -404,6 +440,7 @@ def main():
         spec = None
         part_spec = None
         kern_spec = None
+        tele_spec = None
         if args.plan:
             from ..core import ExecutionPlan
             with open(args.plan) as f:
@@ -419,6 +456,10 @@ def main():
             spec = plan.scheduler         # None → the app's default policy
             part_spec = plan.partitioner  # None → the app's default
             kern_spec = plan.kernels      # None → app default → reference
+            tele_spec = plan.telemetry or None   # False → uninstrumented
+        elif args.telemetry:
+            from ..obs import TelemetrySpec
+            tele_spec = TelemetrySpec.default_for(args.telemetry)
         variant = (f"s{staleness}" if staleness is not None
                    else f"d{depth}")
         if spec is not None:
@@ -437,6 +478,8 @@ def main():
             variant += f"__k-{kern_spec.kind}"
         elif args.kernels:
             variant += f"__k-{args.kernels}"
+        if tele_spec is not None:
+            variant += f"__obs-{tele_spec.kind}"
         rounds = engine_rounds(args.engine, workers, rounds_req, staleness,
                                unroll)
         if rounds != rounds_req:
@@ -456,7 +499,8 @@ def main():
                          partitioner=part_spec,
                          part_kind="" if args.plan else args.partitioner,
                          kernels=kern_spec,
-                         kern_kind="" if args.plan else args.kernels)
+                         kern_kind="" if args.plan else args.kernels,
+                         telemetry=tele_spec)
         if plan is not None:
             # record what actually ran: engine_rounds may have aligned
             # the round count to whole SSP steps

@@ -559,6 +559,22 @@ def main(argv=None) -> int:
               f"[{'ok' if ok else 'DEGENERATE'}]")
         if not ok:
             bad.append(name)
+        # instrumented artifacts (dryrun --telemetry trace / a plan's
+        # TelemetrySpec) also carry measured wall-clock phase spans —
+        # print them beside the modelled terms, and under --check hold
+        # them to the same strict-nesting contract the trace CLI does
+        rr = rec.get("run_report")
+        events = (rr or {}).get("events") or []
+        spans = [e for e in events if e.get("ph") == "X"]
+        if spans:
+            from ..obs.events import validate_spans
+            err = validate_spans(events)
+            timed = "  ".join(f"{e['name']} {e['dur']/1e6:.2f}s"
+                              for e in spans)
+            print(f"  measured phases: {timed}"
+                  + ("" if err is None else f"  [INVALID: {err}]"))
+            if err is not None:
+                bad.append(name)
     if not files:
         print("no artifacts matched")
         return 1

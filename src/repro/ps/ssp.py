@@ -55,8 +55,9 @@ objective-vs-round for ``s ∈ {0,1,2,4}``.
 
 Built on the same ``lax.scan`` skeleton as ``run_scanned``: one XLA
 program for all R rounds, donated state, no per-round host sync.  The
-scan carries ``(state, rng, round counter, vector clocks, telemetry)``;
-the carry is exposed as :class:`SSPCarry` so a run can be checkpointed
+scan carries ``(state, rng, round counter, vector clocks, telemetry,
+engine-wide counters)``; the carry is exposed as :class:`SSPCarry` so a
+run can be checkpointed
 and resumed exactly (``checkpoint/npz.py`` round-trips it, clocks
 included).
 """
@@ -74,6 +75,7 @@ from jax.sharding import PartitionSpec as P
 from ..core.compat import shard_map
 from ..core.engine import DATA_AXIS
 from ..core.kvstore import VarTable
+from ..obs import counters as obs_counters
 from . import telemetry as T
 from .cache import StaleCache
 from .server import ParameterServer, init_clocks, tick
@@ -83,13 +85,16 @@ from .server import ParameterServer, init_clocks, tick
 @dataclasses.dataclass(frozen=True)
 class SSPCarry:
     """Resumable executor carry: PRNG stream, next round, vector clocks,
-    and the engine-owned scheduler carry (Δx priority history; ``None``
-    for stateless policies) — the SSP twin of
-    :class:`repro.core.engine.EngineCarry`."""
+    the engine-owned scheduler carry (Δx priority history; ``None``
+    for stateless policies), and — under a plan-level
+    :class:`~repro.obs.spec.TelemetrySpec` — the device telemetry
+    counters (:mod:`repro.obs.counters`; ``None`` uninstrumented) — the
+    SSP twin of :class:`repro.core.engine.EngineCarry`."""
     rng: jax.Array
     t: jax.Array                 # int32: next round index
     clocks: jax.Array            # (num_workers,) per-worker vector clock
     sched_carry: Any = None      # scheduler carry (Δx history, …)
+    obs: Any = None              # device telemetry counters (or None)
 
 
 def rounds_per_step(engine, staleness: int) -> int:
@@ -332,7 +337,7 @@ def _build_ssp(eng, num_steps: int, staleness: int,
     period = eng.phase_period
     L = rounds_per_step(eng, staleness)
 
-    def scanned(state, data, rng, t0, clocks, sc0):
+    def scanned(state, data, rng, t0, clocks, sc0, obs0=None):
         # The server/cache split follows the engine's KV store when one
         # was built (place_state) — a repartition re-derives that
         # store's VarSpecs, and the per-assignment program cache key
@@ -345,9 +350,13 @@ def _build_ssp(eng, num_steps: int, staleness: int,
                                                 eng._sspec(state),
                                                 roles=eng.app_roles())
         hooks = _make_hooks(eng.app, VarTable(server.store))
+        # engine-wide counters (the telemetry-injection contract):
+        # observe only the schedule pytree, so the instrumented program
+        # stays bit-identical in state/PRNG
+        num_cand = eng._obs_num_candidates()
 
         def step(carry, _):
-            state, rng, t, clocks, sc, telem = carry
+            state, rng, t, clocks, sc, telem, obs = carry
             ys: list = []
             cache = StaleCache(values=server.snapshot(state),
                                clock=jnp.asarray(t, jnp.int32))
@@ -377,6 +386,9 @@ def _build_ssp(eng, num_steps: int, staleness: int,
                                            phases[0])
                     state = new_state
                     telem = T.observe_read(telem, ts[0], cache.clock)
+                    if obs is not None:
+                        obs = obs_counters.observe_round(
+                            obs, scheds[0], phases[0], num_cand)
                     clocks = tick(clocks)
                     if not info.get("traced"):
                         info["deferred_bytes_peak"] = max(
@@ -397,6 +409,9 @@ def _build_ssp(eng, num_steps: int, staleness: int,
                     z_pends.append(zp)
                     keep_pends.append(kp)
                     telem = T.observe_read(telem, ts[k], cache.clock)
+                    if obs is not None:
+                        obs = obs_counters.observe_round(
+                            obs, scheds[k], phases[k], num_cand)
                     clocks = tick(clocks)
 
                 # The staleness bound now forces a sync: flush the pending
@@ -425,12 +440,12 @@ def _build_ssp(eng, num_steps: int, staleness: int,
             out = None
             if collect is not None:
                 out = jax.tree.map(lambda *xs: jnp.stack(xs), *ys)
-            return (state, rng, t + L, clocks, sc, telem), out
+            return (state, rng, t + L, clocks, sc, telem, obs), out
 
         telem0 = T.device_init(staleness)
-        (state, rng, t, clocks, sc, telem), ys = jax.lax.scan(
+        (state, rng, t, clocks, sc, telem, obs), ys = jax.lax.scan(
             step, (state, rng, jnp.asarray(t0, jnp.int32), clocks, sc0,
-                   telem0),
+                   telem0, obs0),
             None, length=num_steps)
         if not info.get("traced"):
             info["traced"] = True
@@ -440,20 +455,23 @@ def _build_ssp(eng, num_steps: int, staleness: int,
             ys = jax.tree.map(
                 lambda x: x.reshape((num_steps * L,) + x.shape[2:]), ys)
         return state, SSPCarry(rng=rng, t=t, clocks=clocks,
-                               sched_carry=sc), telem, ys
+                               sched_carry=sc, obs=obs), telem, ys
 
     return jax.jit(scanned, donate_argnums=(0,) if donate else ())
 
 
 def _get_ssp_fn(eng, num_steps: int, staleness: int,
                 collect: Optional[Callable], donate: bool):
-    # keyed per (SchedulerSpec, Assignment): a partition move re-derives
-    # the server/cache split from the repartitioned KVStore specs at the
-    # next trace, and a swap back to a previous assignment is a cache hit
-    key = ("ssp", eng._active_spec, eng._assignment, num_steps, staleness,
-           collect, donate)
+    # keyed per (SchedulerSpec, Assignment, KernelSpec): a partition move
+    # re-derives the server/cache split from the repartitioned KVStore
+    # specs at the next trace, and a swap back to a previous
+    # configuration is a cache hit
+    key = ("ssp", eng._active_spec, eng._assignment,
+           eng._active_kern_spec, num_steps, staleness, collect, donate)
     hit = eng._scan_cache.get(key)
     if hit is None:
+        eng._obs_event("cache_miss", program="ssp", num_steps=num_steps,
+                       staleness=staleness, **eng._cache_key_args())
         info: dict = {}
         hit = (_build_ssp(eng, num_steps, staleness, collect, donate, info),
                info)
@@ -467,10 +485,11 @@ def _get_ssp_fn(eng, num_steps: int, staleness: int,
 
 def ssp_fn(eng, num_rounds: int, *, staleness: int = 0,
            collect: Optional[Callable] = None, donate: bool = True):
-    """The jitted ``(state, data, rng, t0, clocks, sched_carry) → (state,
-    carry, telemetry, trace)`` SSP program, exposed for AOT
+    """The jitted ``(state, data, rng, t0, clocks, sched_carry, obs) →
+    (state, carry, telemetry, trace)`` SSP program, exposed for AOT
     ``.lower().compile()`` (``launch/dryrun.py --engine ... --staleness``;
-    pass ``engine.init_sched_carry()`` for a fresh run).
+    pass ``engine.init_sched_carry()`` for a fresh run and ``None`` — or
+    ``repro.obs.init_counters(engine.phase_period)`` — for ``obs``).
     """
     num_steps = _check_rounds(eng, num_rounds, staleness)
     return _get_ssp_fn(eng, num_steps, staleness, collect, donate)[0]
@@ -495,7 +514,7 @@ def run_ssp(eng, state, data, rng, num_rounds: int, *, staleness: int = 0,
             collect: Optional[Callable] = None, donate: bool = True,
             with_telemetry: bool = False, t0: int = 0,
             clocks: Optional[jax.Array] = None,
-            sched_carry0: Any = _UNSET,
+            sched_carry0: Any = _UNSET, obs0: Any = None,
             return_carry: bool = False):
     """Execute ``num_rounds`` rounds under bounded staleness ``s``.
 
@@ -511,7 +530,10 @@ def run_ssp(eng, state, data, rng, num_rounds: int, *, staleness: int = 0,
     values from a saved :class:`SSPCarry`; ``t0`` must be a multiple of
     the step length, ``sched_carry0`` is the engine-owned scheduler
     carry — omitted, a fresh ``scheduler.init_carry()`` is used, which
-    is only correct at ``t0=0``).  ``return_carry=True`` appends the
+    is only correct at ``t0=0``).  ``obs0`` threads the engine-wide
+    device telemetry counters (:func:`repro.obs.counters.init_counters`,
+    or a previous :class:`SSPCarry`'s ``obs``) through the scan;
+    ``None`` runs uninstrumented.  ``return_carry=True`` appends the
     final carry to the return value; ``with_telemetry=True`` appends an
     :class:`~repro.ps.telemetry.SSPTelemetry`.
     """
@@ -534,7 +556,7 @@ def run_ssp(eng, state, data, rng, num_rounds: int, *, staleness: int = 0,
     fn, info = _get_ssp_fn(eng, num_steps, staleness, collect, donate)
     state, carry, telem, ys = fn(state, data, rng,
                                  jnp.int32(t0), jnp.asarray(clocks),
-                                 sched_carry0)
+                                 sched_carry0, obs0)
 
     ret = [state]
     if collect is not None:

@@ -5,35 +5,37 @@ Two halves:
 * a small **device-side** pytree carried through the scan (staleness
   histogram, max observed read staleness) — this is what the staleness-
   invariant property test asserts over, so the bound is checked against
-  what the compiled program actually did, not against the window algebra;
+  what the compiled program actually did, not against the window algebra.
+  Since the unified observability subsystem landed, the device half
+  *lives* in :mod:`repro.obs.counters` (``staleness_init`` /
+  ``observe_read`` — the same scan-carried-int32 pattern now serves all
+  four executors); this module re-exports it under its historical names;
 * **host-side static** byte accounting, captured while the executor
   traces (partial-update bytes deferred per window, aggregated per flush,
   server bytes pulled into caches per refresh) — per-round shapes are
   static, so these are exact without any device traffic.
+
+An :class:`SSPTelemetry` summary joins the two; under a plan-level
+:class:`~repro.obs.spec.TelemetrySpec` it becomes the ``ssp`` section of
+the run's :class:`~repro.obs.report.RunReport`, and chunked
+(``checkpoint_every``) runs merge per-chunk summaries via
+:func:`merge_summaries`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, List
 
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.counters import observe_read, staleness_init
 
-def device_init(staleness: int) -> Dict[str, jnp.ndarray]:
-    """Scan-carried telemetry: histogram over observed read staleness
-    (bins 0..s) and the running max."""
-    return {"hist": jnp.zeros((staleness + 1,), jnp.int32),
-            "max_staleness": jnp.int32(0)}
+__all__ = ["SSPTelemetry", "device_init", "observe_read", "summarize",
+           "merge_summaries"]
 
-
-def observe_read(telem: Dict[str, jnp.ndarray], clock,
-                 cache_clock) -> Dict[str, jnp.ndarray]:
-    """Record one round's read: how stale was the cache it was served
-    from?  (``clock`` and ``cache_clock`` are device scalars.)"""
-    st = jnp.asarray(clock, jnp.int32) - jnp.asarray(cache_clock, jnp.int32)
-    return {"hist": telem["hist"].at[st].add(1),
-            "max_staleness": jnp.maximum(telem["max_staleness"], st)}
+# historical name for the relocated device half (repro.obs.counters)
+device_init = staleness_init
 
 
 @dataclasses.dataclass
@@ -72,4 +74,29 @@ def summarize(device: Dict[str, jnp.ndarray], info: dict, *,
                          * info.get("num_steps", 0)),
         bytes_deferred_peak=int(info.get("deferred_bytes_peak", 0)),
         bytes_pulled=int(info.get("shared_bytes", 0)) * flushes,
+    )
+
+
+def merge_summaries(parts: List[SSPTelemetry]) -> SSPTelemetry:
+    """Join per-chunk summaries of one chunked (``checkpoint_every``)
+    run: counts and histograms add, the observed max is the max of
+    maxes, and the final chunk's vector clocks are the run's."""
+    if not parts:
+        raise ValueError("merge_summaries needs at least one summary")
+    head = parts[0]
+    for p in parts[1:]:
+        if p.staleness_bound != head.staleness_bound:
+            raise ValueError(
+                f"cannot merge SSP summaries across staleness bounds "
+                f"{head.staleness_bound} != {p.staleness_bound}")
+    return SSPTelemetry(
+        staleness_bound=head.staleness_bound,
+        rounds=sum(p.rounds for p in parts),
+        flushes=sum(p.flushes for p in parts),
+        hist=np.sum([np.asarray(p.hist) for p in parts], axis=0),
+        max_staleness=max(p.max_staleness for p in parts),
+        clocks=np.asarray(parts[-1].clocks),
+        bytes_pushed=sum(p.bytes_pushed for p in parts),
+        bytes_deferred_peak=max(p.bytes_deferred_peak for p in parts),
+        bytes_pulled=sum(p.bytes_pulled for p in parts),
     )

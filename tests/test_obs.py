@@ -1,0 +1,445 @@
+"""The unified observability subsystem (repro/obs).
+
+Contract under test (ISSUE 7 acceptance):
+  * telemetry is **bit-neutral**: every executor × every paper app
+    produces the exact same final state with telemetry off, with device
+    counters, and with the full trace recorder — instrumentation rides
+    outside the primitives and can never change what a round computes.
+  * the device-counter identities hold for arbitrary runs (hypothesis
+    property): per-phase round totals sum to the run's rounds and the
+    ρ-filter ledger balances (``accepted + killed == proposed``).
+  * all four executors return a populated
+    :class:`~repro.obs.report.RunReport` in
+    ``ExecutionReport.telemetry`` carrying the resolved spec.
+  * the Chrome-trace export is valid JSON whose spans are strictly
+    nested with non-negative durations (``validate_spans``).
+  * counters are bit-exact through ``checkpoint_every`` chunking and
+    through a checkpoint/restore resume (``EngineCarry.obs`` rides the
+    npz payload like every other carry leaf).
+  * the plan shim: ``telemetry=True`` still parses (DeprecationWarning →
+    ``TelemetrySpec(kind="counters")``), non-SSP executors no longer
+    reject it, and plans round-trip through JSON with specs intact.
+"""
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.apps import lasso, lda, mf
+from repro.checkpoint import restore_checkpoint
+from repro.core import ExecutionPlan, single_device_mesh
+from repro.obs import (Recorder, RunReport, TelemetrySpec, chrome_trace,
+                       report_from_json, validate_spans)
+from repro.launch.trace import check_report, extract_report_dicts
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return single_device_mesh()
+
+
+def _bit_identical(a_state, b_state):
+    assert set(a_state) == set(b_state)
+    for k in a_state:
+        a, b = np.asarray(a_state[k]), np.asarray(b_state[k])
+        assert (a == b).all(), (k, np.max(np.abs(a - b)))
+
+
+def _lasso_engine(rng, mesh, n=40, J=20):
+    X, y, _ = lasso.synthetic_correlated(rng, n=n, J=J, k_true=3)
+    cfg = lasso.LassoConfig(num_features=J, lam=0.02, block_size=4,
+                            num_candidates=8, rho=0.3)
+    eng = lasso.make_engine(cfg, mesh)
+    data = eng.shard_data({"X": jnp.asarray(X), "y": jnp.asarray(y)})
+    return eng, data, y
+
+
+def _plan(executor, rounds, telemetry):
+    kw = {"staleness": 1} if executor == "ssp" else {}
+    return ExecutionPlan(executor=executor, rounds=rounds,
+                         telemetry=telemetry, **kw)
+
+
+# ---------------------------------------------------------------------------
+# bit-neutrality: telemetry on ≡ off, every executor × every paper app
+# ---------------------------------------------------------------------------
+
+EXECUTORS = ("loop", "scan", "pipelined", "ssp")
+SPECS = (False, TelemetrySpec(kind="counters"), TelemetrySpec(kind="trace"))
+
+
+def _run_all_specs(eng, state, data, executor, rounds):
+    """Final states for off / counters / trace runs of the same plan
+    (fresh state copy per run — executors donate buffers)."""
+    return [eng.execute(jax.tree.map(jnp.copy, state), data,
+                        jax.random.key(1),
+                        _plan(executor, rounds, t)).state
+            for t in SPECS]
+
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+def test_lasso_telemetry_is_bit_neutral(executor, mesh, rng):
+    eng, data, y = _lasso_engine(rng, mesh)
+    state = eng.init_state(jax.random.key(0), y=y)
+    states = _run_all_specs(eng, state, data, executor, 8)
+    _bit_identical(states[0], states[1])
+    _bit_identical(states[0], states[2])
+
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+def test_lda_telemetry_is_bit_neutral(executor, mesh, rng):
+    cfg = lda.LDAConfig(vocab=30, num_topics=4, num_workers=1,
+                        tokens_per_worker=200, docs_per_worker=5)
+    words, docs, z0 = lda.synthetic_corpus(rng, cfg, true_topics=4)
+    eng = lda.make_engine(cfg, mesh)
+    data = eng.shard_data({"words": jnp.asarray(words),
+                           "docs": jnp.asarray(docs)})
+    state = eng.init_state(jax.random.key(0), words=words, docs=docs,
+                           z0=z0)
+    states = _run_all_specs(eng, state, data, executor, 6)
+    _bit_identical(states[0], states[1])
+    _bit_identical(states[0], states[2])
+
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+def test_mf_telemetry_is_bit_neutral(executor, mesh, rng):
+    A, mask = mf.synthetic_ratings(rng, 40, 30, true_rank=4, density=0.5)
+    cfg = mf.MFConfig(num_rows=40, num_cols=30, rank=4, lam=0.05)
+    eng = mf.make_engine(cfg, mesh)
+    data = eng.shard_data({"A": jnp.asarray(A),
+                           "mask": jnp.asarray(mask)})
+    state = eng.init_state(jax.random.key(0), A=jnp.asarray(A),
+                           mask=jnp.asarray(mask))
+    states = _run_all_specs(eng, state, data, executor, 8)
+    _bit_identical(states[0], states[1])
+    _bit_identical(states[0], states[2])
+
+
+# ---------------------------------------------------------------------------
+# every executor returns a populated RunReport with the resolved spec
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+def test_every_executor_returns_runreport(executor, mesh, rng):
+    eng, data, y = _lasso_engine(rng, mesh)
+    spec = TelemetrySpec(kind="trace")
+    rep = eng.execute(eng.init_state(jax.random.key(0), y=y), data,
+                      jax.random.key(1), _plan(executor, 8, spec))
+    report = rep.telemetry
+    assert isinstance(report, RunReport)
+    assert report.spec == spec
+    assert report.executor == executor
+    assert report.rounds == 8
+    c = report.counters
+    assert c["rounds"] == 8
+    assert sum(c["rounds_per_phase"]) == 8
+    assert c["accepted"] + c["killed"] == c["proposed"]
+    assert c["sched_size"] > 0
+    # every trace run records at least the execute > executor span pair
+    names = [e["name"] for e in report.events]
+    assert "execute" in names
+    assert validate_spans(report.events) is None
+    # the SSP staleness section appears exactly for the ssp executor
+    assert (report.ssp is not None) == (executor == "ssp")
+    # check_report (the trace CLI's offline validator) agrees, both on
+    # the live report and after a JSON round-trip
+    assert check_report(report) is None
+    assert check_report(report_from_json(report.to_json())) is None
+
+
+def test_no_spec_means_no_report(mesh, rng):
+    eng, data, y = _lasso_engine(rng, mesh)
+    rep = eng.execute(eng.init_state(jax.random.key(0), y=y), data,
+                      jax.random.key(1), _plan("scan", 4, False))
+    assert rep.telemetry is None
+
+
+def test_counters_kind_records_no_events(mesh, rng):
+    eng, data, y = _lasso_engine(rng, mesh)
+    rep = eng.execute(eng.init_state(jax.random.key(0), y=y), data,
+                      jax.random.key(1),
+                      _plan("scan", 4, TelemetrySpec(kind="counters")))
+    assert rep.telemetry.events == []
+    assert rep.telemetry.counters["rounds"] == 4
+
+
+# ---------------------------------------------------------------------------
+# the counter identities, as a property over run shapes (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=1, max_value=4),
+       st.sampled_from(["loop", "scan", "ssp"]),
+       st.sampled_from(["strads", "rr", "cyclic"]))
+def test_counter_identities_hold(steps, executor, scheduler):
+    """Σ per-phase rounds == rounds and accepted + killed == proposed,
+    for random (length, executor, scheduler-policy) configurations."""
+    mesh = single_device_mesh()
+    r = np.random.default_rng(steps * 13 + len(executor))
+    X, y, _ = lasso.synthetic_correlated(r, n=24, J=12, k_true=3)
+    cfg = lasso.LassoConfig(num_features=12, lam=0.02, block_size=3,
+                            num_candidates=6, rho=0.5,
+                            scheduler=scheduler)
+    eng = lasso.make_engine(cfg, mesh)
+    data = eng.shard_data({"X": jnp.asarray(X), "y": jnp.asarray(y)})
+    R = 2 * steps
+    rep = eng.execute(eng.init_state(jax.random.key(0), y=y), data,
+                      jax.random.key(1),
+                      _plan(executor, R, TelemetrySpec(kind="counters")))
+    c = rep.telemetry.counters
+    assert c["rounds"] == R
+    assert sum(c["rounds_per_phase"]) == R
+    assert all(v >= 0 for v in c["rounds_per_phase"])
+    assert c["accepted"] + c["killed"] == c["proposed"]
+    assert 0 <= c["accepted"] <= c["proposed"]
+    assert c["sched_size"] == c["accepted"]
+    if scheduler == "strads":
+        # the dynamic-priority policy ρ-filters num_candidates per round
+        assert c["proposed"] == R * cfg.num_candidates
+    else:
+        # rr/cyclic schedule fixed blocks: nothing proposed gets killed
+        assert c["killed"] == 0 and c["proposed"] == c["accepted"]
+
+
+# ---------------------------------------------------------------------------
+# the Chrome-trace export: valid JSON, strictly nested spans
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_export_is_valid_and_nested(tmp_path, mesh, rng):
+    eng, data, y = _lasso_engine(rng, mesh)
+    plan = ExecutionPlan(executor="ssp", rounds=8, staleness=1,
+                         checkpoint_every=4,
+                         telemetry=TelemetrySpec(kind="trace"))
+    rep = eng.execute(eng.init_state(jax.random.key(0), y=y), data,
+                      jax.random.key(1), plan,
+                      ckpt_dir=str(tmp_path / "ck"))
+    events = rep.telemetry.events
+    # chunking makes a real hierarchy: execute > {ssp × 2, checkpoint × 2}
+    names = [e["name"] for e in events if e.get("ph") == "X"]
+    assert names.count("ssp") == 2
+    assert names.count("checkpoint") == 2
+    assert validate_spans(events) is None
+
+    out = rep.telemetry.write_chrome_trace(str(tmp_path / "t.json"))
+    with open(out) as f:
+        doc = json.load(f)                      # must parse
+    assert doc["displayTimeUnit"] == "ms"
+    tev = doc["traceEvents"]
+    assert len(tev) == len(events)
+    spans = [e for e in tev if e["ph"] == "X"]
+    assert all(e["dur"] >= 0 and e["ts"] >= 0 for e in spans)
+    # strict nesting: any two overlapping spans contain one another
+    for a in spans:
+        for b in spans:
+            if a is b:
+                continue
+            a0, a1 = a["ts"], a["ts"] + a["dur"]
+            b0, b1 = b["ts"], b["ts"] + b["dur"]
+            overlap = max(a0, b0) < min(a1, b1)
+            nested = (a0 <= b0 and b1 <= a1) or (b0 <= a0 and a1 <= b1)
+            assert not overlap or nested, (a["name"], b["name"])
+
+
+def test_validate_spans_flags_violations():
+    ok = [{"name": "a", "ph": "X", "ts": 0.0, "dur": 10.0, "args": {}},
+          {"name": "b", "ph": "X", "ts": 2.0, "dur": 3.0, "args": {}}]
+    assert validate_spans(ok) is None
+    crossing = ok + [{"name": "c", "ph": "X", "ts": 4.0, "dur": 10.0,
+                      "args": {}}]
+    assert validate_spans(crossing) is not None
+    negative = [{"name": "a", "ph": "X", "ts": 0.0, "dur": -1.0,
+                 "args": {}}]
+    assert validate_spans(negative) is not None
+
+
+def test_recorder_span_stack_discipline():
+    rec = Recorder()
+    with rec.span("outer", k=1):
+        rec.instant("tick")
+        with rec.span("inner"):
+            pass
+    ev = rec.to_json_events()
+    assert [e["name"] for e in ev] == ["outer", "tick", "inner"]
+    assert validate_spans(ev) is None
+    doc = chrome_trace(ev)
+    assert {e["name"] for e in doc["traceEvents"]} == \
+        {"outer", "tick", "inner"}
+
+
+# ---------------------------------------------------------------------------
+# counters survive chunking and checkpoint/resume bit-exactly
+# ---------------------------------------------------------------------------
+
+def test_counters_bit_exact_through_chunking_and_resume(tmp_path, mesh,
+                                                        rng):
+    eng, data, y = _lasso_engine(rng, mesh)
+    spec = TelemetrySpec(kind="counters")
+
+    full = eng.execute(eng.init_state(jax.random.key(0), y=y), data,
+                       jax.random.key(1), _plan("scan", 8, spec))
+
+    plan = ExecutionPlan(executor="scan", rounds=8, telemetry=spec,
+                         checkpoint_every=4)
+    chunked = eng.execute(eng.init_state(jax.random.key(0), y=y), data,
+                          jax.random.key(1), plan,
+                          ckpt_dir=str(tmp_path))
+    _bit_identical(full.state, chunked.state)
+    assert chunked.telemetry.counters == full.telemetry.counters
+
+    # EngineCarry.obs rides the npz payload: restore the mid checkpoint
+    # and resume — the final counters must match the uninterrupted run
+    template = {"state": jax.tree.map(jnp.copy, chunked.state),
+                "carry": chunked.carry}
+    restored = restore_checkpoint(str(tmp_path), 4, template)
+    mid = restored["carry"]
+    assert mid.obs is not None
+    assert int(np.asarray(mid.obs["rounds"]).sum()) == 4
+    resumed = eng.execute(restored["state"], data, jax.random.key(99),
+                          plan, carry=mid,
+                          ckpt_dir=str(tmp_path / "resumed"))
+    _bit_identical(full.state, resumed.state)
+    assert resumed.telemetry.counters == full.telemetry.counters
+
+
+def test_ssp_counters_bit_exact_through_chunking(tmp_path, mesh, rng):
+    eng, data, y = _lasso_engine(rng, mesh)
+    spec = TelemetrySpec(kind="counters")
+    full = eng.execute(eng.init_state(jax.random.key(0), y=y), data,
+                       jax.random.key(1), _plan("ssp", 8, spec))
+    plan = ExecutionPlan(executor="ssp", rounds=8, staleness=1,
+                         telemetry=spec, checkpoint_every=4)
+    chunked = eng.execute(eng.init_state(jax.random.key(0), y=y), data,
+                          jax.random.key(1), plan,
+                          ckpt_dir=str(tmp_path))
+    _bit_identical(full.state, chunked.state)
+    assert chunked.telemetry.counters == full.telemetry.counters
+    # the per-chunk SSP staleness summaries merge into one section
+    assert chunked.telemetry.ssp is not None
+    assert (np.asarray(chunked.telemetry.ssp.hist)
+            == np.asarray(full.telemetry.ssp.hist)).all()
+    assert chunked.telemetry.ssp.flushes == full.telemetry.ssp.flushes
+
+
+# ---------------------------------------------------------------------------
+# the plan surface: spec field, bool shim, JSON round-trip
+# ---------------------------------------------------------------------------
+
+def test_plan_bool_true_shims_to_counters_spec_with_warning():
+    with pytest.warns(DeprecationWarning, match="TelemetrySpec"):
+        plan = ExecutionPlan(executor="ssp", rounds=4, staleness=1,
+                             telemetry=True)
+    assert plan.telemetry == TelemetrySpec(kind="counters")
+
+
+def test_plan_bool_false_stays_falsy():
+    plan = ExecutionPlan(executor="scan", rounds=4, telemetry=False)
+    assert plan.telemetry is False
+    assert (plan.telemetry or None) is None
+
+
+def test_plan_rejects_non_spec_telemetry():
+    with pytest.raises(ValueError, match="telemetry"):
+        ExecutionPlan(executor="scan", rounds=4, telemetry="counters")
+
+
+def test_plan_json_roundtrips_spec():
+    plan = ExecutionPlan(executor="ssp", rounds=8, staleness=1,
+                         telemetry=TelemetrySpec(kind="trace",
+                                                 profiler=True))
+    back = ExecutionPlan.from_json(json.loads(json.dumps(plan.to_json())))
+    assert back == plan
+    assert back.telemetry == TelemetrySpec(kind="trace", profiler=True)
+    # and the legacy serialized-bool shape still parses
+    off = ExecutionPlan.from_json(
+        ExecutionPlan(executor="scan", rounds=4).to_json())
+    assert off.telemetry is False
+
+
+def test_non_ssp_executor_accepts_telemetry(mesh, rng):
+    """PR-2 behavior (`telemetry=True` + scan raises) is gone: every
+    executor takes a spec now."""
+    eng, data, y = _lasso_engine(rng, mesh)
+    with pytest.warns(DeprecationWarning):
+        plan = ExecutionPlan(executor="scan", rounds=4, telemetry=True)
+    rep = eng.execute(eng.init_state(jax.random.key(0), y=y), data,
+                      jax.random.key(1), plan)
+    assert rep.telemetry.counters["rounds"] == 4
+
+
+# ---------------------------------------------------------------------------
+# TelemetrySpec validation + serialization
+# ---------------------------------------------------------------------------
+
+def test_spec_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="kind"):
+        TelemetrySpec(kind="metrics")
+
+
+def test_spec_rejects_profiler_for_counters():
+    with pytest.raises(ValueError, match="profiler"):
+        TelemetrySpec(kind="counters", profiler=True)
+
+
+def test_spec_json_roundtrip_and_unknown_keys():
+    s = TelemetrySpec(kind="trace", profiler=True)
+    assert TelemetrySpec.from_json(s.to_json()) == s
+    assert TelemetrySpec.from_json(json.dumps(s.to_json())) == s
+    with pytest.raises(ValueError, match="unknown"):
+        TelemetrySpec.from_json({"kind": "trace", "verbosity": 3})
+    assert TelemetrySpec.default_for("counters") == \
+        TelemetrySpec(kind="counters")
+    assert not TelemetrySpec(kind="counters").events
+    assert TelemetrySpec(kind="trace").events
+
+
+# ---------------------------------------------------------------------------
+# the trace CLI's offline validator
+# ---------------------------------------------------------------------------
+
+def _valid_report_dict():
+    return {"spec": {"kind": "counters", "profiler": False},
+            "executor": "scan", "rounds": 4,
+            "counters": {"rounds": 4, "rounds_per_phase": [4],
+                         "sched_size": 12, "proposed": 24,
+                         "accepted": 12, "killed": 12},
+            "events": [], "ssp": None}
+
+
+def test_check_report_catches_broken_identities():
+    assert check_report(report_from_json(_valid_report_dict())) is None
+
+    unbalanced = _valid_report_dict()
+    unbalanced["counters"]["killed"] = 13
+    assert "ledger" in check_report(report_from_json(unbalanced))
+
+    phases = _valid_report_dict()
+    phases["counters"]["rounds_per_phase"] = [3]
+    assert "phase" in check_report(report_from_json(phases))
+
+    negative = _valid_report_dict()
+    negative["counters"]["sched_size"] = -1
+    assert "negative" in check_report(report_from_json(negative))
+
+    crossing = _valid_report_dict()
+    crossing["spec"] = {"kind": "trace", "profiler": False}
+    crossing["events"] = [
+        {"name": "a", "ph": "X", "ts": 0.0, "dur": 10.0, "args": {}},
+        {"name": "b", "ph": "X", "ts": 5.0, "dur": 10.0, "args": {}}]
+    assert check_report(report_from_json(crossing)) is not None
+
+
+def test_extract_report_dicts_walks_nested_artifacts():
+    rep = _valid_report_dict()
+    artifact = {"engine": "lasso", "run_report": rep,
+                "ssp": {"2": {"telemetry": rep}},
+                "rows": [{"telemetry": rep}]}
+    found = extract_report_dicts(artifact)
+    assert len(found) == 3
+    assert extract_report_dicts({"no": "reports"}) == []
+    # a bare to_json() dump is itself the report
+    assert extract_report_dicts(rep) == [rep]

@@ -79,7 +79,7 @@ def test_plan_rejects_unknown_executor_with_canonical_message():
     dict(executor="scan", rounds=1, staleness=-1),
     dict(executor="loop", rounds=4, phase_unroll=2),
     dict(executor="ssp", rounds=4, phase_unroll=2),
-    dict(executor="scan", rounds=4, telemetry=True),
+    dict(executor="scan", rounds=4, telemetry="counters"),  # not a spec
     dict(executor="scan", rounds=4, workers=0),
     dict(executor="scan", rounds=4, collect_every=-1),
 ])

@@ -127,10 +127,16 @@ def test_read_staleness_never_exceeds_bound(staleness, steps, scheduler):
     data = eng.shard_data({"X": jnp.asarray(X), "y": jnp.asarray(y)})
     state = eng.init_state(jax.random.key(0), y=y)
     R = (staleness + 1) * steps
-    # invoked through the unified plan surface (ISSUE 3 acceptance)
+    # invoked through the unified plan surface (ISSUE 3 acceptance);
+    # .telemetry is a uniform RunReport now, with the staleness story
+    # in its .ssp section (ISSUE 7)
+    from repro.obs import RunReport, TelemetrySpec
     plan = ExecutionPlan(executor="ssp", rounds=R, staleness=staleness,
-                         telemetry=True)
-    telem = eng.execute(state, data, jax.random.key(1), plan).telemetry
+                         telemetry=TelemetrySpec(kind="counters"))
+    report = eng.execute(state, data, jax.random.key(1), plan).telemetry
+    assert isinstance(report, RunReport)
+    assert report.counters["rounds"] == R
+    telem = report.ssp
     assert telem.max_staleness <= staleness
     assert telem.hist.sum() == R == telem.rounds
     # each window serves exactly one read at every staleness 0..s
