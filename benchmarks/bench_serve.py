@@ -1,0 +1,171 @@
+"""Serving benchmark: serve-only vs serve-while-train on 4-worker SSP.
+
+For the lasso and LDA workloads on a 4-worker SSP plan, run the
+:mod:`repro.serve` read path two ways:
+
+* **serve-while-train** — :func:`repro.serve.serve_while_training`
+  interleaves ``execute()`` chunks (one SSP flush window each) with
+  serving reads at the flush boundaries; requests arrive spread over the
+  training rounds.  The serving staleness bound is set *above* the
+  window length, so the ModelView skips cache refreshes while the SSP
+  gate holds and the staleness-at-read histogram actually exercises the
+  bound (reads at 0 and at one-window staleness), not just the fresh
+  case.
+* **serve-only** — the same requests served from the final trained
+  state (the no-interleaving baseline for latency).
+
+Each arm reports p50/p99 request latency, throughput, and the measured
+staleness-at-read histogram; the serve-while-train arm additionally
+asserts the acceptance bar in-process — final trained state
+bit-identical to an unserved ``execute()`` of the same plan, every read
+≤ ``ServeSpec.max_staleness`` — and records the verdicts.  The BENCH
+json embeds the exact ServeSpec and ExecutionPlan dicts, so the
+cross-PR trajectory records exactly what was measured; a Chrome trace
+of the interleaved run is written to ``benchmarks/results/serve/`` for
+the CI artifact upload.
+
+Writes ``benchmarks/results/BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import RESULTS, run_sub, save
+
+SERVE_DIR = os.path.join(RESULTS, "serve")
+
+_CODE = """
+import json, time
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core import ExecutionPlan, worker_mesh
+from repro.obs import Recorder
+from repro.serve import ServeSpec, serve_only, serve_while_training
+
+APP = {app!r}
+U, R, S, BOUND, NREQ = 4, {rounds}, {staleness}, {bound}, {requests}
+rng = np.random.default_rng(0)
+mesh = worker_mesh(U)
+
+if APP == "lasso":
+    from repro.apps import lasso
+    n, J = {rows}, {feats}
+    X, y, _ = lasso.synthetic_correlated(rng, n=n, J=J, k_true=10)
+    cfg = lasso.LassoConfig(num_features=J, lam=0.02, block_size=8,
+                            num_candidates=32)
+    eng = lasso.make_engine(cfg, mesh)
+    data = eng.shard_data({{"X": jnp.asarray(X), "y": jnp.asarray(y)}})
+    init = lambda: eng.init_state(jax.random.key(0), y=y)
+    payload = lambda i: {{"x": jnp.asarray(X[i % n])}}
+else:
+    from repro.apps import lda
+    cfg = lda.LDAConfig(vocab=U * 32, num_topics=8, num_workers=U,
+                        tokens_per_worker={tokens}, docs_per_worker=8)
+    words, docs, z0 = lda.synthetic_corpus(rng, cfg, true_topics=4)
+    eng = lda.make_engine(cfg, mesh)
+    data = eng.shard_data({{"words": jnp.asarray(words),
+                            "docs": jnp.asarray(docs)}})
+    init = lambda: eng.init_state(jax.random.key(0), words=words,
+                                  docs=docs, z0=z0)
+    docs_q = rng.integers(0, cfg.vocab, size=(NREQ, 16)).astype(np.int32)
+    payload = lambda i: {{"words": jnp.asarray(docs_q[i % NREQ])}}
+
+plan = ExecutionPlan(executor="ssp", rounds=R, staleness=S, workers=U)
+spec = ServeSpec(kind="stale", max_staleness=BOUND, max_batch=8)
+reqs = [((i * R) // NREQ, payload(i)) for i in range(NREQ)]
+
+def arm_stats(srep, wall):
+    pct = srep.latency_percentiles()
+    return {{"p50_ms": pct["p50_ms"], "p99_ms": pct["p99_ms"],
+             "throughput_rps": len(srep.responses) / max(wall, 1e-9),
+             "requests": len(srep.responses),
+             "staleness_hist": {{str(k): v for k, v in
+                                 sorted(srep.staleness_hist().items())}},
+             "max_staleness_read": srep.max_staleness_read()}}
+
+# warm the compiled round programs so the timed arms measure serving,
+# not XLA compiles
+jax.block_until_ready(
+    eng.execute(init(), data, jax.random.key(1), plan).state)
+
+rec = Recorder()
+t0 = time.time()
+swt = serve_while_training(eng, init(), data, jax.random.key(1), plan,
+                           spec=spec, requests=list(reqs), recorder=rec)
+jax.block_until_ready(swt.report.state)
+swt_wall = time.time() - t0
+rec.write_chrome_trace({trace_path!r})
+
+# acceptance: serving never perturbed training (bit-exact), bound held
+ref = eng.execute(init(), data, jax.random.key(1), plan)
+bit_identical = all(
+    bool(jnp.array_equal(a, b)) for a, b in zip(
+        jax.tree.leaves(swt.report.state), jax.tree.leaves(ref.state)))
+bound_held = swt.max_staleness_read() <= spec.max_staleness
+
+trained = ref.state
+t0 = time.time()
+so = serve_only(eng, trained, spec=spec,
+                requests=[p for _, p in reqs], t=R)
+so_wall = time.time() - t0
+
+out = {{"plan": plan.to_json(), "serve_spec": spec.to_json(),
+        "bit_identical": bit_identical, "bound_held": bound_held,
+        "train_plus_serve_s": swt_wall,
+        "serve_while_train": arm_stats(swt, swt_wall),
+        "serve_only": arm_stats(so, so_wall)}}
+assert bit_identical, "serving perturbed training state"
+assert bound_held, "staleness-at-read exceeded the spec bound"
+print("PAYLOAD:" + json.dumps(out))
+"""
+
+
+def run(quick: bool = True):
+    os.makedirs(SERVE_DIR, exist_ok=True)
+    nreq = 64 if quick else 256
+    workloads = {
+        # lasso: window L = s+1 = 3; bound 5 lets the cache serve one
+        # whole extra window before the gate forces a refresh, so the
+        # histogram shows reads at staleness 0 AND 3
+        "lasso": dict(app="lasso", rounds=24 if quick else 120,
+                      staleness=2, bound=5, requests=nreq,
+                      rows=256 if quick else 1024,
+                      feats=256 if quick else 1024, tokens=0),
+        # lda: rotation period 4 makes the window L = lcm(2, 4) = 4;
+        # bound 4 keeps the cache exactly one window before refreshing
+        "lda": dict(app="lda", rounds=16 if quick else 64,
+                    staleness=1, bound=4, requests=nreq,
+                    rows=0, feats=0, tokens=64 if quick else 256),
+    }
+    out = {"workers": 4, "workloads": {}}
+    for name, kw in workloads.items():
+        trace_path = os.path.join(SERVE_DIR, f"serve_{name}.trace.json")
+        stdout = run_sub(_CODE.format(trace_path=trace_path, **kw),
+                         devices=4, timeout=560)
+        payload = json.loads(
+            stdout.strip().splitlines()[-1][len("PAYLOAD:"):])
+        out["workloads"][name] = payload
+    save("BENCH_serve", out)
+    return out
+
+
+def rows(out):
+    for name, p in out["workloads"].items():
+        for arm in ("serve_while_train", "serve_only"):
+            a = p[arm]
+            yield (f"serve/{name}/{arm}_p50_ms", a["p50_ms"] * 1e3,
+                   round(a["p99_ms"], 2))
+            yield (f"serve/{name}/{arm}_rps", 0.0,
+                   round(a["throughput_rps"], 1))
+        yield (f"serve/{name}/max_staleness_read", 0.0,
+               p["serve_while_train"]["max_staleness_read"])
+        yield (f"serve/{name}/bit_identical", 0.0,
+               int(p["bit_identical"]))
+
+
+def summary(out):
+    for name, p in out["workloads"].items():
+        yield (f"# serve/{name} spec={json.dumps(p['serve_spec'])} "
+               f"plan={json.dumps(p['plan'])} "
+               f"hist={json.dumps(p['serve_while_train']['staleness_hist'])}")

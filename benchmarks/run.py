@@ -14,7 +14,7 @@ import traceback
 
 from . import (bench_kernels, bench_lasso, bench_lda, bench_memory,
                bench_mf, bench_obs, bench_part, bench_pipeline,
-               bench_scaling, bench_sched, bench_ssp)
+               bench_scaling, bench_sched, bench_serve, bench_ssp)
 
 BENCHES = {
     "lasso": bench_lasso,       # Fig 8/9 right
@@ -28,6 +28,7 @@ BENCHES = {
     "part": bench_part,         # partition-policy static vs load_balanced
     "kernels": bench_kernels,   # kernel backend reference vs pallas
     "obs": bench_obs,           # telemetry overhead off/counters/trace
+    "serve": bench_serve,       # serve-only vs serve-while-train (repro.serve)
 }
 
 

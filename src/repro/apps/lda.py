@@ -203,6 +203,41 @@ class StradsLDA(StradsAppBase):
     # LightLDA-style staleness-tolerant server, where s̃ is exactly the
     # stale quantity the paper's Fig-5 error bound is about.
 
+    # -- serving (query primitive) -------------------------------------------
+
+    #: fixed fold-in iterations for query() (static, so one jitted
+    #: program serves every batch)
+    query_iters: int = 8
+
+    def query(self, state, batch):
+        """``infer_topics``: fold a batch of unseen documents into the
+        trained topics (batch ``{"words": (B, L)}``, -1-padded, →
+        ``{"theta": (B, K), "top_topic": (B,)}``).
+
+        A fixed-iteration mean-field fold-in (the deterministic twin of
+        fold-in Gibbs): φ_lk ∝ (γ+B[v_l,k]) / (Vγ+s[k]) holds the topics
+        fixed and θ is re-estimated ``query_iters`` times.  B is
+        worker-resident (read live at the boundary); s is the
+        server-resident leaf — so the only stale ingredient under
+        ``kind="stale"`` is s̃, exactly the quantity the paper's Fig-5
+        error bound is about."""
+        cfg = self.cfg
+        words = batch["words"]                              # (B, L)
+        v = jnp.clip(words, 0, cfg.padded_vocab - 1)
+        active = (words >= 0)[..., None]                    # (B, L, 1)
+        phi = ((cfg.gamma + state["B"][v]) /
+               (cfg.padded_vocab * cfg.gamma + state["s"]))  # (B, L, K)
+        phi = jnp.where(active, phi, 1.0)
+        theta = jnp.full(words.shape[:1] + (cfg.num_topics,),
+                         1.0 / cfg.num_topics, jnp.float32)
+        for _ in range(self.query_iters):
+            q = phi * theta[:, None, :]
+            q = q / jnp.maximum(jnp.sum(q, -1, keepdims=True), 1e-30)
+            q = jnp.where(active, q, 0.0)
+            theta = cfg.alpha + jnp.sum(q, axis=1)
+            theta = theta / jnp.sum(theta, -1, keepdims=True)
+        return {"theta": theta, "top_topic": jnp.argmax(theta, axis=-1)}
+
     # -- diagnostics ------------------------------------------------------------
 
     def loglik_fn(self, mesh):

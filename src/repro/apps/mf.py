@@ -50,6 +50,7 @@ class MFConfig:
     rank: int                    # K
     lam: float = 0.05
     ranks_per_round: int = 1     # how many rank indices per BSP round
+    top_k: int = 8               # recommendations per query() request
 
 
 class StradsMF(StradsAppBase):
@@ -175,6 +176,21 @@ class StradsMF(StradsAppBase):
             W = W.at[:, ks].set(Wk_new)
             R = R - ((Wk_new - Wk_old) @ Hk) * mask               # sync
             return {"W": W, "H": H, "R": R}
+
+    # -- serving (query primitive) -------------------------------------------
+
+    def query(self, state, batch):
+        """``recommend``: top-k item scores for each requested user row
+        (batch ``{"user": (B,)}`` → ``{"items": (B, k), "scores":
+        (B, k)}``).  Scores are w_uᵀh_j over all items; W is
+        worker-resident (served live at the boundary), H is the
+        server-resident leaf (the possibly-stale half under
+        ``kind="stale"`` — the same split an SSP training read sees)."""
+        k = min(self.cfg.top_k, self.cfg.num_cols)
+        Wu = jnp.take(state["W"], batch["user"], axis=0)   # (B, K)
+        scores = Wu @ state["H"]                           # (B, M)
+        top_scores, top_items = jax.lax.top_k(scores, k)
+        return {"items": top_items, "scores": top_scores}
 
     def objective_fn(self, mesh):
         cfg = self.cfg

@@ -173,6 +173,38 @@ computes.
   ``.ssp`` section); ``repro.launch.trace`` validates and re-exports
   saved reports offline.
 
+The serving-injection contract
+------------------------------
+
+Serving (:mod:`repro.serve`) is the read-only fifth leg of the same
+declarative surface: a :class:`~repro.serve.spec.ServeSpec` declares the
+consistency a read gets (``"stale"`` — the SSP mixed view, server-
+resident leaves through a :class:`~repro.ps.cache.StaleCache` under the
+gate ``clock − cache.clock ≤ max_staleness``; ``"snapshot"`` — the full
+state pinned at flush/chunk boundaries) and the micro-batching policy
+(``max_batch``, ``batch_window_ms``).  Apps opt in with **one**
+primitive, declared alongside ``state_specs()``/``var_roles()``:
+
+* ``query(state, batch) -> result`` — one *batched* inference request
+  against a (possibly stale) state view: ``batch`` is a pytree whose
+  leaves carry a leading request dimension (the frontend stacks queued
+  per-example payloads), and the result's leaves carry the same leading
+  dimension (the frontend slices per-request responses back out).
+  Lasso serves ``predict`` (ŷ = Xβ), LDA serves ``infer_topics`` (a
+  fixed-iteration fold-in over the topic tables), MF serves
+  ``recommend`` (top-k item scores for a user row).
+* ``query`` must be **pure and deterministic** — jit-traceable, no PRNG
+  stream of its own, and it never writes: the serving subsystem reads
+  through copies/boundary references only, which is what makes
+  ``serve_while_training`` bit-identical to an unserved ``execute()``.
+* unlike the other four contracts nothing is injected *into* the app:
+  the engine side of the contract is the publish boundary —
+  ``serve_while_training`` publishes committed state to the
+  :class:`~repro.serve.view.ModelView` at the same host-synced chunk
+  boundaries the partitioner and checkpointer already use, and the
+  frontend's jitted query programs are cached per (Assignment,
+  KernelSpec) exactly like the engine's round programs.
+
 The v2 write contract (VarTable-mediated push/pull)
 ---------------------------------------------------
 
@@ -365,6 +397,17 @@ class StradsAppBase:
         """Per-variable byte sizes for the ``size_balanced`` kind
         (``None`` = uniform)."""
         return None
+
+    def query(self, state, batch):
+        """One batched inference request against a (possibly stale)
+        state view — the serving-injection contract (see the module
+        docstring).  ``batch`` leaves carry a leading request dimension;
+        so must the result's.  Default: the app declares no query
+        primitive and cannot be served."""
+        raise NotImplementedError(
+            f"{type(self).__name__} declares no query() primitive — "
+            f"serving (repro.serve) needs one; see the serving-injection "
+            f"contract in repro.core.primitives")
 
     def var_roles(self) -> dict:
         """Leaf-path → :class:`~repro.core.kvstore.VarSpec` role

@@ -1,82 +1,212 @@
-"""Batched serving driver: prefill a batch of prompts, decode N tokens.
+"""STRADS serving CLI: bounded-staleness reads while training continues.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
-        --preset reduced --batch 4 --prompt-len 64 --gen 32
+    PYTHONPATH=src python -m repro.launch.serve --engine lasso \
+        --plan examples/plans/ssp_s2.json --requests 64
 
-Exercises the production decode path (ring-buffer KV cache / recurrent
-states, jit-scanned generation loop) at CPU-friendly scale; the dry-run
-lowers the same ``decode_step`` at the assigned 32k/500k shapes.
+Builds a laptop-scale synthetic workload for one of the three paper
+apps, runs :func:`repro.serve.serve_while_training` (or, with
+``--serve-only``, serves a trained snapshot with no interleaved
+training), and reports p50/p99 request latency, throughput, and the
+*measured* staleness-at-read histogram — every read is checked against
+``ServeSpec.max_staleness``, and the exit is nonzero if the bound was
+violated.  ``--trace`` exports a Chrome trace showing serve batches
+interleaved with training chunks; ``--out`` writes the full JSON
+artifact (spec/plan dicts embedded).
+
+The model-zoo LM decode driver that used to live at this path is now
+``python -m repro.launch.serve_lm``.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import json
+import math
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
-from ..configs import ARCHS, get_config
-from ..data import SyntheticLMConfig, make_batch
-from ..models import model as M
-from ..train.serve import greedy_generate
-from .mesh import make_test_mesh
+ENGINES = ("lasso", "lda", "mf")
+
+
+def _build(engine: str, workers: int, mesh, seed: int):
+    """(eng, state, data, request payloads generator) at serving-smoke
+    scale for one of the three paper apps."""
+    rng = np.random.default_rng(seed)
+    if engine == "lasso":
+        from ..apps import lasso
+        n, J = workers * 32, 128
+        X, y, _ = lasso.synthetic_correlated(rng, n=n, J=J, k_true=8)
+        cfg = lasso.LassoConfig(num_features=J, lam=0.02, block_size=8,
+                                num_candidates=32)
+        eng = lasso.make_engine(cfg, mesh)
+        data = eng.shard_data({"X": jnp.asarray(X), "y": jnp.asarray(y)})
+        state = eng.init_state(jax.random.key(seed), y=y)
+
+        def payload(i):
+            return {"x": jnp.asarray(X[i % n])}
+    elif engine == "lda":
+        from ..apps import lda
+        cfg = lda.LDAConfig(vocab=workers * 32, num_topics=8,
+                            num_workers=workers, tokens_per_worker=64,
+                            docs_per_worker=8)
+        words, docs, z0 = lda.synthetic_corpus(rng, cfg, true_topics=4)
+        eng = lda.make_engine(cfg, mesh)
+        data = eng.shard_data({"words": jnp.asarray(words),
+                               "docs": jnp.asarray(docs)})
+        state = eng.init_state(jax.random.key(seed), words=words,
+                               docs=docs, z0=z0)
+        docs_q = rng.integers(0, cfg.vocab, size=(256, 16)).astype(np.int32)
+
+        def payload(i):
+            return {"words": jnp.asarray(docs_q[i % len(docs_q)])}
+    elif engine == "mf":
+        from ..apps import mf
+        N, M = workers * 16, 64
+        A, mask = mf.synthetic_ratings(rng, N, M, true_rank=4)
+        cfg = mf.MFConfig(num_rows=N, num_cols=M, rank=8)
+        eng = mf.make_engine(cfg, mesh)
+        data = eng.shard_data({"A": jnp.asarray(A),
+                               "mask": jnp.asarray(mask)})
+        state = eng.init_state(jax.random.key(seed), A=jnp.asarray(A),
+                               mask=jnp.asarray(mask))
+
+        def payload(i):
+            return {"user": jnp.int32(i % N)}
+    else:
+        raise SystemExit(f"unknown engine {engine!r}")
+    return eng, state, data, payload
+
+
+def _phase_period(engine: str, workers: int) -> int:
+    return workers if engine == "lda" else {"lasso": 1, "mf": 2}[engine]
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCHS, default="granite-3-2b")
-    ap.add_argument("--preset", choices=("reduced", "full"),
-                    default="reduced")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--window", type=int, default=0,
-                    help="sliding-window decode (ring-buffer cache)")
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap = argparse.ArgumentParser(
+        description="serve model state out of the STRADS SSP caches")
+    ap.add_argument("--engine", choices=ENGINES, required=True)
+    ap.add_argument("--plan", default="",
+                    help="ExecutionPlan JSON file (conflicts with "
+                         "--rounds/--staleness/--workers)")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--staleness", type=int, default=None)
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--serve-kind", choices=("stale", "snapshot"),
+                    default="stale")
+    ap.add_argument("--max-staleness", type=int, default=None,
+                    help="serving staleness bound in rounds (stale kind "
+                         "only; default: the plan's SSP staleness)")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--batch-window-ms", type=float, default=0.0)
+    ap.add_argument("--serve-only", action="store_true",
+                    help="train first, then serve the final state "
+                         "(no interleaving)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome trace of the interleaved run")
+    ap.add_argument("--out", default="",
+                    help="write the JSON artifact (spec/plan embedded)")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.preset == "reduced":
-        cfg = cfg.reduced()
-    if cfg.encoder_only:
-        raise SystemExit(f"{cfg.name} is encoder-only: no decode serving")
+    from ..core import ExecutionPlan, worker_mesh
+    from ..obs import Recorder
+    from ..serve import ServeSpec, serve_only, serve_while_training
 
-    mesh = make_test_mesh()
-    rng = jax.random.PRNGKey(args.seed)
-    prm = M.init_params(cfg, rng)
+    if args.plan:
+        for flag, name in ((args.rounds, "--rounds"),
+                           (args.staleness, "--staleness"),
+                           (args.workers, "--workers")):
+            if flag is not None:
+                raise SystemExit(f"{name} conflicts with --plan (the "
+                                 f"plan file already declares it)")
+        with open(args.plan) as f:
+            plan = ExecutionPlan.from_json(f.read())
+        workers = plan.workers or jax.device_count()
+    else:
+        workers = args.workers or jax.device_count()
+        staleness = 1 if args.staleness is None else args.staleness
+        rounds = 12 if args.rounds is None else args.rounds
+        # whole SSP windows: round up to lcm(s+1, phase_period) steps
+        L = math.lcm(staleness + 1, _phase_period(args.engine, workers))
+        aligned = -(-rounds // L) * L
+        if aligned != rounds:
+            print(f"[align] rounds {rounds} -> {aligned} "
+                  f"(whole SSP windows of {L})")
+        plan = ExecutionPlan(executor="ssp", rounds=aligned,
+                             staleness=staleness, workers=workers)
 
-    dcfg = SyntheticLMConfig(vocab_size=cfg.vocab_size,
-                             seq_len=args.prompt_len,
-                             batch_size=args.batch, seed=args.seed)
-    dkw = {}
-    if cfg.frontend == "vision":
-        dkw = {"frontend_tokens": cfg.frontend_tokens,
-               "d_model": cfg.d_model}
-    batch = make_batch(dcfg, 0, **dkw)
-    batch.pop("labels")
+    if plan.workers is not None and plan.workers != workers:
+        raise SystemExit(f"plan.workers={plan.workers} but "
+                         f"{workers} requested")
+    if workers > jax.device_count():
+        raise SystemExit(
+            f"{workers} workers want {workers} devices but only "
+            f"{jax.device_count()} are visible (force more with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    mesh = worker_mesh(workers)
 
-    window = args.window or None
-    n_front = cfg.frontend_tokens if cfg.frontend == "vision" else 0
-    cache_len = (min(window, args.prompt_len + args.gen + n_front)
-                 if window else args.prompt_len + args.gen + n_front)
+    kw = dict(max_batch=args.max_batch,
+              batch_window_ms=args.batch_window_ms)
+    if args.serve_kind == "stale":
+        kw["max_staleness"] = (args.max_staleness
+                               if args.max_staleness is not None
+                               else (plan.staleness
+                                     if plan.executor == "ssp" else 0))
+    elif args.max_staleness is not None:
+        raise SystemExit("--max-staleness applies to --serve-kind stale "
+                         "only (snapshot pins at boundaries)")
+    spec = ServeSpec.default_for(args.serve_kind, **kw)
 
-    gen = jax.jit(lambda p, b, k: greedy_generate(
-        cfg, p, b, steps=args.gen, cache_len=cache_len, window=window,
-        rng=k, temperature=args.temperature))
-    t0 = time.time()
-    toks = gen(prm, batch, rng)
-    toks.block_until_ready()
-    wall = time.time() - t0
-    t0 = time.time()
-    toks = gen(prm, batch, rng)
-    toks.block_until_ready()
-    hot = time.time() - t0
-    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
-          f"gen={args.gen} cache={cache_len} window={window}")
-    print(f"compile+run {wall:.2f}s, hot run {hot:.2f}s "
-          f"({args.batch * args.gen / max(hot, 1e-9):.1f} tok/s)")
-    print("sample tokens:", toks[0, :16].tolist())
-    return toks
+    eng, state, data, payload = _build(args.engine, workers, mesh,
+                                       args.seed)
+    rec = Recorder()
+    rng = jax.random.key(args.seed + 1)
+
+    if args.serve_only:
+        rep0 = eng.execute(state, data, rng, plan)
+        srep = serve_only(eng, rep0.state, spec=spec,
+                          requests=[payload(i)
+                                    for i in range(args.requests)],
+                          t=plan.rounds, recorder=rec)
+    else:
+        reqs = [((i * plan.rounds) // max(args.requests, 1), payload(i))
+                for i in range(args.requests)]
+        srep = serve_while_training(eng, state, data, rng, plan,
+                                    spec=spec, requests=reqs,
+                                    recorder=rec)
+
+    pct = srep.latency_percentiles()
+    hist = srep.staleness_hist()
+    worst = srep.max_staleness_read()
+    print(f"engine={args.engine} workers={workers} "
+          f"executor={plan.executor} rounds={plan.rounds} "
+          f"requests={len(srep.responses)}")
+    print(f"serve spec: {spec.to_json()}")
+    print(f"latency p50={pct['p50_ms']:.2f}ms p99={pct['p99_ms']:.2f}ms")
+    print(f"staleness-at-read hist: "
+          f"{ {k: hist[k] for k in sorted(hist)} } (max {worst})")
+    if args.trace:
+        rec.write_chrome_trace(args.trace)
+        print(f"wrote {args.trace}")
+    if args.out:
+        artifact = {
+            "engine": args.engine, "workers": workers,
+            "requests": len(srep.responses),
+            "serve_spec": spec.to_json(), "plan": plan.to_json(),
+            "latency": pct,
+            "staleness_hist": {str(k): v for k, v in hist.items()},
+            "max_staleness_read": worst,
+            "reads": srep.reads,
+        }
+        with open(args.out, "w") as f:
+            json.dump(artifact, f, indent=1)
+        print(f"wrote {args.out}")
+    if spec.kind == "stale" and worst > spec.max_staleness:
+        raise SystemExit(f"staleness bound violated: read at {worst} > "
+                         f"max_staleness {spec.max_staleness}")
+    return srep
 
 
 if __name__ == "__main__":

@@ -1,0 +1,87 @@
+"""Model-zoo LM decode driver: prefill a batch of prompts, decode N tokens.
+
+    PYTHONPATH=src python -m repro.launch.serve_lm --arch granite-3-2b \
+        --preset reduced --batch 4 --prompt-len 64 --gen 32
+
+This drives the dormant transformer model zoo (``repro.models`` /
+``repro.train.serve``) — ring-buffer KV cache / recurrent states, a
+jit-scanned greedy/temperature generation loop — at CPU-friendly scale.
+It is **not** the STRADS serving path: serving model state out of the
+STRADS engine's SSP caches (bounded-staleness reads, request batching,
+serve-while-train) lives in :mod:`repro.serve` behind
+``python -m repro.launch.serve``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from ..configs import ARCHS, get_config
+from ..data import SyntheticLMConfig, make_batch
+from ..models import model as M
+from ..train.serve import greedy_generate
+from .mesh import make_test_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="granite-3-2b")
+    ap.add_argument("--preset", choices=("reduced", "full"),
+                    default="reduced")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--window", type=int, default=0,
+                    help="sliding-window decode (ring-buffer cache)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.preset == "reduced":
+        cfg = cfg.reduced()
+    if cfg.encoder_only:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode serving")
+
+    mesh = make_test_mesh()
+    rng = jax.random.PRNGKey(args.seed)
+    prm = M.init_params(cfg, rng)
+
+    dcfg = SyntheticLMConfig(vocab_size=cfg.vocab_size,
+                             seq_len=args.prompt_len,
+                             batch_size=args.batch, seed=args.seed)
+    dkw = {}
+    if cfg.frontend == "vision":
+        dkw = {"frontend_tokens": cfg.frontend_tokens,
+               "d_model": cfg.d_model}
+    batch = make_batch(dcfg, 0, **dkw)
+    batch.pop("labels")
+
+    window = args.window or None
+    n_front = cfg.frontend_tokens if cfg.frontend == "vision" else 0
+    cache_len = (min(window, args.prompt_len + args.gen + n_front)
+                 if window else args.prompt_len + args.gen + n_front)
+
+    gen = jax.jit(lambda p, b, k: greedy_generate(
+        cfg, p, b, steps=args.gen, cache_len=cache_len, window=window,
+        rng=k, temperature=args.temperature))
+    t0 = time.time()
+    toks = gen(prm, batch, rng)
+    toks.block_until_ready()
+    wall = time.time() - t0
+    t0 = time.time()
+    toks = gen(prm, batch, rng)
+    toks.block_until_ready()
+    hot = time.time() - t0
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"gen={args.gen} cache={cache_len} window={window}")
+    print(f"compile+run {wall:.2f}s, hot run {hot:.2f}s "
+          f"({args.batch * args.gen / max(hot, 1e-9):.1f} tok/s)")
+    print("sample tokens:", toks[0, :16].tolist())
+    return toks
+
+
+if __name__ == "__main__":
+    main()

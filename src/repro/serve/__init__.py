@@ -1,0 +1,39 @@
+"""The online serving subsystem: bounded-staleness reads while training.
+
+The SSP machinery (:mod:`repro.ps`) maintains worker caches whose reads
+are at most ``s`` rounds stale — a serving consistency contract the
+paper states but 2014-STRADS never exposed as a read path.  This package
+exposes it, as the fifth declarative subsystem on the execution surface
+(after :mod:`repro.sched`, :mod:`repro.part`, :mod:`repro.kernels` and
+:mod:`repro.obs`):
+
+* :class:`ServeSpec` (:mod:`repro.serve.spec`) — the frozen, hashable,
+  JSON-round-trippable serving policy (``kind="stale" | "snapshot"``,
+  ``max_staleness``, ``max_batch``, ``batch_window_ms``);
+* :class:`ModelView` (:mod:`repro.serve.view`) — the read path: serves
+  straight from the SSP worker caches / KVStore split
+  (:class:`~repro.ps.server.ParameterServer` +
+  :class:`~repro.ps.cache.StaleCache`) with a *measured*
+  staleness-at-read bound;
+* :class:`ServeFrontend` (:mod:`repro.serve.frontend`) — the
+  micro-batching request frontend (queue, batch assembly, jitted
+  per-app ``query()`` programs cached per (Assignment, KernelSpec));
+* :func:`serve_while_training` / :func:`serve_only`
+  (:mod:`repro.serve.loop`) — the continuous-training loop interleaving
+  ``execute()`` chunks with serving reads at SSP flush boundaries,
+  bit-exact for training by construction.
+
+Apps opt in with one primitive: ``query(state, batch)`` (the
+serving-injection contract in :mod:`repro.core.primitives`) — Lasso's
+``predict``, LDA's ``infer_topics`` fold-in, MF's ``recommend`` top-k.
+"""
+from .spec import SERVE_KINDS, ServeSpec
+from .view import ModelView, StaleReadError
+from .frontend import Request, Response, ServeFrontend
+from .loop import ServeReport, serve_only, serve_while_training
+
+__all__ = [
+    "SERVE_KINDS", "ServeSpec", "ModelView", "StaleReadError",
+    "Request", "Response", "ServeFrontend", "ServeReport",
+    "serve_only", "serve_while_training",
+]

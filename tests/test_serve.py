@@ -1,0 +1,441 @@
+"""The online serving subsystem (repro/serve).
+
+Contract under test (ISSUE 8 acceptance):
+  * ``ServeSpec`` — the house spec rules: kind validation, per-kind
+    unused-field rejection, exact JSON round-trip, ``default_for``.
+  * the staleness guarantee: every ``ModelView`` read under
+    ``kind="stale"`` observes state ≤ ``max_staleness`` rounds old,
+    asserted over the *measured* staleness-at-read for random
+    (training staleness, serving bound, request interleaving)
+    configurations (hypothesis property; deterministic stub fallback).
+  * bit-exactness: serving reads never perturb training —
+    ``serve_while_training`` final state ≡ plain ``execute`` of the
+    same plan, leaf by leaf.
+  * the query primitives: lasso ``predict``, MF ``recommend`` top-k,
+    LDA ``infer_topics`` fold-in, checked against numpy oracles.
+  * the micro-batching frontend: ``max_batch`` assembly, the
+    ``batch_window_ms`` partial-batch wait, forced drains.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.apps import lasso, lda, mf
+from repro.core import ExecutionPlan, StradsAppBase, single_device_mesh
+from repro.obs import Recorder
+from repro.serve import (ModelView, ServeFrontend, ServeSpec,
+                         StaleReadError, serve_only,
+                         serve_while_training)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return single_device_mesh()
+
+
+def _bit_identical(a_state, b_state):
+    assert set(a_state) == set(b_state)
+    for k in a_state:
+        a, b = np.asarray(a_state[k]), np.asarray(b_state[k])
+        assert (a == b).all(), (k, np.max(np.abs(a - b)))
+
+
+def _lasso_setup(mesh, seed=0, n=48, J=24):
+    r = np.random.default_rng(seed)
+    X, y, _ = lasso.synthetic_correlated(r, n=n, J=J, k_true=4)
+    cfg = lasso.LassoConfig(num_features=J, lam=0.05, block_size=4,
+                            num_candidates=8, rho=0.5)
+    eng = lasso.make_engine(cfg, mesh)
+    data = eng.shard_data({"X": jnp.asarray(X), "y": jnp.asarray(y)})
+    return eng, data, X, y
+
+
+# ---------------------------------------------------------------------------
+# ServeSpec: the house spec rules
+# ---------------------------------------------------------------------------
+
+def test_spec_rejects_bad_kind():
+    with pytest.raises(ValueError, match="serve kind"):
+        ServeSpec(kind="fresh")
+    with pytest.raises(ValueError, match="serve kind"):
+        ServeSpec.default_for("fresh")
+
+
+def test_spec_rejects_unused_fields_per_kind():
+    # max_staleness is a stale-only knob
+    with pytest.raises(ValueError, match="does not apply"):
+        ServeSpec(kind="snapshot", max_staleness=2)
+    # both kinds consume the batching knobs
+    ServeSpec(kind="snapshot", max_batch=4, batch_window_ms=1.0)
+    ServeSpec(kind="stale", max_staleness=3, max_batch=4,
+              batch_window_ms=1.0)
+
+
+def test_spec_validates_field_types():
+    with pytest.raises(ValueError, match="max_staleness"):
+        ServeSpec(kind="stale", max_staleness=-1)
+    with pytest.raises(ValueError, match="max_staleness"):
+        ServeSpec(kind="stale", max_staleness=True)
+    with pytest.raises(ValueError, match="max_batch"):
+        ServeSpec(kind="stale", max_batch=0)
+    with pytest.raises(ValueError, match="batch_window_ms"):
+        ServeSpec(kind="stale", batch_window_ms=-0.5)
+
+
+def test_spec_json_roundtrip_exact():
+    for s in (ServeSpec(kind="stale", max_staleness=3, max_batch=16,
+                        batch_window_ms=2.5),
+              ServeSpec(kind="snapshot", max_batch=4),
+              ServeSpec.default_for("stale"),
+              ServeSpec.default_for("snapshot")):
+        assert ServeSpec.from_json(s.to_json()) == s
+        import json
+        assert ServeSpec.from_json(json.dumps(s.to_json())) == s
+
+
+def test_spec_from_json_rejects_unknown_keys():
+    with pytest.raises(ValueError, match="unknown ServeSpec field"):
+        ServeSpec.from_json({"kind": "stale", "staleness": 2})
+
+
+def test_spec_default_for_overrides():
+    s = ServeSpec.default_for("stale", max_staleness=7)
+    assert s.max_staleness == 7 and s.max_batch == 8
+
+
+# ---------------------------------------------------------------------------
+# the query primitives, against numpy oracles
+# ---------------------------------------------------------------------------
+
+def test_lasso_query_predict(mesh):
+    eng, data, X, y = _lasso_setup(mesh)
+    state = eng.init_state(jax.random.key(0), y=y)
+    plan = ExecutionPlan(executor="scan", rounds=8)
+    state = eng.execute(state, data, jax.random.key(1), plan).state
+    batch = {"x": jnp.asarray(X[:5])}
+    out = eng.app.query(state, batch)
+    np.testing.assert_allclose(np.asarray(out["y_hat"]),
+                               X[:5] @ np.asarray(state["beta"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_mf_query_recommend_topk(mesh):
+    r = np.random.default_rng(3)
+    A, mask = mf.synthetic_ratings(r, 12, 10, true_rank=2)
+    cfg = mf.MFConfig(num_rows=12, num_cols=10, rank=3, top_k=4)
+    eng = mf.make_engine(cfg, mesh)
+    state = eng.init_state(jax.random.key(0), A=jnp.asarray(A),
+                           mask=jnp.asarray(mask))
+    out = eng.app.query(state, {"user": jnp.asarray([0, 5], jnp.int32)})
+    assert out["items"].shape == (2, 4)
+    scores = np.asarray(state["W"]) @ np.asarray(state["H"])
+    for b, u in enumerate((0, 5)):
+        want = np.argsort(-scores[u])[:4]
+        np.testing.assert_array_equal(np.asarray(out["items"][b]), want)
+        np.testing.assert_allclose(np.asarray(out["scores"][b]),
+                                   scores[u][want], rtol=1e-5)
+
+
+def test_lda_query_infer_topics(mesh):
+    cfg = lda.LDAConfig(vocab=20, num_topics=4, num_workers=1,
+                        tokens_per_worker=120, docs_per_worker=5)
+    r = np.random.default_rng(7)
+    words, docs, z0 = lda.synthetic_corpus(r, cfg, true_topics=4)
+    eng = lda.make_engine(cfg, mesh)
+    state = eng.init_state(jax.random.key(0), words=words, docs=docs,
+                           z0=z0)
+    plan = ExecutionPlan(executor="scan", rounds=4)
+    data = eng.shard_data({"words": jnp.asarray(words),
+                           "docs": jnp.asarray(docs)})
+    state = eng.execute(state, data, jax.random.key(1), plan).state
+    # -1 padding must be inert: padded and unpadded docs infer the same θ
+    doc = np.array([[1, 2, 3, 4, -1, -1]], np.int32)
+    out = eng.app.query(state, {"words": jnp.asarray(doc)})
+    out2 = eng.app.query(state, {"words": jnp.asarray(doc[:, :4])})
+    assert out["theta"].shape == (1, cfg.num_topics)
+    np.testing.assert_allclose(np.asarray(out["theta"]).sum(-1), 1.0,
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out["theta"]),
+                               np.asarray(out2["theta"]), rtol=1e-5)
+
+
+def test_query_default_raises():
+    class NoQuery(StradsAppBase):
+        pass
+    with pytest.raises(NotImplementedError, match="query"):
+        NoQuery().query({}, {})
+
+
+# ---------------------------------------------------------------------------
+# ModelView: publish/read semantics
+# ---------------------------------------------------------------------------
+
+def test_view_read_before_publish_raises(mesh):
+    eng, data, X, y = _lasso_setup(mesh)
+    for kind in ("stale", "snapshot"):
+        view = ModelView(eng, ServeSpec.default_for(kind))
+        with pytest.raises(StaleReadError, match="publish"):
+            view.read()
+
+
+def test_view_stale_gate_refreshes_lazily(mesh):
+    eng, data, X, y = _lasso_setup(mesh)
+    state = eng.init_state(jax.random.key(0), y=y)
+    view = ModelView(eng, ServeSpec(kind="stale", max_staleness=2,
+                                    max_batch=1))
+    view.publish(state, 0)
+    _, s0 = view.read()
+    assert s0 == 0
+    # clock advances within the bound: the cache is NOT refreshed
+    view.publish(state, 2)
+    _, s1 = view.read()
+    assert s1 == 2
+    # beyond the bound: publish refreshes, reads are fresh again
+    view.publish(state, 3)
+    _, s2 = view.read()
+    assert s2 == 0
+    assert [r["staleness"] for r in view.reads] == [0, 2, 0]
+
+
+def test_view_snapshot_pins_at_publish(mesh):
+    eng, data, X, y = _lasso_setup(mesh)
+    state = eng.init_state(jax.random.key(0), y=y)
+    view = ModelView(eng, ServeSpec.default_for("snapshot"))
+    view.publish(state, 4)
+    pinned, s = view.read()
+    assert s == 0
+    # the pin is a copy: mutating nothing, but the view must survive the
+    # original buffers being donated — same arrays by value, not identity
+    _bit_identical(pinned, state)
+    assert pinned["beta"] is not state["beta"]
+
+
+def test_view_stale_serves_mixed_ssp_view(mesh):
+    # server-resident leaf (beta) comes from the stale cache; the
+    # worker-resident leaf (r) reads live at the boundary — exactly the
+    # SSP read semantics (read-my-writes local, ≤s-stale shared)
+    eng, data, X, y = _lasso_setup(mesh)
+    state = eng.init_state(jax.random.key(0), y=y)
+    view = ModelView(eng, ServeSpec(kind="stale", max_staleness=4,
+                                    max_batch=1))
+    view.publish(state, 0)
+    newer = dict(state, beta=state["beta"] + 1.0, r=state["r"] * 2.0)
+    view.publish(newer, 3)
+    v, s = view.read()
+    assert s == 3
+    np.testing.assert_array_equal(np.asarray(v["beta"]),
+                                  np.asarray(state["beta"]))   # stale
+    np.testing.assert_array_equal(np.asarray(v["r"]),
+                                  np.asarray(newer["r"]))      # live
+
+
+# ---------------------------------------------------------------------------
+# the micro-batching frontend
+# ---------------------------------------------------------------------------
+
+def _fake_clock():
+    t = [0.0]
+
+    def clock():
+        return t[0]
+    clock.advance = lambda dt: t.__setitem__(0, t[0] + dt)
+    return clock
+
+
+def test_frontend_batches_to_max_batch(mesh):
+    eng, data, X, y = _lasso_setup(mesh)
+    state = eng.init_state(jax.random.key(0), y=y)
+    spec = ServeSpec(kind="stale", max_staleness=0, max_batch=3)
+    view = ModelView(eng, spec)
+    fe = ServeFrontend(eng, view, spec)
+    view.publish(state, 0)
+    for i in range(7):
+        fe.submit({"x": jnp.asarray(X[i])})
+    # window 0: everything drains, in batches of ≤ 3 → 3 reads
+    assert fe.flush() == 7
+    assert fe.pending() == 0
+    assert len(view.reads) == 3
+    sizes = [len(np.asarray(r.result["y_hat"]).shape) for r in
+             fe.responses]
+    assert all(s == 0 for s in sizes)          # per-request scalar slices
+
+
+def test_frontend_window_holds_partial_batches(mesh):
+    eng, data, X, y = _lasso_setup(mesh)
+    state = eng.init_state(jax.random.key(0), y=y)
+    spec = ServeSpec(kind="stale", max_staleness=0, max_batch=4,
+                     batch_window_ms=10.0)
+    view = ModelView(eng, spec)
+    clock = _fake_clock()
+    fe = ServeFrontend(eng, view, spec, clock=clock)
+    view.publish(state, 0)
+    fe.submit({"x": jnp.asarray(X[0])})
+    fe.submit({"x": jnp.asarray(X[1])})
+    assert fe.flush() == 0                     # partial, window open
+    assert fe.pending() == 2
+    clock.advance(0.011)                       # 11 ms > the 10 ms window
+    assert fe.flush() == 2                     # window expired: served
+    fe.submit({"x": jnp.asarray(X[2])})
+    assert fe.flush(force=True) == 1           # forced drain ignores it
+    assert [r.latency_ms for r in fe.responses][:2] == [11.0, 11.0]
+
+
+def test_frontend_requires_matching_spec(mesh):
+    eng, data, X, y = _lasso_setup(mesh)
+    view = ModelView(eng, ServeSpec.default_for("stale"))
+    with pytest.raises(ValueError, match="share one ServeSpec"):
+        ServeFrontend(eng, view, ServeSpec.default_for("snapshot"))
+
+
+# ---------------------------------------------------------------------------
+# serve_while_training: bit-exactness + the staleness guarantee
+# ---------------------------------------------------------------------------
+
+def test_serve_while_training_bit_exact(mesh):
+    eng, data, X, y = _lasso_setup(mesh)
+    init = lambda: eng.init_state(jax.random.key(0), y=y)
+    plan = ExecutionPlan(executor="ssp", rounds=12, staleness=2)
+    reqs = [(t, {"x": jnp.asarray(X[i % len(X)])})
+            for i, t in enumerate((0, 0, 3, 5, 6, 9, 11, 12, 12))]
+    srep = serve_while_training(eng, init(), data, jax.random.key(1),
+                                plan, requests=reqs)
+    assert len(srep.responses) == len(reqs)
+    ref = eng.execute(init(), data, jax.random.key(1), plan)
+    _bit_identical(srep.report.state, ref.state)
+    assert int(srep.report.carry.t) == plan.rounds
+
+
+def test_serve_while_training_collect_matches_plain(mesh):
+    eng, data, X, y = _lasso_setup(mesh)
+    init = lambda: eng.init_state(jax.random.key(0), y=y)
+    plan = ExecutionPlan(executor="ssp", rounds=8, staleness=1,
+                         collect_every=1)
+    collect = eng.app.objective_collect()
+    srep = serve_while_training(eng, init(), data, jax.random.key(1),
+                                plan, collect=collect,
+                                requests=[(4, {"x": jnp.asarray(X[0])})])
+    ref = eng.execute(init(), data, jax.random.key(1), plan,
+                      collect=collect)
+    np.testing.assert_array_equal(np.asarray(srep.report.trace),
+                                  np.asarray(ref.trace))
+
+
+def test_serve_while_training_snapshot_kind(mesh):
+    eng, data, X, y = _lasso_setup(mesh)
+    init = lambda: eng.init_state(jax.random.key(0), y=y)
+    plan = ExecutionPlan(executor="ssp", rounds=6, staleness=1)
+    srep = serve_while_training(
+        eng, init(), data, jax.random.key(1), plan,
+        spec=ServeSpec.default_for("snapshot"),
+        requests=[(0, {"x": jnp.asarray(X[0])}),
+                  (4, {"x": jnp.asarray(X[1])})])
+    # snapshot pins at every boundary → reads always observe the pin
+    assert srep.max_staleness_read() == 0
+    ref = eng.execute(init(), data, jax.random.key(1), plan)
+    _bit_identical(srep.report.state, ref.state)
+
+
+def test_serve_while_training_records_trace_spans(mesh):
+    eng, data, X, y = _lasso_setup(mesh)
+    state = eng.init_state(jax.random.key(0), y=y)
+    plan = ExecutionPlan(executor="ssp", rounds=6, staleness=2)
+    rec = Recorder()
+    serve_while_training(eng, state, data, jax.random.key(1), plan,
+                         requests=[(3, {"x": jnp.asarray(X[0])})],
+                         recorder=rec)
+    names = [e["name"] for e in rec.to_json_events()]
+    assert "train_chunk" in names
+    assert "serve_batch" in names
+    assert "serve_read" in names
+
+
+def test_serve_while_training_rejects_bad_requests(mesh):
+    eng, data, X, y = _lasso_setup(mesh)
+    state = eng.init_state(jax.random.key(0), y=y)
+    plan = ExecutionPlan(executor="ssp", rounds=6, staleness=1)
+    with pytest.raises(TypeError, match="t_due"):
+        serve_while_training(eng, state, data, jax.random.key(1), plan,
+                             requests=[{"x": jnp.asarray(X[0])}])
+    with pytest.raises(ValueError, match="due round"):
+        serve_while_training(eng, state, data, jax.random.key(1), plan,
+                             requests=[(99, {"x": jnp.asarray(X[0])})])
+
+
+def test_serve_while_training_rejects_misaligned_chunk(mesh):
+    eng, data, X, y = _lasso_setup(mesh)
+    state = eng.init_state(jax.random.key(0), y=y)
+    plan = ExecutionPlan(executor="ssp", rounds=12, staleness=2)  # L = 3
+    with pytest.raises(ValueError, match="multiple"):
+        serve_while_training(eng, state, data, jax.random.key(1), plan,
+                             chunk_rounds=4)
+
+
+def test_serve_only(mesh):
+    eng, data, X, y = _lasso_setup(mesh)
+    state = eng.init_state(jax.random.key(0), y=y)
+    plan = ExecutionPlan(executor="scan", rounds=8)
+    trained = eng.execute(state, data, jax.random.key(1), plan).state
+    srep = serve_only(eng, trained,
+                      requests=[{"x": jnp.asarray(X[i])}
+                                for i in range(5)], t=8)
+    assert srep.report is None
+    assert len(srep.responses) == 5
+    assert srep.max_staleness_read() == 0
+    got = np.asarray(srep.responses[0].result["y_hat"])
+    np.testing.assert_allclose(got, X[0] @ np.asarray(trained["beta"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=2),
+       st.integers(min_value=0, max_value=5),
+       st.integers(min_value=1, max_value=3))
+def test_read_staleness_never_exceeds_bound(train_s, bound, spread):
+    """Every ModelView read under kind="stale" observes state at most
+    max_staleness rounds old — over random (training staleness, serving
+    bound, request interleaving) configurations, asserted on the
+    measured staleness-at-read the view logged."""
+    mesh = single_device_mesh()
+    eng, data, X, y = _lasso_setup(mesh, seed=train_s * 11 + bound)
+    state = eng.init_state(jax.random.key(0), y=y)
+    R = 6 * (train_s + 1)                  # whole SSP windows
+    plan = ExecutionPlan(executor="ssp", rounds=R, staleness=train_s)
+    spec = ServeSpec(kind="stale", max_staleness=bound, max_batch=2)
+    reqs = [((i * spread) % (R + 1), {"x": jnp.asarray(X[i % len(X)])})
+            for i in range(10)]
+    srep = serve_while_training(eng, state, data, jax.random.key(1),
+                                plan, spec=spec, requests=reqs)
+    assert len(srep.responses) == len(reqs)
+    assert srep.reads, "no reads were served"
+    for r in srep.reads:
+        assert r["staleness"] <= bound, r
+    assert srep.max_staleness_read() <= bound
+    assert sum(srep.staleness_hist().values()) == len(srep.reads)
+
+
+def test_serve_while_training_chunk_override(mesh):
+    # a coarser publish cadence (2 windows per chunk) still holds the
+    # bound and still trains bit-exactly
+    eng, data, X, y = _lasso_setup(mesh)
+    init = lambda: eng.init_state(jax.random.key(0), y=y)
+    plan = ExecutionPlan(executor="ssp", rounds=12, staleness=1)  # L = 2
+    srep = serve_while_training(
+        eng, init(), data, jax.random.key(1), plan, chunk_rounds=4,
+        spec=ServeSpec(kind="stale", max_staleness=4, max_batch=4),
+        requests=[(t, {"x": jnp.asarray(X[t])}) for t in (0, 4, 8, 12)])
+    assert srep.max_staleness_read() <= 4
+    ref = eng.execute(init(), data, jax.random.key(1), plan)
+    _bit_identical(srep.report.state, ref.state)
+
+
+def test_serve_spec_on_plan_json_is_rejected():
+    # serving is deliberately NOT an ExecutionPlan field: a plan decides
+    # how to *train*; the ServeSpec rides the serve entry points.  A
+    # plan file with a "serve" key must fail loudly, not silently drop.
+    with pytest.raises(ValueError, match="unknown"):
+        ExecutionPlan.from_json(
+            {"executor": "ssp", "rounds": 6, "staleness": 1,
+             "serve": {"kind": "stale"}})
