@@ -1,0 +1,210 @@
+"""Streaming-ingest benchmark: static vs streaming training, ingest
+cost isolated, compiled-program reuse, and serving under drift.
+
+Four arms on 4-worker plans (one subprocess, forced host devices):
+
+* **lasso static / empty / drift** — the same SSP lasso run three ways:
+  plain ``execute()``, streamed with an :class:`repro.stream.EmptySource`
+  (pure boundary-loop chunking cost; asserted bit-identical to the
+  static run leaf-by-leaf), and streamed with a
+  :class:`~repro.stream.LassoDriftSource` (the empty→drift delta is the
+  actual ingest cost).  The final ½‖y−Xβ‖²+λ‖β‖₁ objective is recorded
+  for the static and drifted runs — drift moves the optimum, so the
+  objectives differ while both runs stay finite and converged.
+* **mf extend no-recompile** — a capacity-padded MF ring on the scan
+  executor: after one streamed warmup, a second streamed run with fresh
+  ``"extend"`` deltas must leave ``engine._scan_cache`` untouched (the
+  validity-mask ring keeps every data shape static, so ingest never
+  triggers an XLA recompile) — asserted in-process.
+* **serve under ingest** — :func:`repro.serve.serve_while_training`
+  with a concurrent drift stream: p50/p99 request latency, the measured
+  staleness-at-read histogram (bound asserted), and rows
+  ingested/dropped, showing reads and writes riding one boundary.
+
+Writes ``benchmarks/results/BENCH_stream.json``.
+"""
+from __future__ import annotations
+
+import json
+
+from .common import run_sub, save
+
+_CODE = """
+import json, time
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core import ExecutionPlan, worker_mesh
+from repro.serve import ServeSpec, serve_while_training
+from repro.stream import (StreamSpec, EmptySource, LassoDriftSource,
+                          MFDriftSource)
+
+U = 4
+mesh = worker_mesh(U)
+rng = np.random.default_rng(0)
+
+def bit_identical(a, b):
+    return all(bool(jnp.array_equal(x, y)) for x, y in
+               zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+# ---- arm 1: lasso static vs empty-streamed vs drift-streamed ---------
+from repro.apps import lasso
+R, n, J = {rounds}, {rows}, {feats}
+X, y, _ = lasso.synthetic_correlated(rng, n=n, J=J, k_true=10)
+cfg = lasso.LassoConfig(num_features=J, lam=0.02, block_size=8,
+                        num_candidates=32)
+eng = lasso.make_engine(cfg, mesh)
+data = eng.shard_data({{"X": jnp.asarray(X), "y": jnp.asarray(y)}})
+init = lambda: eng.init_state(jax.random.key(0), y=y)
+plan = ExecutionPlan(executor="ssp", rounds=R, staleness=1, workers=U)
+spec = StreamSpec(kind="replace", ingest_every={ingest_every})
+drift = lambda: LassoDriftSource(num_rows=n, num_features=J,
+                                 rows_per_ingest={rpi}, seed=3)
+obj = eng.app.objective_fn(mesh)
+
+# warm every program variant before timing (static fast path AND the
+# streamed span loop compile different scan lengths)
+jax.block_until_ready(eng.execute(init(), data, jax.random.key(1),
+                                  plan).state)
+jax.block_until_ready(eng.execute(init(), data, jax.random.key(1), plan,
+                                  stream=spec,
+                                  source=EmptySource()).state)
+jax.block_until_ready(eng.execute(init(), data, jax.random.key(1), plan,
+                                  stream=spec, source=drift()).state)
+
+def timed(**kw):
+    t0 = time.time()
+    rep = eng.execute(init(), data, jax.random.key(1), plan, **kw)
+    jax.block_until_ready(rep.state)
+    return rep, time.time() - t0
+
+rep_s, wall_s = timed()
+rep_e, wall_e = timed(stream=spec, source=EmptySource())
+rep_d, wall_d = timed(stream=spec, source=drift())
+assert bit_identical(rep_s.state, rep_e.state), \\
+    "empty-source streaming perturbed the trajectory"
+lasso_arm = {{
+    "plan": plan.to_json(), "stream_spec": spec.to_json(),
+    "static_rounds_per_s": R / wall_s,
+    "empty_rounds_per_s": R / wall_e,
+    "drift_rounds_per_s": R / wall_d,
+    "chunking_cost_s": wall_e - wall_s,
+    "ingest_cost_s": wall_d - wall_e,
+    "empty_bit_identical": True,
+    "objective_static": float(obj(rep_s.state)),
+    "objective_drift": float(obj(rep_d.state)),
+    "ingest": {{k: int(v) for k, v in rep_d.stream.items()}},
+}}
+
+# ---- arm 2: MF extend ring reuses compiled programs ------------------
+from repro.apps import mf
+N, M, FILL = {mf_rows}, {mf_cols}, {mf_fill}
+A, mask = mf.synthetic_ratings(rng, FILL, M, true_rank=4)
+A = np.concatenate([A, np.zeros((N - FILL, M), A.dtype)])
+mask = np.concatenate([mask, np.zeros((N - FILL, M), mask.dtype)])
+mcfg = mf.MFConfig(num_rows=N, num_cols=M, rank=8)
+meng = mf.make_engine(mcfg, mesh)
+mdata = meng.shard_data({{"A": jnp.asarray(A), "mask": jnp.asarray(mask)}})
+minit = lambda: meng.init_state(jax.random.key(0), A=jnp.asarray(A),
+                                mask=jnp.asarray(mask))
+mplan = ExecutionPlan(executor="scan", rounds={mf_rounds}, workers=U)
+mspec = StreamSpec(kind="extend", ingest_every=2, capacity=N)
+msrc = lambda seed: MFDriftSource(num_rows=N, num_cols=M,
+                                  rows_per_ingest=4, true_rank=4,
+                                  kind="extend", seed=seed)
+mrep0 = meng.execute(minit(), mdata, jax.random.key(1), mplan,
+                     stream=mspec, source=msrc(1))
+jax.block_until_ready(mrep0.state)
+n0 = len(meng._scan_cache)
+t0 = time.time()
+mrep1 = meng.execute(minit(), mdata, jax.random.key(1), mplan,
+                     stream=mspec, source=msrc(2))
+jax.block_until_ready(mrep1.state)
+mwall = time.time() - t0
+n1 = len(meng._scan_cache)
+assert n1 == n0, f"extend ingest recompiled: {{n0}} -> {{n1}} programs"
+mf_arm = {{
+    "plan": mplan.to_json(), "stream_spec": mspec.to_json(),
+    "scan_cache_after_warmup": n0, "scan_cache_after_ingests": n1,
+    "recompiles": n1 - n0,
+    "streamed_rounds_per_s": {mf_rounds} / mwall,
+    "ingest": {{k: int(v) for k, v in mrep1.stream.items()}},
+}}
+
+# ---- arm 3: serve-while-train under concurrent ingest ----------------
+NREQ = {requests}
+sspec = ServeSpec(kind="stale", max_staleness=3, max_batch=8)
+payload = lambda i: {{"x": jnp.asarray(X[i % n])}}
+reqs = [((i * R) // NREQ, payload(i)) for i in range(NREQ)]
+t0 = time.time()
+swt = serve_while_training(eng, init(), data, jax.random.key(1), plan,
+                           spec=sspec, requests=list(reqs),
+                           stream=spec, source=drift())
+jax.block_until_ready(swt.report.state)
+swall = time.time() - t0
+pct = swt.latency_percentiles()
+bound_held = swt.max_staleness_read() <= sspec.max_staleness
+assert bound_held, "staleness-at-read exceeded the bound under ingest"
+serve_arm = {{
+    "serve_spec": sspec.to_json(), "stream_spec": spec.to_json(),
+    "p50_ms": pct["p50_ms"], "p99_ms": pct["p99_ms"],
+    "throughput_rps": len(swt.responses) / max(swall, 1e-9),
+    "staleness_hist": {{str(k): v for k, v in
+                        sorted(swt.staleness_hist().items())}},
+    "max_staleness_read": swt.max_staleness_read(),
+    "bound_held": bound_held,
+    "ingest": {{k: int(v) for k, v in swt.ingest.items()}},
+}}
+
+out = {{"workers": U, "lasso": lasso_arm, "mf_extend": mf_arm,
+        "serve_under_ingest": serve_arm}}
+print("PAYLOAD:" + json.dumps(out))
+"""
+
+
+def run(quick: bool = True):
+    kw = dict(rounds=24 if quick else 96,
+              rows=256 if quick else 1024,
+              feats=256 if quick else 1024,
+              ingest_every=4, rpi=16 if quick else 64,
+              mf_rows=64 if quick else 256, mf_cols=64 if quick else 128,
+              mf_fill=48 if quick else 192,
+              mf_rounds=16 if quick else 48,
+              requests=64 if quick else 256)
+    stdout = run_sub(_CODE.format(**kw), devices=4, timeout=560)
+    out = json.loads(stdout.strip().splitlines()[-1][len("PAYLOAD:"):])
+    save("BENCH_stream", out)
+    return out
+
+
+def rows(out):
+    la = out["lasso"]
+    for arm in ("static", "empty", "drift"):
+        yield (f"stream/lasso/{arm}_rounds_per_s", 0.0,
+               round(la[f"{arm}_rounds_per_s"], 1))
+    yield ("stream/lasso/ingest_cost_ms", la["ingest_cost_s"] * 1e6,
+           round(la["ingest_cost_s"] * 1e3, 2))
+    yield ("stream/lasso/empty_bit_identical", 0.0,
+           int(la["empty_bit_identical"]))
+    yield ("stream/lasso/rows_ingested", 0.0, la["ingest"]["rows_in"])
+    mf = out["mf_extend"]
+    yield ("stream/mf_extend/recompiles", 0.0, mf["recompiles"])
+    yield ("stream/mf_extend/rounds_per_s", 0.0,
+           round(mf["streamed_rounds_per_s"], 1))
+    yield ("stream/mf_extend/rows_ingested", 0.0, mf["ingest"]["rows_in"])
+    sv = out["serve_under_ingest"]
+    yield ("stream/serve/p50_ms", sv["p50_ms"] * 1e3,
+           round(sv["p99_ms"], 2))
+    yield ("stream/serve/max_staleness_read", 0.0,
+           sv["max_staleness_read"])
+    yield ("stream/serve/bound_held", 0.0, int(sv["bound_held"]))
+    yield ("stream/serve/rows_ingested", 0.0, sv["ingest"]["rows_in"])
+
+
+def summary(out):
+    la = out["lasso"]
+    yield (f"# stream/lasso spec={json.dumps(la['stream_spec'])} "
+           f"obj static={la['objective_static']:.4f} "
+           f"drift={la['objective_drift']:.4f}")
+    sv = out["serve_under_ingest"]
+    yield (f"# stream/serve spec={json.dumps(sv['stream_spec'])} "
+           f"hist={json.dumps(sv['staleness_hist'])}")

@@ -14,7 +14,8 @@ import traceback
 
 from . import (bench_kernels, bench_lasso, bench_lda, bench_memory,
                bench_mf, bench_obs, bench_part, bench_pipeline,
-               bench_scaling, bench_sched, bench_serve, bench_ssp)
+               bench_scaling, bench_sched, bench_serve, bench_ssp,
+               bench_stream)
 
 BENCHES = {
     "lasso": bench_lasso,       # Fig 8/9 right
@@ -29,6 +30,7 @@ BENCHES = {
     "kernels": bench_kernels,   # kernel backend reference vs pallas
     "obs": bench_obs,           # telemetry overhead off/counters/trace
     "serve": bench_serve,       # serve-only vs serve-while-train (repro.serve)
+    "stream": bench_stream,     # static vs streaming ingest (repro.stream)
 }
 
 

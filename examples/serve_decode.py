@@ -4,8 +4,12 @@ SSM+shared-attention (recurrent state + windowed cache), and xLSTM
 (pure recurrent state, no KV cache at all).
 
     PYTHONPATH=src python examples/serve_decode.py
+
+The LM decode driver lives at ``repro.launch.serve_lm`` (the
+``repro.launch.serve`` path now hosts the STRADS bounded-staleness
+serving CLI, whose flags are ``--engine``/``--rounds``/...).
 """
-from repro.launch import serve as serve_launcher
+from repro.launch import serve_lm as serve_launcher
 
 
 def main():

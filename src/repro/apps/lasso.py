@@ -232,6 +232,30 @@ class StradsLasso(StradsAppBase):
         exactly as stale as an SSP worker's own read of β."""
         return {"y_hat": batch["x"] @ state["beta"]}
 
+    # -- streaming (ingest primitives) ---------------------------------------
+
+    #: every observation row is real (no validity channel to derive an
+    #: extend-kind ring mask from), so only in-place replacement streams
+    supported_stream_kinds = ("replace",)
+
+    def ingest_specs(self):
+        return {"leaves": ("X", "y"), "valid": None}
+
+    def ingest(self, data, state, rows, delta):
+        """Overwrite observation rows and keep the residual invariant
+        ``r = y − Xβ`` true on exactly those rows (β is untouched — the
+        next scheduled rounds react to the new data through r)."""
+        rows = jnp.asarray(rows)
+        X_new = jnp.asarray(delta["data"]["X"], jnp.float32)
+        y_new = jnp.asarray(delta["data"]["y"], jnp.float32)
+        new_data = dict(data,
+                        X=data["X"].at[rows].set(X_new),
+                        y=data["y"].at[rows].set(y_new))
+        if state is None:
+            return new_data, None
+        r = state["r"].at[rows].set(y_new - X_new @ state["beta"])
+        return new_data, dict(state, r=r)
+
     # -- objective -------------------------------------------------------------
 
     def objective_fn(self, mesh):

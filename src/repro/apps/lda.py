@@ -238,6 +238,65 @@ class StradsLDA(StradsAppBase):
             theta = theta / jnp.sum(theta, -1, keepdims=True)
         return {"theta": theta, "top_topic": jnp.argmax(theta, axis=-1)}
 
+    # -- streaming (ingest primitives) ---------------------------------------
+
+    #: token slots with word -1 are exactly the padding the Gibbs scan
+    #: already skips (``active``), so they double as the extend-kind
+    #: validity channel — 1411.2305-style doc-shard streaming
+    supported_stream_kinds = ("replace", "extend")
+
+    def ingest_specs(self):
+        return {"leaves": ("words", "docs"),
+                "valid": lambda data: np.asarray(data["words"]) >= 0}
+
+    def ingest(self, data, state, rows, delta):
+        """Swap token slots (new tokens into padding/oldest slots, or
+        resampled replacements) and keep the collapsed counts exact:
+        each displaced active token is decremented out of D/B/s, each
+        incoming one (topic draw ``delta["z"]``) incremented in.  Word
+        -1 in a delta deletes the slot's token."""
+        cfg = self.cfg
+        Tp, dpw = cfg.tokens_per_worker, cfg.docs_per_worker
+        slots = np.asarray(rows, np.int64)
+        w_new = np.asarray(delta["data"]["words"], np.int32)
+        d_new = np.asarray(delta["data"]["docs"], np.int32)
+        if w_new.max(initial=-1) >= cfg.vocab or \
+                w_new.min(initial=0) < -1:
+            raise ValueError(f"ingested words out of [-1, {cfg.vocab})")
+        if d_new.size and (d_new.min() < 0 or d_new.max() >= dpw):
+            raise ValueError(f"ingested docs out of [0, {dpw}) (doc ids "
+                             f"are worker-local)")
+        new_data = dict(data,
+                        words=data["words"].at[slots].set(
+                            jnp.asarray(w_new)),
+                        docs=data["docs"].at[slots].set(
+                            jnp.asarray(d_new)))
+        if state is None:
+            return new_data, None
+        z_new = np.asarray(delta["z"], np.int32)
+        if z_new.size and (z_new.min() < 0
+                           or z_new.max() >= cfg.num_topics):
+            raise ValueError(f"ingested z out of [0, {cfg.num_topics})")
+        u = slots // Tp                        # owning worker per slot
+        w_old = np.asarray(data["words"])[slots]
+        d_old = np.asarray(data["docs"])[slots]
+        z = np.array(np.asarray(state["z"]))
+        z_old = z[slots]
+        D = np.array(np.asarray(state["D"]))
+        B = np.array(np.asarray(state["B"]))
+        s = np.array(np.asarray(state["s"]))
+        out = w_old >= 0                       # displaced active tokens
+        np.add.at(B, (w_old[out], z_old[out]), -1)
+        np.add.at(D, (u[out] * dpw + d_old[out], z_old[out]), -1)
+        np.add.at(s, z_old[out], -1)
+        inn = w_new >= 0                       # arriving active tokens
+        np.add.at(B, (w_new[inn], z_new[inn]), 1)
+        np.add.at(D, (u[inn] * dpw + d_new[inn], z_new[inn]), 1)
+        np.add.at(s, z_new[inn], 1)
+        z[slots] = z_new
+        return new_data, dict(state, z=jnp.asarray(z), D=jnp.asarray(D),
+                              B=jnp.asarray(B), s=jnp.asarray(s))
+
     # -- diagnostics ------------------------------------------------------------
 
     def loglik_fn(self, mesh):

@@ -192,6 +192,38 @@ class StradsMF(StradsAppBase):
         top_scores, top_items = jax.lax.top_k(scores, k)
         return {"items": top_items, "scores": top_scores}
 
+    # -- streaming (ingest primitives) ---------------------------------------
+
+    #: the ratings mask doubles as the validity channel, so padding
+    #: user rows (mask all-zero) can absorb extend-kind appends — such
+    #: rows are exactly inert until a delta lands (their push partials
+    #: and residuals are zero, the W-phase keeps them at 0)
+    supported_stream_kinds = ("replace", "extend")
+
+    def ingest_specs(self):
+        return {"leaves": ("A", "mask"),
+                "valid": lambda data:
+                    np.asarray(data["mask"]).any(axis=1)}
+
+    def ingest(self, data, state, rows, delta):
+        """Overwrite user rows (refreshed ratings, or new users landing
+        in ring slots) and keep the residual invariant ``R = (A − WH) ·
+        mask`` true on exactly those rows.  The W row is kept as a warm
+        start (zero for never-touched padding slots); the next W-phase
+        refits it against the new ratings."""
+        rows = jnp.asarray(rows)
+        A_new = jnp.asarray(delta["data"]["A"], jnp.float32)
+        m_new = jnp.asarray(delta["data"]["mask"], jnp.float32)
+        new_data = dict(data,
+                        A=data["A"].at[rows].set(A_new),
+                        mask=data["mask"].at[rows].set(m_new))
+        if state is None:
+            return new_data, None
+        W_rows = jnp.take(state["W"], rows, axis=0)
+        R = state["R"].at[rows].set(
+            (A_new - W_rows @ state["H"]) * m_new)
+        return new_data, dict(state, R=R)
+
     def objective_fn(self, mesh):
         cfg = self.cfg
 

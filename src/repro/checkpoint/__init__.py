@@ -1,1 +1,2 @@
-from .npz import save_checkpoint, restore_checkpoint, latest_step  # noqa: F401
+from .npz import (save_checkpoint, restore_checkpoint, latest_step,  # noqa: F401
+                  load_flat)

@@ -76,8 +76,18 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def restore_checkpoint(ckpt_dir: str, step: int, template: Any) -> Any:
+def load_flat(ckpt_dir: str, step: int) -> Dict[str, np.ndarray]:
+    """One checkpoint's raw flattened arrays ('/'-joined key paths) —
+    for callers that must inspect *optional* subtrees before committing
+    to a template: a streamed run saves a ``"stream"`` cursor subtree
+    beside ``"state"``/``"carry"``/``"assignment"`` (see
+    :meth:`repro.core.StradsEngine.execute`), and a resume path probes
+    ``stream/...`` keys here to tell streamed checkpoints from
+    unstreamed ones without a shape-checked restore."""
     path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
     with np.load(path) as z:
-        flat = {k: z[k] for k in z.files}
-    return _unflatten_into(template, flat)
+        return {k: z[k] for k in z.files}
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, template: Any) -> Any:
+    return _unflatten_into(template, load_flat(ckpt_dir, step))

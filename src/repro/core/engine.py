@@ -88,6 +88,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import math
 import warnings
 from functools import partial
 from typing import Any, Callable, Optional
@@ -897,7 +898,9 @@ class StradsEngine:
                 collect: Optional[Callable[[Any], Any]] = None,
                 callback=None, carry=None,
                 ckpt_dir: Optional[str] = None,
-                partition: Optional[dict] = None) -> ExecutionReport:
+                partition: Optional[dict] = None,
+                stream=None, source=None,
+                stream_state: Optional[dict] = None) -> ExecutionReport:
         """Run an :class:`~repro.core.plan.ExecutionPlan` — the one entry
         point that subsumes :meth:`run`, :meth:`run_scanned` and
         :meth:`run_ssp` and returns a uniform
@@ -933,9 +936,22 @@ class StradsEngine:
 
         ``ckpt_dir`` + ``plan.checkpoint_every`` chunk the run and save a
         ``{"state", "carry"}`` checkpoint (plus ``"assignment"`` when a
-        partitioner is active) via :mod:`repro.checkpoint` every
-        ``checkpoint_every`` rounds (the cadence must tile the
-        executor's step length; each chunk reuses one compiled program).
+        partitioner is active, plus ``"stream"`` when streaming) via
+        :mod:`repro.checkpoint` every ``checkpoint_every`` rounds (the
+        cadence must tile the executor's step length; each chunk reuses
+        one compiled program).
+
+        ``stream`` (a :class:`~repro.stream.spec.StreamSpec`) +
+        ``source`` (a :class:`~repro.stream.source.DataSource`) ingest
+        data deltas at the host-synced boundaries ``t %
+        stream.ingest_every == 0`` — the streaming-injection surface
+        (see the ingest contract in :mod:`repro.core.primitives`).
+        Like ``ServeSpec`` it rides this entry point, never the plan,
+        so it can't be silently ignored.  An empty source is
+        bit-identical to not passing ``stream`` at all.  ``stream_state``
+        resumes the ring cursor from a checkpoint's ``"stream"``
+        payload (pair it with :func:`repro.stream.replay_data` when the
+        resumed process no longer holds the streamed data pytree).
         """
         if not isinstance(plan, ExecutionPlan):
             raise TypeError(f"execute() wants an ExecutionPlan; got "
@@ -1002,6 +1018,19 @@ class StradsEngine:
                              "was passed — the run would silently never "
                              "checkpoint")
         chunk = plan.checkpoint_every if ckpt_dir else 0
+        if (stream is None) != (source is None):
+            raise ValueError("stream= (a StreamSpec) and source= (a "
+                             "DataSource) come as a pair — got only one")
+        ingestor = None
+        if stream is not None:
+            from ..stream import Ingestor
+            ingestor = Ingestor(stream, source)
+            if stream_state is not None:
+                ingestor.restore(stream_state)
+            ingestor.bind(self, data)
+        elif stream_state is not None:
+            raise ValueError("stream_state resumes a streamed run; pass "
+                             "the stream=/source= pair with it")
         pspec = self._active_part_spec
         if chunk and pspec is not None and pspec.rebalance_every \
                 and pspec.rebalance_every % chunk:
@@ -1025,7 +1054,7 @@ class StradsEngine:
                   else _NULL_CTX):
                 rep = self._execute_plan(state, data, rng, plan, t_done,
                                          carry, collect, callback, chunk,
-                                         pspec, ckpt_dir)
+                                         pspec, ckpt_dir, ingestor)
         finally:
             self._recorder = None
         if tspec is not None:
@@ -1047,13 +1076,16 @@ class StradsEngine:
 
     def _execute_plan(self, state, data, rng, plan: ExecutionPlan,
                       t_done: int, carry, collect, callback, chunk: int,
-                      pspec, ckpt_dir) -> ExecutionReport:
+                      pspec, ckpt_dir, ingestor=None) -> ExecutionReport:
         """The executor dispatch of :meth:`execute` — whole-plan, or the
-        ``checkpoint_every``-chunked loop.  Under an ssp plan the
+        boundary-chunked loop (checkpoint cadence, ingest cadence, or
+        their gcd when both are active).  Under an ssp plan the
         returned report's ``telemetry`` holds the raw per-chunk
         :class:`~repro.ps.telemetry.SSPTelemetry` (a list when chunked);
         ``execute`` merges it into the final :class:`RunReport`."""
-        if not chunk:
+        ing_every = ingestor.spec.ingest_every if ingestor is not None \
+            else 0
+        if not chunk and not ing_every:
             if pspec is not None and pspec.kind == "load_balanced":
                 warnings.warn(
                     "a load_balanced partitioner only rebalances at "
@@ -1065,12 +1097,18 @@ class StradsEngine:
                                       plan.rounds - t_done, t_done, carry,
                                       collect, callback)
         step_len = self._step_length(plan)
-        if chunk % step_len:
+        if chunk and chunk % step_len:
             raise ValueError(
                 f"plan.checkpoint_every={chunk} must be a multiple of the "
                 f"{plan.executor!r} executor's step length {step_len} "
                 f"(phase/window alignment), so every chunk resumes on a "
                 f"step boundary")
+        if ing_every and ing_every % step_len:
+            raise ValueError(
+                f"stream.ingest_every={ing_every} must be a multiple of "
+                f"the {plan.executor!r} executor's step length {step_len} "
+                f"(phase/window alignment), so every ingest boundary is "
+                f"host-synced")
         if plan.executor in ("pipelined", "ssp") and plan.rounds % step_len:
             # fail before any chunk runs — the same plan without ckpt_dir
             # is rejected upfront by the executor itself
@@ -1078,6 +1116,10 @@ class StradsEngine:
                 f"plan.rounds={plan.rounds} must be a multiple of the "
                 f"{plan.executor!r} executor's step length {step_len}; "
                 f"the final checkpoint chunk would be unrunnable")
+        # with both cadences active, spans run boundary to boundary; the
+        # plain checkpointed run keeps span == chunk exactly as before
+        span = (math.gcd(chunk, ing_every) if chunk and ing_every
+                else (chunk or ing_every))
         from ..checkpoint import save_checkpoint
         stops: list = []                        # callback early-stop marker
         cb = callback
@@ -1097,7 +1139,13 @@ class StradsEngine:
         sig0 = (self._partition_signal_snapshot(state)
                 if self._part_stats is not None else None)
         while t < plan.rounds:
-            n = min(chunk, plan.rounds - t)
+            if ingestor is not None:
+                # ingest-at-top / checkpoint-at-bottom: the checkpoint
+                # at t precedes the ingest at t, so a resumed run
+                # re-ingests boundary t exactly like the uninterrupted
+                # one did
+                state, data = ingestor.step(self, state, data, t)
+            n = min(span, plan.rounds - t)
             rep = self._execute_span(state, data, rng, plan, n, t, carry,
                                      collect, cb)
             state, carry = rep.state, rep.carry
@@ -1107,7 +1155,9 @@ class StradsEngine:
             if rep.telemetry is not None:
                 ssp_parts.append(rep.telemetry)
             t = int(carry.t)
-            if self.partitioner is not None:
+            at_chunk = (not chunk or t % chunk == 0 or t >= plan.rounds
+                        or bool(stops))
+            if self.partitioner is not None and at_chunk:
                 # the repartition check rides the chunk boundary: state
                 # is host-synced here, so a move is a re-placement (the
                 # next chunk fetches programs under the new assignment;
@@ -1115,18 +1165,23 @@ class StradsEngine:
                 # measure — never move)
                 state, sig0 = self._partition_step(
                     state, sig0, t, allow_move=t < plan.rounds)
-            payload = {"state": state, "carry": carry}
-            if self.partitioner is not None:
-                payload["assignment"] = self.partition_payload()
-            with self._obs_span("checkpoint", t=t):
-                save_checkpoint(ckpt_dir, t, payload)
+            if ckpt_dir and at_chunk:
+                payload = {"state": state, "carry": carry}
+                if self.partitioner is not None:
+                    payload["assignment"] = self.partition_payload()
+                if ingestor is not None:
+                    payload["stream"] = ingestor.payload()
+                with self._obs_span("checkpoint", t=t):
+                    save_checkpoint(ckpt_dir, t, payload)
             if stops:                           # honored across chunks
                 break
         trace = (jax.tree.map(lambda *xs: jnp.concatenate(xs), *traces)
                  if traces else None)
         return ExecutionReport(state=state, trace=trace,
                                telemetry=ssp_parts or None,
-                               carry=carry, plan=plan)
+                               carry=carry, plan=plan,
+                               stream=(ingestor.payload()
+                                       if ingestor is not None else None))
 
     def _step_length(self, plan: ExecutionPlan) -> int:
         """Rounds one compiled step of the plan's executor covers — the

@@ -205,6 +205,49 @@ primitive, declared alongside ``state_specs()``/``var_roles()``:
   frontend's jitted query programs are cached per (Assignment,
   KernelSpec) exactly like the engine's round programs.
 
+The ingest-injection contract
+-----------------------------
+
+Streaming ingest (:mod:`repro.stream`) is the *write* half of the
+serving story — the sixth leg of the same declarative surface.  A
+:class:`~repro.stream.spec.StreamSpec` declares how new data flows in
+(``"replace"`` — each delta names the row slots it overwrites;
+``"extend"`` — rows append into a capacity-padded ring buffer behind the
+app's validity mask, so data shapes stay static and compiled round
+programs are reused, never recompiled) and the cadence
+(``ingest_every``, aligned to the executor's step length exactly like
+``checkpoint_every``).  Like ``ServeSpec`` it rides the entry points
+(``execute(..., stream=, source=)``), never the ExecutionPlan.  Apps opt
+in with two primitives:
+
+* ``ingest_specs() -> {"leaves": (...), "valid": fn | None}`` — which
+  data leaves stream (all share the row axis; their leading dimension is
+  the ring capacity) and, for ``"extend"``, a host-side
+  ``valid(data) -> (rows,) bool`` mask deriving which slots hold real
+  rows (MF reads it off ``mask``, LDA off ``words >= 0``; lasso has no
+  validity channel and therefore declares ``supported_stream_kinds =
+  ("replace",)`` — the same injection-time rejection rule as
+  ``supported_scheduler_kinds``).
+* ``ingest(data, state, rows, delta) -> (data, state)`` — overwrite the
+  ``rows`` slots of the streamable leaves with ``delta["data"]`` and
+  bring *derived* state up to date in the same step (lasso rewrites the
+  replaced residuals ``r = y − Xβ``; MF the replaced rows of ``R``; LDA
+  decrements the old token's collapsed counts and increments the new
+  one's from the per-row ``delta["z"]`` draw).  Leaves the delta does
+  not touch must come back as the **same objects** — the
+  :class:`~repro.stream.ingest.Ingestor` re-places only changed leaves
+  with per-leaf ``device_put``, never a full ``shard_data`` rebuild.
+  With ``state=None`` only the data-leaf writes apply (the
+  deterministic-source replay path after a cross-process resume).
+
+The engine side is the boundary loop: deltas land at host-synced chunk
+boundaries (where the partitioner already rebalances, checkpoints
+already save, the serve loop already publishes), the stream cursor rides
+the checkpoint payload as its ``"stream"`` subtree, and ingest
+spans/row counts ride the :mod:`repro.obs` Recorder.  A round never
+observes a half-applied delta, and an empty source is bit-identical to
+an unstreamed run.
+
 The v2 write contract (VarTable-mediated push/pull)
 ---------------------------------------------------
 
@@ -408,6 +451,33 @@ class StradsAppBase:
             f"{type(self).__name__} declares no query() primitive — "
             f"serving (repro.serve) needs one; see the serving-injection "
             f"contract in repro.core.primitives")
+
+    #: which StreamSpec kinds this app can ingest (None = any; same
+    #: injection-time rejection rule as supported_scheduler_kinds.
+    #: Apps without a validity channel cannot host "extend")
+    supported_stream_kinds = None
+
+    def ingest_specs(self) -> dict:
+        """``{"leaves": (...), "valid": fn | None}`` — which data leaves
+        stream and how to derive the extend-kind validity mask; the
+        ingest-injection contract (see the module docstring).  Default:
+        the app declares no ingest primitives and cannot stream."""
+        raise NotImplementedError(
+            f"{type(self).__name__} declares no ingest_specs() primitive "
+            f"— streaming (repro.stream) needs one; see the "
+            f"ingest-injection contract in repro.core.primitives")
+
+    def ingest(self, data, state, rows, delta):
+        """Overwrite the ``rows`` slots of the streamable leaves with
+        ``delta["data"]`` and bring derived state up to date — the
+        ingest-injection contract (see the module docstring).  Unchanged
+        leaves must come back as the same objects; ``state=None``
+        applies the data-leaf writes only.  Default: the app declares
+        no ingest primitive and cannot stream."""
+        raise NotImplementedError(
+            f"{type(self).__name__} declares no ingest() primitive — "
+            f"streaming (repro.stream) needs one; see the "
+            f"ingest-injection contract in repro.core.primitives")
 
     def var_roles(self) -> dict:
         """Leaf-path → :class:`~repro.core.kvstore.VarSpec` role

@@ -74,7 +74,14 @@ def make_batch(cfg: SyntheticLMConfig, step: int,
 
 def synthetic_batches(cfg: SyntheticLMConfig, **kw
                       ) -> Iterator[Dict[str, jax.Array]]:
+    """The trainer-facing batch iterator — a thin walk over
+    :class:`repro.stream.source.SyntheticLMSource`, so the streaming
+    subsystem's DataSource and this generator share one batch-derivation
+    path (same ``(seed, step)`` schedule, same deltas)."""
+    from ..stream.source import SyntheticLMSource
+    src = SyntheticLMSource(cfg, kwargs=kw or None)
     step = 0
     while True:
-        yield make_batch(cfg, step, **kw)
+        for delta in src.take(step):
+            yield delta["data"]
         step += 1

@@ -42,6 +42,13 @@ the lowering and the plan dict is recorded in the result JSON:
     PYTHONPATH=src python -m repro.launch.dryrun --engine lasso \
         --plan examples/plans/ssp_s2.json
 
+Streaming ingest (:mod:`repro.stream`) needs no dry-run mode of its
+own: deltas land between compiled spans at host-synced boundaries, and
+the ``"extend"`` ring keeps data shapes static, so a streamed run lowers
+*exactly* the programs the unstreamed plan lowers — e.g.
+``examples/plans/serve_stream.json`` (the CI-smoked serving+streaming
+plan) dry-runs like any other SSP plan.
+
 Results land in ``benchmarks/results/dryrun/<arch>__<shape>__<mesh>[__tag]
 .json`` (existing files are skipped unless --force), which
 ``benchmarks/roofline.py`` renders into EXPERIMENTS.md §Dry-run/§Roofline.

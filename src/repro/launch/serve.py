@@ -13,6 +13,12 @@ violated.  ``--trace`` exports a Chrome trace showing serve batches
 interleaved with training chunks; ``--out`` writes the full JSON
 artifact (spec/plan dicts embedded).
 
+``--stream`` additionally folds synthetic drift deltas into the
+training data at the same chunk boundaries serving reads at
+(:mod:`repro.stream`; ``--stream-kind``/``--ingest-every`` shape the
+StreamSpec) and reports rows-ingested/dropped alongside p50/p99 — the
+full continuous-operation loop: reads and writes riding one boundary.
+
 The model-zoo LM decode driver that used to live at this path is now
 ``python -m repro.launch.serve_lm``.
 """
@@ -82,6 +88,26 @@ def _phase_period(engine: str, workers: int) -> int:
     return workers if engine == "lda" else {"lasso": 1, "mf": 2}[engine]
 
 
+def _drift_source(engine: str, workers: int, kind: str, seed: int):
+    """A deterministic drift source matching ``_build``'s workload
+    dimensions (same laptop scale, fresh rows every ingest boundary)."""
+    from ..stream import (LassoDriftSource, LDADriftSource,
+                          MFDriftSource)
+    if engine == "lasso":
+        return LassoDriftSource(num_rows=workers * 32, num_features=128,
+                                rows_per_ingest=4 * workers,
+                                seed=seed + 2)
+    if engine == "lda":
+        return LDADriftSource(num_tokens=workers * 64,
+                              vocab=workers * 32, num_topics=8,
+                              docs_per_worker=8,
+                              tokens_per_ingest=8 * workers, kind=kind,
+                              seed=seed + 2)
+    return MFDriftSource(num_rows=workers * 16, num_cols=64,
+                         rows_per_ingest=2 * workers, true_rank=4,
+                         kind=kind, seed=seed + 2)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(
         description="serve model state out of the STRADS SSP caches")
@@ -103,12 +129,29 @@ def main(argv=None):
     ap.add_argument("--serve-only", action="store_true",
                     help="train first, then serve the final state "
                          "(no interleaving)")
+    ap.add_argument("--stream", action="store_true",
+                    help="fold synthetic drift deltas into the training "
+                         "data at chunk boundaries (repro.stream)")
+    ap.add_argument("--stream-kind", choices=("replace", "extend"),
+                    default=None,
+                    help="StreamSpec kind (default: replace for lasso, "
+                         "extend otherwise)")
+    ap.add_argument("--ingest-every", type=int, default=None,
+                    help="ingest cadence in rounds (default: one SSP "
+                         "window; aligned up like --rounds)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace", default="",
                     help="write a Chrome trace of the interleaved run")
     ap.add_argument("--out", default="",
                     help="write the JSON artifact (spec/plan embedded)")
     args = ap.parse_args(argv)
+
+    if not args.stream:
+        for flag, name in ((args.stream_kind, "--stream-kind"),
+                           (args.ingest_every, "--ingest-every")):
+            if flag is not None:
+                raise SystemExit(f"{name} needs --stream (it configures "
+                                 f"the streaming ingest)")
 
     from ..core import ExecutionPlan, worker_mesh
     from ..obs import Recorder
@@ -164,18 +207,37 @@ def main(argv=None):
     rec = Recorder()
     rng = jax.random.key(args.seed + 1)
 
+    stream_kw: dict = {}
+    sspec = None
+    if args.stream:
+        from ..stream import StreamSpec
+        kind = args.stream_kind or ("replace" if args.engine == "lasso"
+                                    else "extend")
+        L = math.lcm((plan.staleness + 1) if plan.executor == "ssp"
+                     else 1, _phase_period(args.engine, workers))
+        every = args.ingest_every if args.ingest_every else L
+        aligned = -(-every // L) * L
+        if aligned != every:
+            print(f"[align] ingest-every {every} -> {aligned} "
+                  f"(whole boundary windows of {L})")
+        sspec = StreamSpec.default_for(kind, ingest_every=aligned)
+        stream_kw = dict(stream=sspec,
+                         source=_drift_source(args.engine, workers,
+                                              kind, args.seed))
+
     if args.serve_only:
-        rep0 = eng.execute(state, data, rng, plan)
+        rep0 = eng.execute(state, data, rng, plan, **stream_kw)
         srep = serve_only(eng, rep0.state, spec=spec,
                           requests=[payload(i)
                                     for i in range(args.requests)],
                           t=plan.rounds, recorder=rec)
+        srep.ingest = rep0.stream
     else:
         reqs = [((i * plan.rounds) // max(args.requests, 1), payload(i))
                 for i in range(args.requests)]
         srep = serve_while_training(eng, state, data, rng, plan,
                                     spec=spec, requests=reqs,
-                                    recorder=rec)
+                                    recorder=rec, **stream_kw)
 
     pct = srep.latency_percentiles()
     hist = srep.staleness_hist()
@@ -185,6 +247,10 @@ def main(argv=None):
           f"requests={len(srep.responses)}")
     print(f"serve spec: {spec.to_json()}")
     print(f"latency p50={pct['p50_ms']:.2f}ms p99={pct['p99_ms']:.2f}ms")
+    if srep.ingest is not None:
+        print(f"stream spec: {sspec.to_json()}")
+        print(f"rows ingested={int(srep.ingest['rows_in'])} "
+              f"dropped={int(srep.ingest['rows_dropped'])}")
     print(f"staleness-at-read hist: "
           f"{ {k: hist[k] for k in sorted(hist)} } (max {worst})")
     if args.trace:
@@ -200,6 +266,10 @@ def main(argv=None):
             "max_staleness_read": worst,
             "reads": srep.reads,
         }
+        if srep.ingest is not None:
+            artifact["stream_spec"] = sspec.to_json()
+            artifact["ingest"] = {k: int(v)
+                                  for k, v in srep.ingest.items()}
         with open(args.out, "w") as f:
             json.dump(artifact, f, indent=1)
         print(f"wrote {args.out}")

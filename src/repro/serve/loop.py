@@ -51,6 +51,9 @@ class ServeReport:
     latencies_ms: List[float]
     reads: List[dict]
     spec: ServeSpec
+    #: final stream-cursor payload when training streamed data in
+    #: (``serve_while_training(..., stream=, source=)``); None otherwise
+    ingest: Optional[dict] = None
 
     def latency_percentiles(self) -> dict:
         import numpy as np
@@ -99,14 +102,26 @@ def serve_while_training(engine, state, data, rng, plan: ExecutionPlan,
                          *, spec: Optional[ServeSpec] = None,
                          requests: Sequence[Tuple[int, Any]] = (),
                          collect=None, recorder=None,
-                         chunk_rounds: Optional[int] = None) -> ServeReport:
+                         chunk_rounds: Optional[int] = None,
+                         stream=None, source=None,
+                         stream_state: Optional[dict] = None
+                         ) -> ServeReport:
     """Train ``plan`` to completion while serving ``requests`` between
     chunks.  Returns a :class:`ServeReport` whose ``report.state`` is
     bit-identical to ``engine.execute(state, data, rng, plan).state``.
 
     ``chunk_rounds`` overrides the publish cadence (must be a multiple
     of the executor's step length; default: exactly one step — for SSP,
-    one flush window)."""
+    one flush window).
+
+    ``stream`` (a :class:`~repro.stream.spec.StreamSpec`) + ``source``
+    ingest data deltas at the same boundaries serving publishes at: each
+    boundary ``t`` ingests *before* the chunk covering ``[t, t+chunk)``
+    runs and before the clock-``t`` publish, the exact ordering
+    ``engine.execute(..., stream=)`` uses — so a served streamed run's
+    trained state is bit-identical to an unserved streamed one, and
+    every published view includes all deltas due ≤ its clock.  The final
+    cursor payload lands on the report as :attr:`ServeReport.ingest`."""
     spec = _resolve_spec(spec, plan)
     due = _check_requests(requests)
     step = engine._step_length(plan)
@@ -119,6 +134,24 @@ def serve_while_training(engine, state, data, rng, plan: ExecutionPlan,
         if not 0 <= t_due <= plan.rounds:
             raise ValueError(f"request due round {t_due} outside the "
                              f"plan's 0..{plan.rounds}")
+    if (stream is None) != (source is None):
+        raise ValueError("stream= (a StreamSpec) and source= (a "
+                         "DataSource) come as a pair — got only one")
+    ing = None
+    if stream is not None:
+        from ..stream import Ingestor
+        ing = Ingestor(stream, source)
+        if stream_state is not None:
+            ing.restore(stream_state)
+        ing.bind(engine, data)
+        if stream.ingest_every % chunk:
+            raise ValueError(
+                f"stream.ingest_every={stream.ingest_every} must be a "
+                f"multiple of the serve chunk cadence {chunk} — ingest "
+                f"boundaries land only where the loop syncs")
+    elif stream_state is not None:
+        raise ValueError("stream_state resumes a streamed run; pass "
+                         "the stream=/source= pair with it")
 
     view = ModelView(engine, spec, recorder=recorder)
     frontend = ServeFrontend(engine, view, spec, recorder=recorder)
@@ -128,7 +161,10 @@ def serve_while_training(engine, state, data, rng, plan: ExecutionPlan,
             frontend.submit(due.pop(0)[1])
         frontend.flush(force=force)
 
-    # serve the initial state (clock 0) before any training commits
+    # boundary 0 ingests first, so the clock-0 publish (serving before
+    # any training commits) already includes the deltas due at 0
+    if ing is not None:
+        state, data = ing.step(engine, state, data, 0)
     view.publish(state, 0)
     pump(0, force=False)
 
@@ -149,6 +185,8 @@ def serve_while_training(engine, state, data, rng, plan: ExecutionPlan,
         t = int(carry.t)
         if rep.trace is not None:
             traces.append(rep.trace)
+        if ing is not None and t < plan.rounds:
+            state, data = ing.step(engine, state, data, t)
         view.publish(state, t)
         pump(t, force=(t >= plan.rounds))
 
@@ -156,10 +194,13 @@ def serve_while_training(engine, state, data, rng, plan: ExecutionPlan,
              if traces else None)
     report = ExecutionReport(state=state, trace=trace,
                              telemetry=rep.telemetry if rep is not None
-                             else None, carry=carry, plan=plan)
+                             else None, carry=carry, plan=plan,
+                             stream=ing.payload() if ing is not None
+                             else None)
     return ServeReport(report=report, responses=frontend.responses,
                        latencies_ms=frontend.latencies_ms,
-                       reads=view.reads, spec=spec)
+                       reads=view.reads, spec=spec,
+                       ingest=ing.payload() if ing is not None else None)
 
 
 def serve_only(engine, state, *, spec: Optional[ServeSpec] = None,

@@ -114,6 +114,31 @@ def test_model_flops_kinds():
 
 
 # ---------------------------------------------------------------------------
+# the serving CLI split: launch/serve.py (STRADS bounded-staleness
+# serving) vs launch/serve_lm.py (model-zoo LM decode) parse disjoint
+# flag sets — examples/serve_decode.py broke once when serve grew the
+# STRADS flags, so pin each CLI to its own surface
+# ---------------------------------------------------------------------------
+
+def test_serve_cli_flag_sets_are_disjoint():
+    from repro.launch import serve, serve_lm
+    # the STRADS serving CLI knows nothing about LM decode flags...
+    with pytest.raises(SystemExit):
+        serve.main(["--engine", "lasso", "--arch", "granite-3-2b"])
+    # ...and the LM decode CLI knows nothing about STRADS flags
+    with pytest.raises(SystemExit):
+        serve_lm.main(["--arch", "granite-3-2b", "--engine", "lasso"])
+
+
+def test_serve_cli_stream_flags_require_stream():
+    from repro.launch import serve
+    with pytest.raises(SystemExit, match="--stream"):
+        serve.main(["--engine", "lasso", "--ingest-every", "2"])
+    with pytest.raises(SystemExit, match="--stream"):
+        serve.main(["--engine", "lasso", "--stream-kind", "extend"])
+
+
+# ---------------------------------------------------------------------------
 # sharded end-to-end step on a small forced mesh
 # ---------------------------------------------------------------------------
 
